@@ -1,0 +1,212 @@
+"""Benchmark harness — one function per paper claim + roofline summaries.
+
+The Memento paper's claims (demo paper, no numeric tables) map to:
+  B1  configuration-matrix expansion scales to large experiment sets
+  B2  parallel execution beats sequential for embarrassingly-parallel tasks
+  B3  result caching makes re-runs ~free
+  B4  in-task checkpointing bounds lost work on interruption
+  B5  failure isolation: one broken task does not poison a run
+plus framework-level benchmarks:
+  B6  per-kernel interpret-mode microbenches (us_per_call vs jnp oracle)
+  B7  train-step wall time for a tiny model (CPU, smoke scale)
+  B8  dry-run roofline summary (from the cached sweep, if present)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+
+def _t(fn, n=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
+
+
+def _row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_matrix_expansion() -> None:
+    from repro.core import ConfigMatrix
+
+    for n_axes, width in ((4, 10), (5, 12)):
+        m = ConfigMatrix.from_dict(
+            {"parameters": {f"p{i}": list(range(width)) for i in range(n_axes)}}
+        )
+        total = width ** n_axes
+        us = _t(lambda: m.task_list(), n=2)
+        _row(
+            f"B1_matrix_expand_{total}_tasks", us,
+            f"{total/ (us/1e6):.0f} tasks/s incl hashing",
+        )
+
+
+def bench_parallel_speedup() -> None:
+    from repro.core import ConfigMatrix, Memento, RunnerConfig
+
+    def sleepy(ctx):
+        time.sleep(0.05)
+        return ctx["i"]
+
+    matrix = {"parameters": {"i": list(range(8))}}
+    seq = Memento(sleepy, runner_config=RunnerConfig(max_workers=1, enable_speculation=False))
+    par = Memento(sleepy, runner_config=RunnerConfig(max_workers=8, enable_speculation=False))
+    t_seq = _t(lambda: seq.run(matrix, cache=False), n=2, warmup=0)
+    t_par = _t(lambda: par.run(matrix, cache=False), n=2, warmup=0)
+    _row("B2_sequential_8x50ms", t_seq)
+    _row("B2_parallel_8workers", t_par, f"speedup={t_seq/t_par:.2f}x")
+
+
+def bench_cache_speedup(tmpdir="/tmp/repro_bench_cache") -> None:
+    import shutil
+
+    from repro.core import Memento
+
+    shutil.rmtree(tmpdir, ignore_errors=True)
+
+    def work(ctx):
+        time.sleep(0.05)
+        return ctx["i"] ** 2
+
+    eng = Memento(work, workdir=tmpdir)
+    matrix = {"parameters": {"i": list(range(6))}}
+    t_cold = _t(lambda: eng.run(matrix), n=1, warmup=0)
+    t_warm = _t(lambda: eng.run(matrix), n=3, warmup=0)
+    _row("B3_cold_run_6x50ms", t_cold)
+    _row("B3_cached_rerun", t_warm, f"speedup={t_cold/max(t_warm,1e-9):.1f}x")
+
+
+def bench_checkpoint_overhead(tmpdir="/tmp/repro_bench_ckpt") -> None:
+    import shutil
+
+    import jax.numpy as jnp
+
+    from repro.ckpt.store import CheckpointStore
+
+    shutil.rmtree(tmpdir, ignore_errors=True)
+    state = {"w": jnp.ones((512, 512)), "m": jnp.ones((512, 512)), "step": jnp.ones(())}
+    store = CheckpointStore(tmpdir)
+    us_sync = _t(lambda: store.save(1, state, blocking=True), n=3)
+    def async_save():
+        store.save(2, state, blocking=False)
+    us_async = _t(async_save, n=3)
+    store.wait()
+    _row("B4_ckpt_save_2MB_sync", us_sync)
+    _row("B4_ckpt_save_2MB_async_enqueue", us_async, f"hidden={us_sync/max(us_async,1):.1f}x")
+
+
+def bench_failure_isolation() -> None:
+    from repro.core import Memento, RunnerConfig
+
+    def half_broken(ctx):
+        if ctx["i"] % 2:
+            raise RuntimeError("boom")
+        return ctx["i"]
+
+    eng = Memento(
+        half_broken,
+        runner_config=RunnerConfig(max_workers=4, retries=0, enable_speculation=False),
+    )
+    us = _t(lambda: eng.run({"parameters": {"i": list(range(8))}}, cache=False), n=2, warmup=0)
+    res = eng.run({"parameters": {"i": list(range(8))}}, cache=False)
+    _row("B5_half_failing_run", us, f"ok={len(res.ok)} failed={len(res.failed)} isolated=True")
+
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, D = 1, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, blk_q=128, blk_k=128))
+    rf_ = jax.jit(
+        lambda q, k, v: ref.sdpa_ref(
+            q.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+            k.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+            v.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+        )
+    )
+    us_k = _t(lambda: jax.block_until_ready(fa(q, k, v)))
+    us_r = _t(lambda: jax.block_until_ready(rf_(q, k, v)))
+    _row("B6_flash_attn_256_interp", us_k, f"oracle={us_r:.0f}us (interpret-mode CPU; TPU target)")
+
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 256, 256)))
+    b = jax.random.normal(ks[1], (2, 256, 256))
+    rg = jax.jit(lambda a, b: ops.rglru_op(a, b, blk_t=128, blk_d=256))
+    rr = jax.jit(lambda a, b: ref.rglru_ref(a, b))
+    _row("B6_rglru_256x256_interp", _t(lambda: jax.block_until_ready(rg(a, b))),
+         f"oracle={_t(lambda: jax.block_until_ready(rr(a, b))):.0f}us")
+
+
+def bench_train_step() -> None:
+    import jax
+
+    from repro.configs.base import ShapeConfig
+    from repro.configs.registry import get_config
+    from repro.sharding.rules import ShardingCtx
+    from repro.train.step import make_train_setup, make_train_step
+    from repro.data.pipeline import make_batch_fn
+
+    cfg = get_config("llama3.2-3b").reduced()
+    shape = ShapeConfig("bench", "train", seq_len=64, global_batch=4)
+    setup = make_train_setup(cfg, shape, ShardingCtx.null())
+    step = jax.jit(make_train_step(setup), donate_argnums=(0,))
+    holder = {"state": setup.init_state(jax.random.PRNGKey(0))}
+    batch = make_batch_fn(cfg, shape)(0)
+
+    def once():
+        # thread the (donated) state through iterations
+        s, m = step(holder["state"], batch)
+        holder["state"] = s
+        jax.block_until_ready(m["loss_mean"])
+
+    us = _t(once, n=3)
+    toks = shape.tokens
+    _row("B7_train_step_smoke_llama", us, f"{toks/(us/1e6):.0f} tok/s CPU smoke")
+
+
+def bench_roofline_summary() -> None:
+    try:
+        from repro.launch.report import load_results
+
+        rows, skipped = load_results()
+    except Exception as e:
+        _row("B8_roofline", 0.0, f"no cached sweep ({e})")
+        return
+    sp = [v for v in rows if v.get("mesh") == "16x16" and v.get("roofline")]
+    for v in sorted(sp, key=lambda v: (v["arch"], v["shape"])):
+        r = v["roofline"]
+        _row(
+            f"B8_{v['arch']}_{v['shape']}",
+            r["step_time_lower_bound"] * 1e6,
+            f"bottleneck={r['bottleneck']} roofline_frac={r['roofline_fraction']:.3f}",
+        )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_matrix_expansion()
+    bench_parallel_speedup()
+    bench_cache_speedup()
+    bench_checkpoint_overhead()
+    bench_failure_isolation()
+    bench_kernels()
+    bench_train_step()
+    bench_roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Quickstart — the paper's demo, verbatim shape.
+
+A configuration matrix over (dataset x preprocessing x model), run in
+parallel with caching, checkpointing, and notifications. The "models" are
+tiny JAX ridge/logistic classifiers so the example runs in seconds on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+import repro.core as memento
+
+
+# -- datasets (synthetic stand-ins for load_digits / load_wine / ...) --------
+def make_blobs(seed, n=256, d=16, classes=3):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    centers = jax.random.normal(k1, (classes, d)) * 3
+    y = jax.random.randint(k2, (n,), 0, classes)
+    x = centers[y] + jax.random.normal(k2, (n, d))
+    return x, y
+
+
+def dataset_a():
+    return make_blobs(0)
+
+
+def dataset_b():
+    return make_blobs(1, d=32, classes=4)
+
+
+# -- preprocessing ------------------------------------------------------------
+def identity(x):
+    return x
+
+
+def standardize(x):
+    return (x - x.mean(0)) / (x.std(0) + 1e-6)
+
+
+# -- models -------------------------------------------------------------------
+def logistic_regression(x, y, steps=200, lr=0.5):
+    classes = int(y.max()) + 1
+    w = jnp.zeros((x.shape[1], classes))
+
+    def loss(w):
+        logits = x @ w
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y])
+
+    g = jax.jit(jax.grad(loss))
+    for _ in range(steps):
+        w = w - lr * g(w)
+    return float((jnp.argmax(x @ w, 1) == y).mean())
+
+
+def nearest_centroid(x, y, **_):
+    classes = int(y.max()) + 1
+    cents = jnp.stack([x[y == c].mean(0) for c in range(classes)])
+    pred = jnp.argmin(((x[:, None] - cents[None]) ** 2).sum(-1), 1)
+    return float((pred == y).mean())
+
+
+# -- the experiment function ---------------------------------------------------
+def exp_func(context: memento.Context):
+    # Paper workflow: restore a checkpoint if this task was interrupted.
+    if context.checkpoint_exists():
+        return context.restore()["result"]
+    x, y = context["dataset"]()
+    x = context["preprocessing"](x)
+    acc = context["model"](x, y, steps=context.settings["steps"])
+    result = {"accuracy": acc}
+    context.checkpoint({"result": result})
+    return result
+
+
+# The configuration matrix conveniently specifies the experiments to be run.
+config_matrix = {
+    "parameters": {
+        "dataset": [dataset_a, dataset_b],
+        "preprocessing": [identity, standardize],
+        "model": [logistic_regression, nearest_centroid],
+    },
+    "settings": {"steps": 200},
+    "exclude": [
+        # skip the known-uninteresting combination, as in the paper
+        {"dataset": dataset_b, "model": nearest_centroid, "preprocessing": identity},
+    ],
+}
+
+if __name__ == "__main__":
+    notif_provider = memento.ConsoleNotificationProvider()
+    results = memento.Memento(exp_func, notif_provider, workdir=".memento-quickstart").run(
+        config_matrix
+    )
+    print()
+    for r in results:
+        ds = r.spec.params["dataset"].__name__
+        pp = r.spec.params["preprocessing"].__name__
+        mdl = r.spec.params["model"].__name__
+        print(f"{ds:10s} {pp:12s} {mdl:20s} -> {r.value['accuracy']:.3f} [{r.status}]")
+    print("\nRe-run this script: every task now comes from the cache.")

@@ -1,0 +1,24 @@
+"""The assignment's 40-cell dry-run sweep AS a Memento experiment — the
+paper's technique orchestrating this repo's own evaluation.
+
+    PYTHONPATH=src python examples/roofline_sweep.py --arch qwen3-8b
+    PYTHONPATH=src python examples/roofline_sweep.py            # everything
+
+Results cache under results/dryrun; interrupt and re-run freely. Render the
+report with:  PYTHONPATH=src python -m repro.launch.report
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--both", action="store_true", help="single-pod AND 2-pod meshes")
+    args = ap.parse_args()
+    cmd = [sys.executable, "-m", "repro.launch.dryrun"]
+    if args.arch:
+        cmd += ["--arch", args.arch, "--shape", "train_4k"]
+    else:
+        cmd += ["--all"] + (["--both"] if args.both else [])
+    raise SystemExit(subprocess.call(cmd))

@@ -1,0 +1,69 @@
+"""End-to-end driver: Memento orchestrating a learning-rate sweep of real
+(reduced-config) LM training runs, with checkpoint/resume fault tolerance.
+
+Each task trains a small llama-style model for a few hundred steps on the
+deterministic synthetic pipeline; kill the process at any time and re-run —
+finished cells come from cache, the interrupted cell resumes from its last
+sharded checkpoint.
+
+    PYTHONPATH=src python examples/train_sweep.py [--steps 200]
+"""
+import argparse
+
+import repro.core as memento
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig
+from repro.sharding.rules import ShardingCtx
+from repro.train.loop import TrainRunConfig, train_run
+from repro.train.optimizer import AdamWConfig, Schedule
+
+
+def train_task(ctx: memento.Context):
+    cfg = get_config(ctx["arch"]).reduced()
+    shape = ShapeConfig("sweep", "train", seq_len=64, global_batch=8)
+    run = TrainRunConfig(
+        steps=ctx.settings["steps"],
+        ckpt_every=50,
+        log_every=20,
+        ckpt_dir=f"{ctx.settings['workdir']}/ckpt-{ctx.key[:10]}",
+        opt=AdamWConfig(
+            schedule=Schedule(base_lr=ctx["lr"], warmup_steps=20, total_steps=ctx.settings["steps"]),
+            int8_moments=ctx["int8_opt"],
+        ),
+        data=DataConfig(seed=0, vocab_size=cfg.vocab_size, noise=0.05),
+    )
+    res = train_run(cfg, shape, ShardingCtx.null(), run, ctx=ctx)
+    return {"lr": ctx["lr"], "int8": ctx["int8_opt"],
+            "loss_first": res["loss_first"], "loss_last": res["loss_last"]}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--workdir", default=".memento-train-sweep")
+    args = ap.parse_args()
+
+    matrix = {
+        "parameters": {
+            "arch": ["llama3.2-3b"],
+            "lr": [1e-3, 3e-3, 1e-2],
+            "int8_opt": [False, True],
+        },
+        "settings": {"steps": args.steps, "workdir": args.workdir},
+        "exclude": [{"lr": 1e-2, "int8_opt": True}],  # known-divergent combo
+    }
+    eng = memento.Memento(
+        train_task,
+        memento.ConsoleNotificationProvider(),
+        workdir=args.workdir,
+        runner_config=memento.RunnerConfig(max_workers=1, retries=1, enable_speculation=False),
+    )
+    results = eng.run(matrix)
+    print("\nlr sweep results (loss first -> last):")
+    for r in sorted(results.ok, key=lambda r: (r.value["int8"], r.value["lr"])):
+        v = r.value
+        print(f"  lr={v['lr']:<8g} int8={str(v['int8']):5s} "
+              f"{v['loss_first']:.3f} -> {v['loss_last']:.3f}  [{r.status}]")
+    if results.failed:
+        print(f"{len(results.failed)} failed tasks (fix + re-run resumes from cache).")

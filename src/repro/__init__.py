@@ -1,0 +1,2 @@
+"""repro — Memento-orchestrated multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,211 @@
+"""Model / shape / run configuration dataclasses.
+
+Every assigned architecture is a ``ModelConfig`` instance in its own module
+under ``repro/configs``; shapes are the four assignment-wide ``ShapeConfig``s.
+Configs are hashable by Memento (dataclasses canonicalise), so a (arch x
+shape x mesh x profile) cell is a well-defined task identity.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+# Block kinds understood by the model assembler (repro/models/blocks.py).
+BLOCK_KINDS = (
+    "attn_mlp",  # global attention + dense FFN
+    "attn_moe",  # global attention + mixture-of-experts FFN
+    "local_attn",  # sliding-window attention + dense FFN
+    "rglru",  # RG-LRU recurrent block + dense FFN (Griffin / RecurrentGemma)
+    "mlstm",  # xLSTM matrix-memory block (self-contained, no extra FFN)
+    "slstm",  # xLSTM scalar-memory block (self-contained GLU FFN inside)
+    "cross_attn_mlp",  # decoder block with self-attn + cross-attn + FFN (enc-dec)
+)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 2.0
+    aux_coef: float = 1e-3
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention dims."""
+
+    q_lora: int = 1536
+    kv_lora: int = 512
+    rope_dim: int = 64
+    nope_dim: int = 128
+    v_dim: int = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    block_pattern: tuple[str, ...] = ("attn_mlp",)
+    first_blocks: tuple[str, ...] = ()  # unscanned prefix blocks (e.g. DSv2 dense layer 0)
+    attn_kind: str = "gqa"  # gqa | mla
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"  # silu | gelu
+    tie_embeddings: bool = False
+    window_size: int = 0  # sliding window for local_attn blocks
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500  # post-conv-stub frame count
+    # vlm / prefix-lm (paligemma)
+    prefix_len: int = 0
+    prefix_lm: bool = False
+    # recurrent dims
+    d_rnn: int = 0
+    conv_width: int = 4
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 128
+    # distribution defaults (overridable per run)
+    sharding_profile: str = "dp_tp"
+    train_profile: str = ""  # optional override for train/prefill shapes
+    decode_profile: str = ""  # optional override for decode shapes
+    train_microbatches: int = 8
+    remat: str = "full"  # full | none
+    attn_backend: str = "xla"  # xla (chunked-softmax) | pallas (flash kernel)
+    attn_q_chunk: int = 512  # query-block size for XLA chunked attention
+    xent_chunk: int = 1024  # seq-block size for chunked cross-entropy
+    # provenance
+    source: str = ""
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return int(math.ceil(self.vocab_size / m) * m)
+
+    @property
+    def n_pattern_groups(self) -> int:
+        body = self.n_layers - len(self.first_blocks)
+        if body % len(self.block_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: {body} body layers not divisible by pattern "
+                f"{self.block_pattern}"
+            )
+        return body // len(self.block_pattern)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True when decode state does not grow linearly with an unbounded
+        full-attention KV cache (SSM / hybrid with windowed attention)."""
+        kinds = set(self.block_pattern) | set(self.first_blocks)
+        return not (kinds & {"attn_mlp", "attn_moe", "cross_attn_mlp"})
+
+    def validate(self) -> "ModelConfig":
+        for k in self.block_pattern + self.first_blocks:
+            if k not in BLOCK_KINDS:
+                raise ValueError(f"unknown block kind {k!r}")
+        _ = self.n_pattern_groups
+        if any(k == "attn_moe" for k in self.block_pattern) and self.moe is None:
+            raise ValueError(f"{self.name}: MoE blocks but no MoEConfig")
+        if self.attn_kind == "mla" and self.mla is None:
+            raise ValueError(f"{self.name}: MLA attention but no MLAConfig")
+        if "local_attn" in self.block_pattern and self.window_size <= 0:
+            raise ValueError(f"{self.name}: local_attn blocks need window_size")
+        return self
+
+    # -- smoke-scale copy ----------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        pat_len = len(self.block_pattern)
+        n_first = len(self.first_blocks)
+        moe = (
+            replace(self.moe, n_experts=min(self.moe.n_experts, 4), top_k=min(self.moe.top_k, 2), d_ff_expert=64)
+            if self.moe
+            else None
+        )
+        mla = (
+            MLAConfig(q_lora=32, kv_lora=16, rope_dim=8, nope_dim=16, v_dim=16)
+            if self.mla
+            else None
+        )
+        return replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_first + 2 * pat_len,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            d_rnn=64 if self.d_rnn else 0,
+            vocab_size=512,
+            vocab_pad_multiple=8,
+            window_size=min(self.window_size, 32) if self.window_size else 0,
+            enc_seq=16 if self.enc_dec else self.enc_seq,
+            prefix_len=8 if self.prefix_len else 0,
+            moe=moe,
+            mla=mla,
+            train_microbatches=1,
+            attn_q_chunk=16,
+            xent_chunk=32,
+            max_activated_params=0,
+            # CPU smoke tests execute for real; this container's CPU backend
+            # cannot dispatch bf16xbf16->f32 batched dots, so smoke configs
+            # compute in f32. Full configs stay bf16 (TPU target; dry-run
+            # only lowers/compiles, never dispatches).
+            compute_dtype="float32",
+        )
+
+    # Rough parameter count for roofline MODEL_FLOPS = 6 N D.
+    max_activated_params: int = 0  # optional explicit override (MoE active params)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524288, 1)
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Assignment rules: which (arch x shape) cells are lowered."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k dense KV decode skipped per assignment"
+    return True, ""

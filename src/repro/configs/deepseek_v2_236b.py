@@ -1,0 +1,32 @@
+"""deepseek-v2-236b — 60L d_model=5120 128H MLA (kv_lora=512) vocab=102400,
+MoE 2 shared + 160 routed top-6, expert d_ff 1536; layer 0 dense d_ff 12288.
+
+[arXiv:2405.04434; hf] MLA: q_lora 1536, kv_lora 512 + shared 64-dim rope
+key; decode caches only the 576-dim compressed latent per token per layer.
+Expert parallelism over the model axis (160/16 = 10 experts per rank).
+"""
+from .base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=12288,  # dense layer-0 FFN width
+    vocab_size=102400,
+    attn_kind="mla",
+    mla=MLAConfig(q_lora=1536, kv_lora=512, rope_dim=64, nope_dim=128, v_dim=128),
+    first_blocks=("attn_mlp",),
+    block_pattern=("attn_moe",),
+    moe=MoEConfig(n_experts=160, top_k=6, n_shared=2, d_ff_expert=1536,
+                  capacity_factor=2.0, aux_coef=1e-3),
+    rope_theta=10000.0,
+    act="silu",
+    sharding_profile="fsdp_tp",
+    decode_profile="decode_big",
+    train_microbatches=8,
+    source="arXiv:2405.04434 / hf:deepseek-ai/DeepSeek-V2",
+)

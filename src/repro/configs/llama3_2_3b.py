@@ -1,0 +1,23 @@
+"""llama3.2-3b — 28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+
+[hf:meta-llama/Llama-3.2-1B family; unverified] Small Llama-3: RoPE
+theta 500k, SwiGLU, RMSNorm, untied embeddings at 3B.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    act="silu",
+    sharding_profile="dp_tp",
+    train_microbatches=8,
+    source="hf:meta-llama/Llama-3.2-3B (assignment)",
+)

@@ -1,0 +1,29 @@
+"""llama4-scout-17b-a16e — 48L d_model=5120 40H (GQA kv=8) d_ff=8192,
+MoE 16 experts top-1 + 1 shared expert, vocab 202048.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] Every layer MoE with a
+shared expert riding the same reduction (early-fusion multimodal parts are
+out of assignment scope — text backbone only).
+"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    block_pattern=("attn_moe",),
+    moe=MoEConfig(n_experts=16, top_k=1, n_shared=1, d_ff_expert=8192,
+                  capacity_factor=2.0, aux_coef=1e-3),
+    rope_theta=500000.0,
+    act="silu",
+    sharding_profile="fsdp_tp",
+    decode_profile="decode_big",
+    train_microbatches=8,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

@@ -1,0 +1,27 @@
+"""mistral-large-123b — 88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768.
+
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified] The memory stress
+test of the assignment: 123B dense params. Uses the fsdp_wide profile for
+train/prefill (batch sharded over (data, model), weights ZeRO-3) so
+per-chip activations and optimizer state fit a 16 GB v5e.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=32768,
+    rope_theta=1000000.0,
+    act="silu",
+    sharding_profile="fsdp_wide",
+    train_microbatches=1,  # batch already 256-way sharded -> B_local == 1
+    train_profile="fsdp_wide",
+    decode_profile="decode_big",
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)

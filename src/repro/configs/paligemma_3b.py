@@ -1,0 +1,27 @@
+"""paligemma-3b — 18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=257216.
+
+[arXiv:2407.07726; hf] SigLIP vision frontend is a STUB per the
+assignment: input_specs() feeds 256 patch embeddings (B, 256, 2048)
+already projected. Gemma-2b-style backbone: MQA, gated-GELU FFN,
+prefix-LM masking over the image+prefix tokens.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    prefix_len=256,
+    prefix_lm=True,
+    act="gelu",
+    tie_embeddings=True,  # gemma ties embeddings
+    sharding_profile="dp_tp",
+    train_microbatches=8,
+    source="arXiv:2407.07726 / hf:google/paligemma-3b",
+)

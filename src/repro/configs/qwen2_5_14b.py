@@ -1,0 +1,24 @@
+"""qwen2.5-14b — 48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064.
+
+[hf:Qwen/Qwen2.5 family; hf] Distinctives: QKV bias, GQA kv=8.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=13824,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    act="silu",
+    sharding_profile="dp_tp",  # paper-faithful baseline profile
+    train_profile="fsdp_pure",  # SSPerf hillclimb: 110.5s -> 5.0s t_coll
+    train_microbatches=1,
+    source="hf:Qwen/Qwen2.5-14B",
+)

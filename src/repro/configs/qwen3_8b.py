@@ -1,0 +1,25 @@
+"""qwen3-8b — 36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936.
+
+[hf:Qwen/Qwen3-8B; hf] Distinctives: per-head q/k RMSNorm (qk_norm),
+no QKV bias (Qwen3 dropped it), RoPE theta 1M.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1000000.0,
+    act="silu",
+    sharding_profile="dp_tp",  # paper-faithful baseline profile
+    train_profile="fsdp_pure",  # SSPerf hillclimb: 110.5s -> 5.0s t_coll
+    train_microbatches=1,
+    source="hf:Qwen/Qwen3-8B",
+)

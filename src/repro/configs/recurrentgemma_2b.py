@@ -1,0 +1,31 @@
+"""recurrentgemma-2b — 26 blocks d_model=2560, RG-LRU + local attention 1:2,
+MQA (10H, kv=1, head_dim 256), d_ff=7680, vocab 256000, window 2048.
+
+[arXiv:2402.19427; hf] Griffin pattern (rec, rec, attn) repeated; the two
+leading blocks are unscanned so 26 = 2 + 8x3. O(1) recurrent state + a
+2048-slot ring-buffer KV cache make the 500k-token decode cell runnable.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    d_rnn=2560,
+    conv_width=4,
+    window_size=2048,
+    first_blocks=("rglru", "rglru"),
+    block_pattern=("rglru", "rglru", "local_attn"),
+    act="gelu",
+    tie_embeddings=True,
+    sharding_profile="dp_tp",
+    decode_profile="decode_default",
+    train_microbatches=8,
+    source="arXiv:2402.19427 / hf:google/recurrentgemma-2b",
+)

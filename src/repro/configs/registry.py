@@ -1,0 +1,31 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+from .base import ModelConfig
+
+_ARCH_MODULES = {
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_ARCH_MODULES.keys())
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {list_archs()}")
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.CONFIG.validate()

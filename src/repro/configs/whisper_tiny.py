@@ -1,0 +1,29 @@
+"""whisper-tiny — 4L enc + 4L dec, d_model=384 6H d_ff=1536 vocab=51865.
+
+[arXiv:2212.04356; unverified] Encoder-decoder. The conv frontend is a
+STUB per the assignment: input_specs() feeds precomputed frame embeddings
+(B, 1500, 384). Vocab padded 51865 -> 51968 for clean sharding. RoPE is
+used in place of Whisper's sinusoidal/learned positions (TPU adaptation,
+noted in DESIGN.md).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,  # decoder layers
+    n_enc_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    enc_dec=True,
+    enc_seq=1500,
+    block_pattern=("cross_attn_mlp",),
+    act="gelu",
+    sharding_profile="dp_wide",
+    train_microbatches=4,
+    source="arXiv:2212.04356 (whisper-tiny)",
+)

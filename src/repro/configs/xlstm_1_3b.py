@@ -1,0 +1,29 @@
+"""xlstm-1.3b — 48 blocks d_model=2048 4H, sLSTM + mLSTM mix, d_ff=0,
+vocab 50304.
+
+[arXiv:2405.04517; unverified] xLSTM[7:1]: each scanned group is 7 mLSTM
+blocks + 1 sLSTM block (48 = 6 groups x 8). d_ff=0 — the blocks' own
+up/down projections (proj factor 2 mLSTM, 4/3 GLU in sLSTM) carry the FFN
+capacity. mLSTM matrix memory: 4 heads x (512 x 512) per block.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    conv_width=4,
+    mlstm_proj_factor=2.0,
+    slstm_proj_factor=4.0 / 3.0,
+    act="gelu",
+    sharding_profile="dp_wide",
+    train_microbatches=8,
+    source="arXiv:2405.04517 (xLSTM-1.3B)",
+)

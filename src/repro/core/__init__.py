@@ -1,0 +1,38 @@
+"""repro.core — the Memento experiment engine (the paper's contribution).
+
+Public API mirrors the paper:
+
+    import repro.core as memento
+    results = memento.Memento(exp_func, memento.ConsoleNotificationProvider()) \
+        .run(config_matrix)
+"""
+from .cache import BaseCache, CacheEntry, FsCache, MemoryCache, NullCache
+from .exceptions import (
+    CacheCorruptionError,
+    CacheError,
+    CheckpointError,
+    ConfigMatrixError,
+    HashingError,
+    LeaseExpiredError,
+    MementoError,
+    QueueError,
+    RetriesExhaustedError,
+    TaskFailedError,
+    TaskTimeoutError,
+)
+from .filequeue import FileQueue, QueueStats, drain
+from .hashing import canonicalize, qualified_name, stable_hash, task_key
+from .matrix import ConfigMatrix, TaskSpec
+from .memento import Memento
+from .notifications import (
+    CallbackNotificationProvider,
+    ConsoleNotificationProvider,
+    Event,
+    FileNotificationProvider,
+    MultiProvider,
+    NotificationProvider,
+    RecordingProvider,
+    WebhookNotificationProvider,
+)
+from .runner import Runner, RunnerConfig
+from .task import Context, ResultSet, TaskCheckpointStore, TaskResult

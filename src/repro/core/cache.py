@@ -1,0 +1,186 @@
+"""Result caches keyed by task hash.
+
+``FsCache`` is the production cache: one directory per task key holding
+``result.pkl`` (the payload) and ``manifest.json`` (status, params repr,
+timings, payload digest). Writes are atomic (tmp file + rename) so a crash
+mid-write never produces a half-entry; reads verify the payload digest and
+quarantine corrupt entries instead of returning garbage.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+import shutil
+import tempfile
+import threading
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Iterator
+
+from .exceptions import CacheCorruptionError, CacheError
+
+MANIFEST = "manifest.json"
+PAYLOAD = "result.pkl"
+QUARANTINE = "_quarantine"
+
+
+@dataclass
+class CacheEntry:
+    key: str
+    value: Any
+    manifest: dict[str, Any]
+
+
+class BaseCache:
+    def get(self, key: str) -> CacheEntry | None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def put(self, key: str, value: Any, manifest: dict[str, Any] | None = None) -> None:
+        raise NotImplementedError  # pragma: no cover - interface
+
+    def __contains__(self, key: str) -> bool:
+        return self.get(key) is not None
+
+    def invalidate(self, key: str) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class NullCache(BaseCache):
+    """Caching disabled (paper: force re-run)."""
+
+    def get(self, key: str) -> CacheEntry | None:
+        return None
+
+    def put(self, key: str, value: Any, manifest: dict[str, Any] | None = None) -> None:
+        return None
+
+    def invalidate(self, key: str) -> None:
+        return None
+
+
+class MemoryCache(BaseCache):
+    """Process-local cache; used by tests and as a read-through layer."""
+
+    def __init__(self) -> None:
+        self._store: dict[str, CacheEntry] = {}
+        self._lock = threading.Lock()
+
+    def get(self, key: str) -> CacheEntry | None:
+        with self._lock:
+            return self._store.get(key)
+
+    def put(self, key: str, value: Any, manifest: dict[str, Any] | None = None) -> None:
+        with self._lock:
+            self._store[key] = CacheEntry(key, value, dict(manifest or {}))
+
+    def invalidate(self, key: str) -> None:
+        with self._lock:
+            self._store.pop(key, None)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+
+class FsCache(BaseCache):
+    """Filesystem cache safe for concurrent writers on a shared FS."""
+
+    def __init__(self, root: str | os.PathLike[str]):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        (self.root / QUARANTINE).mkdir(exist_ok=True)
+        self._lock = threading.Lock()
+
+    def _dir(self, key: str) -> Path:
+        if not key or "/" in key or key.startswith("."):
+            raise CacheError(f"invalid cache key {key!r}")
+        return self.root / key
+
+    # -- write ------------------------------------------------------------
+    def put(self, key: str, value: Any, manifest: dict[str, Any] | None = None) -> None:
+        entry_dir = self._dir(key)
+        try:
+            payload = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception as e:
+            raise CacheError(f"result for task {key[:12]} is not picklable: {e}") from e
+        digest = hashlib.sha256(payload).hexdigest()
+        man = dict(manifest or {})
+        man.update(
+            {
+                "key": key,
+                "payload_sha256": digest,
+                "payload_bytes": len(payload),
+                "written_unix": time.time(),
+                "writer_pid": os.getpid(),
+            }
+        )
+        tmp = Path(tempfile.mkdtemp(prefix=f".wip-{key[:12]}-", dir=self.root))
+        try:
+            (tmp / PAYLOAD).write_bytes(payload)
+            (tmp / MANIFEST).write_text(json.dumps(man, indent=2, default=str))
+            with self._lock:
+                if entry_dir.exists():
+                    shutil.rmtree(entry_dir, ignore_errors=True)
+                os.replace(tmp, entry_dir)
+        except Exception as e:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise CacheError(f"failed to write cache entry {key[:12]}: {e}") from e
+
+    # -- read -------------------------------------------------------------
+    def get(self, key: str) -> CacheEntry | None:
+        entry_dir = self._dir(key)
+        man_path = entry_dir / MANIFEST
+        pay_path = entry_dir / PAYLOAD
+        if not man_path.exists() or not pay_path.exists():
+            return None
+        try:
+            manifest = json.loads(man_path.read_text())
+            payload = pay_path.read_bytes()
+            digest = hashlib.sha256(payload).hexdigest()
+            if digest != manifest.get("payload_sha256"):
+                raise CacheCorruptionError(
+                    f"cache entry {key[:12]} payload digest mismatch"
+                )
+            value = pickle.loads(payload)
+        except CacheCorruptionError:
+            self._quarantine(key)
+            return None
+        except Exception:
+            self._quarantine(key)
+            return None
+        return CacheEntry(key=key, value=value, manifest=manifest)
+
+    def _quarantine(self, key: str) -> None:
+        entry_dir = self._dir(key)
+        dest = self.root / QUARANTINE / f"{key}-{int(time.time()*1e6)}"
+        try:
+            with self._lock:
+                if entry_dir.exists():
+                    os.replace(entry_dir, dest)
+        except OSError:
+            shutil.rmtree(entry_dir, ignore_errors=True)
+
+    def invalidate(self, key: str) -> None:
+        with self._lock:
+            shutil.rmtree(self._dir(key), ignore_errors=True)
+
+    # -- introspection ------------------------------------------------------
+    def keys(self) -> Iterator[str]:
+        for child in self.root.iterdir():
+            if child.is_dir() and not child.name.startswith((".", "_")):
+                yield child.name
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.keys())
+
+    def stats(self) -> dict[str, Any]:
+        n, total = 0, 0
+        for key in self.keys():
+            p = self._dir(key) / PAYLOAD
+            if p.exists():
+                n += 1
+                total += p.stat().st_size
+        return {"entries": n, "payload_bytes": total, "root": str(self.root)}

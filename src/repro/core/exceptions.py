@@ -1,0 +1,60 @@
+"""Exception taxonomy for the Memento engine.
+
+Every failure mode the runner distinguishes gets its own type so retry /
+quarantine / notification policies can dispatch on it.
+"""
+from __future__ import annotations
+
+
+class MementoError(Exception):
+    """Base class for all Memento engine errors."""
+
+
+class ConfigMatrixError(MementoError):
+    """The configuration matrix is malformed (schema, empty axis, bad exclude)."""
+
+
+class HashingError(MementoError):
+    """A parameter value cannot be canonicalised into a stable hash."""
+
+
+class CacheError(MementoError):
+    """The result cache is unreadable / unwritable."""
+
+
+class CacheCorruptionError(CacheError):
+    """A cache entry exists but fails integrity checks; it will be quarantined."""
+
+
+class TaskFailedError(MementoError):
+    """A task raised; carries the serialized traceback from the worker."""
+
+    def __init__(self, key: str, message: str, traceback_str: str = ""):
+        super().__init__(f"task {key} failed: {message}")
+        self.key = key
+        self.message = message
+        self.traceback_str = traceback_str
+
+
+class TaskTimeoutError(TaskFailedError):
+    """A task exceeded its hard timeout and was abandoned."""
+
+    def __init__(self, key: str, timeout_s: float):
+        super().__init__(key, f"exceeded hard timeout of {timeout_s:.1f}s")
+        self.timeout_s = timeout_s
+
+
+class RetriesExhaustedError(TaskFailedError):
+    """A task failed more times than the retry budget allows."""
+
+
+class CheckpointError(MementoError):
+    """Task-level checkpoint save/restore failed."""
+
+
+class QueueError(MementoError):
+    """The distributed file-queue protocol hit an unrecoverable state."""
+
+
+class LeaseExpiredError(QueueError):
+    """A worker's claim lease expired and the task was reclaimed elsewhere."""

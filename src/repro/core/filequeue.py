@@ -1,0 +1,248 @@
+"""Multi-host work distribution over a shared filesystem.
+
+At 1000+ node scale the orchestrator itself must be distributed: one launcher
+host per pod, all draining the same configuration matrix. We use the classic
+shared-FS claim protocol (no network service to stand up, no single point of
+failure):
+
+  <queue>/tasks/<key>.json          task record (params digest, index)
+  <queue>/claims/<key>.claim        atomically created with O_CREAT|O_EXCL;
+                                    contains owner + lease expiry; renewed by
+                                    heartbeats; an expired lease may be broken
+                                    by any host (crash recovery)
+  <queue>/done/<key>.json           completion record (results live in FsCache)
+
+Atomic create-exclusive is the mutex; lease renewal is the liveness signal;
+quorum is never needed because every task is idempotent (pure function +
+atomic cache writes + versioned checkpoints), so the worst case of a broken
+lease race is duplicated work, never corrupted state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import time
+import uuid
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable, Iterable, Sequence
+
+from .exceptions import QueueError
+from .matrix import TaskSpec
+
+TASKS = "tasks"
+CLAIMS = "claims"
+DONE = "done"
+
+
+@dataclass
+class QueueStats:
+    total: int
+    claimed: int
+    done: int
+
+    @property
+    def available(self) -> int:
+        return self.total - self.claimed - self.done
+
+
+class FileQueue:
+    """A shared-filesystem task queue with leases."""
+
+    def __init__(
+        self,
+        root: str | os.PathLike[str],
+        lease_s: float = 120.0,
+        owner: str | None = None,
+    ):
+        self.root = Path(root)
+        self.lease_s = float(lease_s)
+        self.owner = owner or f"{socket.gethostname()}-{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        for sub in (TASKS, CLAIMS, DONE):
+            (self.root / sub).mkdir(parents=True, exist_ok=True)
+
+    # -- population ---------------------------------------------------------
+    def publish(self, specs: Sequence[TaskSpec]) -> int:
+        """Idempotently register tasks; returns how many were newly added."""
+        added = 0
+        for spec in specs:
+            path = self.root / TASKS / f"{spec.key}.json"
+            if path.exists():
+                continue
+            tmp = path.with_name(f".{spec.key}.{self.owner}.tmp")
+            tmp.write_text(
+                json.dumps(
+                    {
+                        "key": spec.key,
+                        "index": spec.index,
+                        "published_by": self.owner,
+                        "published_unix": time.time(),
+                    }
+                )
+            )
+            try:
+                os.replace(tmp, path)
+                added += 1
+            except OSError as e:  # pragma: no cover - FS race
+                tmp.unlink(missing_ok=True)
+                if not path.exists():
+                    raise QueueError(f"failed to publish {spec.key[:12]}: {e}") from e
+        return added
+
+    # -- claims ---------------------------------------------------------------
+    def _claim_path(self, key: str) -> Path:
+        return self.root / CLAIMS / f"{key}.claim"
+
+    def _read_claim(self, key: str) -> dict[str, Any] | None:
+        try:
+            return json.loads(self._claim_path(key).read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
+
+    def _write_claim_body(self, fd: int) -> None:
+        body = json.dumps(
+            {"owner": self.owner, "expires_unix": time.time() + self.lease_s}
+        )
+        os.write(fd, body.encode())
+
+    def try_claim(self, key: str) -> bool:
+        """Claim ``key``; True on success. Breaks expired leases."""
+        path = self._claim_path(key)
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
+        except FileExistsError:
+            claim = self._read_claim(key)
+            if claim is not None and claim.get("expires_unix", 0) > time.time():
+                return False  # live claim held elsewhere
+            # Expired or unreadable: break the lease, then race for the new one.
+            try:
+                path.unlink(missing_ok=True)
+            except OSError:
+                return False
+            try:
+                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
+            except FileExistsError:
+                return False  # someone else won the re-claim race
+        try:
+            self._write_claim_body(fd)
+        finally:
+            os.close(fd)
+        return True
+
+    def renew(self, key: str) -> None:
+        """Heartbeat: extend the lease. Raises if we no longer own it."""
+        claim = self._read_claim(key)
+        if claim is None or claim.get("owner") != self.owner:
+            raise QueueError(
+                f"lost lease on {key[:12]} (now owned by "
+                f"{claim.get('owner') if claim else 'nobody'})"
+            )
+        tmp = self._claim_path(key).with_suffix(".renew")
+        tmp.write_text(
+            json.dumps({"owner": self.owner, "expires_unix": time.time() + self.lease_s})
+        )
+        os.replace(tmp, self._claim_path(key))
+
+    def release(self, key: str) -> None:
+        claim = self._read_claim(key)
+        if claim is not None and claim.get("owner") == self.owner:
+            self._claim_path(key).unlink(missing_ok=True)
+
+    # -- completion -----------------------------------------------------------
+    def mark_done(self, key: str, status: str, meta: dict[str, Any] | None = None) -> None:
+        path = self.root / DONE / f"{key}.json"
+        tmp = path.with_name(f".{key}.{self.owner}.tmp")
+        tmp.write_text(
+            json.dumps(
+                {
+                    "key": key,
+                    "status": status,
+                    "owner": self.owner,
+                    "finished_unix": time.time(),
+                    **(meta or {}),
+                },
+                default=str,
+            )
+        )
+        os.replace(tmp, path)
+        self.release(key)
+
+    def is_done(self, key: str) -> bool:
+        return (self.root / DONE / f"{key}.json").exists()
+
+    # -- iteration --------------------------------------------------------------
+    def pending_keys(self) -> list[str]:
+        done = {p.stem for p in (self.root / DONE).glob("*.json")}
+        keys = []
+        for p in sorted((self.root / TASKS).glob("*.json")):
+            if p.stem not in done:
+                keys.append(p.stem)
+        return keys
+
+    def stats(self) -> QueueStats:
+        total = sum(1 for _ in (self.root / TASKS).glob("*.json"))
+        done = sum(1 for _ in (self.root / DONE).glob("*.json"))
+        now = time.time()
+        claimed = 0
+        for p in (self.root / CLAIMS).glob("*.claim"):
+            try:
+                claim = json.loads(p.read_text())
+                if claim.get("expires_unix", 0) > now:
+                    claimed += 1
+            except (OSError, json.JSONDecodeError):
+                continue
+        return QueueStats(total=total, claimed=claimed, done=done)
+
+
+def drain(
+    queue: FileQueue,
+    specs_by_key: dict[str, TaskSpec],
+    execute: Callable[[TaskSpec, Callable[[], None]], Any],
+    on_result: Callable[[str, str, Any], None] | None = None,
+    idle_rounds: int = 3,
+    idle_sleep_s: float = 0.2,
+) -> dict[str, str]:
+    """Worker loop: claim -> execute (with lease heartbeat) -> mark done.
+
+    Returns {key: status} for the tasks *this* worker completed. Multiple
+    hosts call this concurrently on the same queue directory; termination is
+    detected by observing ``idle_rounds`` consecutive scans with no claimable
+    work and no live foreign claims outstanding.
+    """
+    completed: dict[str, str] = {}
+    idle = 0
+    while idle < idle_rounds:
+        progressed = False
+        for key in queue.pending_keys():
+            if queue.is_done(key):
+                continue
+            spec = specs_by_key.get(key)
+            if spec is None:
+                continue  # published by a matrix version we don't have
+            if not queue.try_claim(key):
+                continue
+            progressed = True
+
+            def beat(k: str = key) -> None:
+                queue.renew(k)
+
+            try:
+                value = execute(spec, beat)
+                queue.mark_done(key, "ok")
+                completed[key] = "ok"
+                if on_result is not None:
+                    on_result(key, "ok", value)
+            except Exception as e:  # noqa: BLE001 - task isolation by design
+                queue.mark_done(key, "failed", {"error": f"{type(e).__qualname__}: {e}"})
+                completed[key] = "failed"
+                if on_result is not None:
+                    on_result(key, "failed", e)
+        if progressed:
+            idle = 0
+        else:
+            stats = queue.stats()
+            if stats.available == 0 and stats.claimed == 0:
+                idle += 1
+            time.sleep(idle_sleep_s)
+    return completed

@@ -1,0 +1,129 @@
+"""Stable content hashing of task parameters.
+
+The paper: "Each parameter is assigned a hash value when generating the
+tasks" — the hash is the task's identity for caching and resumption, so it
+must be stable across processes, python versions of dict ordering, and runs.
+
+Canonicalisation rules:
+  * mappings   -> sorted (by canonical key) list of [key, value] pairs
+  * sequences  -> lists (tuples/lists/sets all normalise; sets are sorted)
+  * callables / classes -> "py://<module>.<qualname>"; closures rejected
+  * dataclasses -> their field dict, tagged with the class qualname
+  * numpy scalars/arrays -> dtype + shape + data bytes digest
+  * objects exposing ``memento_hash()`` or ``to_hash_dict()`` -> delegated
+  * floats -> repr (shortest round-trip), NaN/inf normalised
+Anything else is rejected loudly (HashingError) instead of silently using
+``id()``-dependent repr — silent instability is how caches lie.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import inspect
+import json
+import math
+from typing import Any
+
+from .exceptions import HashingError
+
+try:  # numpy is always present in this repo, but keep the core importable without it
+    import numpy as _np
+except Exception:  # pragma: no cover
+    _np = None
+
+_MAX_DEPTH = 64
+
+
+def qualified_name(obj: Any) -> str:
+    """Stable ``module.qualname`` identifier for a callable/class."""
+    module = getattr(obj, "__module__", None)
+    qualname = getattr(obj, "__qualname__", None) or getattr(obj, "__name__", None)
+    if module is None or qualname is None:
+        raise HashingError(f"cannot derive a qualified name for {obj!r}")
+    if "<locals>" in qualname:
+        # A closure's identity is not reproducible across runs.
+        raise HashingError(
+            f"{module}.{qualname} is defined inside a function; Memento task "
+            "parameters must be module-level callables/classes so their hash "
+            "is stable across runs"
+        )
+    if "<lambda>" in qualname:
+        raise HashingError(
+            f"lambda in {module} cannot be hashed stably; use a named function"
+        )
+    return f"py://{module}.{qualname}"
+
+
+def canonicalize(value: Any, depth: int = 0) -> Any:
+    """Reduce ``value`` to a JSON-serialisable canonical form."""
+    if depth > _MAX_DEPTH:
+        raise HashingError("parameter nesting exceeds maximum canonicalisation depth")
+
+    if value is None or isinstance(value, (bool, int, str)):
+        return value
+    if isinstance(value, float):
+        if math.isnan(value):
+            return {"__float__": "nan"}
+        if math.isinf(value):
+            return {"__float__": "inf" if value > 0 else "-inf"}
+        return {"__float__": repr(value)}
+    if isinstance(value, bytes):
+        return {"__bytes_sha256__": hashlib.sha256(value).hexdigest()}
+    if _np is not None and isinstance(value, _np.generic):
+        return canonicalize(value.item(), depth + 1)
+    if _np is not None and isinstance(value, _np.ndarray):
+        return {
+            "__ndarray__": {
+                "dtype": str(value.dtype),
+                "shape": list(value.shape),
+                "digest": hashlib.sha256(_np.ascontiguousarray(value).tobytes()).hexdigest(),
+            }
+        }
+    # Delegation hooks (checked before dataclass so objects can override).
+    hook = getattr(value, "memento_hash", None)
+    if callable(hook):
+        return {"__memento_hash__": str(hook())}
+    hook = getattr(value, "to_hash_dict", None)
+    if callable(hook):
+        return {
+            "__object__": type(value).__qualname__,
+            "fields": canonicalize(hook(), depth + 1),
+        }
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        return {
+            "__dataclass__": qualified_name(type(value)),
+            "fields": canonicalize(dataclasses.asdict(value), depth + 1),
+        }
+    if isinstance(value, dict):
+        items = [
+            [canonicalize(k, depth + 1), canonicalize(v, depth + 1)]
+            for k, v in value.items()
+        ]
+        items.sort(key=lambda kv: json.dumps(kv[0], sort_keys=True))
+        return {"__dict__": items}
+    if isinstance(value, (list, tuple)):
+        return [canonicalize(v, depth + 1) for v in value]
+    if isinstance(value, (set, frozenset)):
+        elems = [canonicalize(v, depth + 1) for v in value]
+        elems.sort(key=lambda e: json.dumps(e, sort_keys=True))
+        return {"__set__": elems}
+    if inspect.isclass(value) or callable(value):
+        return qualified_name(value)
+    raise HashingError(
+        f"cannot stably hash parameter of type {type(value).__qualname__}: {value!r}. "
+        "Provide a memento_hash()/to_hash_dict() method, or use primitives."
+    )
+
+
+def stable_hash(value: Any) -> str:
+    """SHA-256 hex digest of the canonical form of ``value``."""
+    canon = canonicalize(value)
+    blob = json.dumps(canon, sort_keys=True, separators=(",", ":")).encode("utf-8")
+    return hashlib.sha256(blob).hexdigest()
+
+
+def task_key(params: dict[str, Any]) -> str:
+    """The identity of a task = hash of its full parameter assignment."""
+    if not isinstance(params, dict):
+        raise HashingError("task parameters must be a dict")
+    return stable_hash(params)

@@ -1,0 +1,182 @@
+"""The configuration matrix — the core of the paper.
+
+``ConfigMatrix`` takes the exact schema from the paper:
+
+    {
+      "parameters": {name: [value, ...], ...},
+      "settings":   {constants visible to every task},
+      "exclude":    [{name: value, ...}, ...],   # partial assignments to prune
+    }
+
+and expands it into the cartesian product of parameter values, skipping any
+combination that matches an ``exclude`` entry (an exclude entry matches when
+*all* of its key/value pairs match the combination — it may mention any
+subset of the parameter names, which is the "lookup table" semantics in the
+paper). Each surviving combination becomes a :class:`TaskSpec` with a stable
+content hash (see :mod:`repro.core.hashing`).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Mapping, Sequence
+
+from .exceptions import ConfigMatrixError
+from .hashing import stable_hash, task_key
+
+PARAMETERS = "parameters"
+SETTINGS = "settings"
+EXCLUDE = "exclude"
+_ALLOWED_KEYS = {PARAMETERS, SETTINGS, EXCLUDE}
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    """A single fully-assigned experiment, ready to run.
+
+    ``params`` is the one-value-per-axis assignment; ``settings`` are the
+    matrix-level constants; ``key`` is the stable content hash that names
+    this task in caches / checkpoints / queues.
+    """
+
+    index: int
+    params: dict[str, Any]
+    settings: dict[str, Any]
+    key: str
+
+    def describe(self, maxlen: int = 120) -> str:
+        def short(v: Any) -> str:
+            s = getattr(v, "__name__", None) or str(v)
+            return s if len(s) <= 40 else s[:37] + "..."
+
+        body = ", ".join(f"{k}={short(v)}" for k, v in self.params.items())
+        if len(body) > maxlen:
+            body = body[: maxlen - 3] + "..."
+        return f"task[{self.index}] {self.key[:12]} ({body})"
+
+
+def _matches_exclude(combo: Mapping[str, Any], rule: Mapping[str, Any]) -> bool:
+    """A rule matches when every (key, value) it names equals the combo's."""
+    for k, v in rule.items():
+        if k not in combo:
+            return False
+        cv = combo[k]
+        if cv is v:
+            continue
+        try:
+            if cv == v:
+                continue
+        except Exception:
+            return False
+        # Fall back to hash identity so e.g. equal dataclasses / arrays match.
+        try:
+            if stable_hash(cv) == stable_hash(v):
+                continue
+        except Exception:
+            return False
+        return False
+    return True
+
+
+@dataclass
+class ConfigMatrix:
+    """Validated configuration matrix with lazy task expansion."""
+
+    parameters: dict[str, list[Any]]
+    settings: dict[str, Any] = field(default_factory=dict)
+    exclude: list[dict[str, Any]] = field(default_factory=list)
+
+    @classmethod
+    def from_dict(cls, matrix: Mapping[str, Any]) -> "ConfigMatrix":
+        if not isinstance(matrix, Mapping):
+            raise ConfigMatrixError("config matrix must be a mapping")
+        unknown = set(matrix.keys()) - _ALLOWED_KEYS
+        if unknown:
+            raise ConfigMatrixError(
+                f"unknown config matrix keys {sorted(unknown)}; "
+                f"allowed: {sorted(_ALLOWED_KEYS)}"
+            )
+        params = matrix.get(PARAMETERS)
+        if not isinstance(params, Mapping) or not params:
+            raise ConfigMatrixError("'parameters' must be a non-empty mapping")
+        norm_params: dict[str, list[Any]] = {}
+        for name, values in params.items():
+            if not isinstance(name, str) or not name:
+                raise ConfigMatrixError(f"parameter name {name!r} must be a non-empty str")
+            if isinstance(values, (str, bytes)) or not isinstance(values, Sequence):
+                raise ConfigMatrixError(
+                    f"parameter {name!r} must map to a sequence of values, "
+                    f"got {type(values).__qualname__}"
+                )
+            values = list(values)
+            if not values:
+                raise ConfigMatrixError(f"parameter {name!r} has no values")
+            norm_params[name] = values
+        settings = dict(matrix.get(SETTINGS, {}) or {})
+        exclude_raw = matrix.get(EXCLUDE, []) or []
+        if isinstance(exclude_raw, Mapping):
+            exclude_raw = [exclude_raw]
+        excludes: list[dict[str, Any]] = []
+        for i, rule in enumerate(exclude_raw):
+            if not isinstance(rule, Mapping) or not rule:
+                raise ConfigMatrixError(f"exclude[{i}] must be a non-empty mapping")
+            bad = set(rule.keys()) - set(norm_params.keys())
+            if bad:
+                raise ConfigMatrixError(
+                    f"exclude[{i}] names unknown parameters {sorted(bad)}"
+                )
+            excludes.append(dict(rule))
+        return cls(parameters=norm_params, settings=settings, exclude=excludes)
+
+    # -- shape ----------------------------------------------------------------
+    @property
+    def axis_names(self) -> list[str]:
+        return list(self.parameters.keys())
+
+    @property
+    def cartesian_size(self) -> int:
+        n = 1
+        for values in self.parameters.values():
+            n *= len(values)
+        return n
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.tasks())
+
+    # -- expansion ------------------------------------------------------------
+    def combinations(self) -> Iterator[dict[str, Any]]:
+        names = self.axis_names
+        for combo in itertools.product(*(self.parameters[n] for n in names)):
+            assignment = dict(zip(names, combo))
+            if any(_matches_exclude(assignment, rule) for rule in self.exclude):
+                continue
+            yield assignment
+
+    def tasks(self) -> Iterator[TaskSpec]:
+        for i, assignment in enumerate(self.combinations()):
+            yield TaskSpec(
+                index=i,
+                params=assignment,
+                settings=dict(self.settings),
+                key=task_key(assignment),
+            )
+
+    def task_list(self) -> list[TaskSpec]:
+        out = list(self.tasks())
+        if not out:
+            raise ConfigMatrixError(
+                "configuration matrix expands to zero tasks (everything excluded?)"
+            )
+        return out
+
+    # -- filtering (useful for partial re-runs / sharded launchers) ------------
+    def subset(self, predicate: Callable[[dict[str, Any]], bool]) -> list[TaskSpec]:
+        return [t for t in self.tasks() if predicate(t.params)]
+
+    def shard(self, shard_index: int, num_shards: int) -> list[TaskSpec]:
+        """Deterministic round-robin split of the task list across launchers."""
+        if not (0 <= shard_index < num_shards):
+            raise ConfigMatrixError(
+                f"shard_index {shard_index} out of range for {num_shards} shards"
+            )
+        return [t for t in self.tasks() if t.index % num_shards == shard_index]

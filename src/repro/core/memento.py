@@ -1,0 +1,158 @@
+"""The paper-facing facade.
+
+    import repro.core as memento
+
+    notif = memento.ConsoleNotificationProvider()
+    results = memento.Memento(exp_func, notif).run(config_matrix)
+
+matches the snippet in the paper (section 3) verbatim modulo module name.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Any, Callable, Mapping
+
+from .cache import BaseCache, FsCache, MemoryCache, NullCache
+from .filequeue import FileQueue, drain
+from .matrix import ConfigMatrix, TaskSpec
+from .notifications import ConsoleNotificationProvider, NotificationProvider
+from .runner import Runner, RunnerConfig
+from .task import Context, ResultSet, TaskCheckpointStore, TaskResult
+
+
+class Memento:
+    """Run an experiment function over every task of a configuration matrix.
+
+    Parameters
+    ----------
+    exp_func:
+        ``exp_func(context) -> result``. The context exposes ``params``,
+        ``settings``, checkpoint save/restore, and heartbeats.
+    notification_provider:
+        where run/task events go (console by default, as in the paper).
+    workdir:
+        root for the result cache + task checkpoints. ``None`` -> in-memory
+        cache, checkpointing disabled (pure-functional quick runs).
+    """
+
+    def __init__(
+        self,
+        exp_func: Callable[[Context], Any],
+        notification_provider: NotificationProvider | None = None,
+        workdir: str | Path | None = None,
+        runner_config: RunnerConfig | None = None,
+        cache: BaseCache | None = None,
+    ):
+        self.exp_func = exp_func
+        self.provider = notification_provider or ConsoleNotificationProvider(verbose=False)
+        self.workdir = Path(workdir) if workdir is not None else None
+        self.runner_config = runner_config or RunnerConfig()
+        if cache is not None:
+            self.cache = cache
+        elif self.workdir is not None:
+            self.cache = FsCache(self.workdir / "cache")
+        else:
+            self.cache = MemoryCache()
+        self._ckpt_root = str(self.workdir / "task_ckpts") if self.workdir else None
+
+    # -- paper API ------------------------------------------------------------
+    def run(
+        self,
+        config_matrix: Mapping[str, Any] | ConfigMatrix,
+        dry_run: bool = False,
+        force: bool = False,
+        cache: bool = True,
+    ) -> ResultSet:
+        matrix = (
+            config_matrix
+            if isinstance(config_matrix, ConfigMatrix)
+            else ConfigMatrix.from_dict(config_matrix)
+        )
+        specs = matrix.task_list()
+        if dry_run:
+            # Paper semantics: report what *would* run, execute nothing.
+            for spec in specs:
+                self.provider.notify_dry(spec) if hasattr(
+                    self.provider, "notify_dry"
+                ) else None
+            return ResultSet(
+                [TaskResult(spec=s, status="skipped", value=None) for s in specs]
+            )
+        runner = Runner(
+            self.exp_func,
+            cache=self.cache if cache else NullCache(),
+            provider=self.provider,
+            config=self.runner_config,
+            checkpoint_root=self._ckpt_root,
+        )
+        return ResultSet(runner.run(specs, force=force))
+
+    # -- cluster API ------------------------------------------------------------
+    def run_distributed(
+        self,
+        config_matrix: Mapping[str, Any] | ConfigMatrix,
+        queue_dir: str | Path,
+        lease_s: float = 120.0,
+        publish: bool = True,
+    ) -> ResultSet:
+        """Cooperatively drain ``config_matrix`` with other launcher hosts.
+
+        Every participating host calls this with the same matrix + queue_dir
+        (a shared filesystem). Tasks are claimed via leases; results land in
+        the shared FsCache so *all* hosts can assemble the full ResultSet at
+        the end. Survives host death: expired leases are re-claimed.
+        """
+        matrix = (
+            config_matrix
+            if isinstance(config_matrix, ConfigMatrix)
+            else ConfigMatrix.from_dict(config_matrix)
+        )
+        specs = matrix.task_list()
+        by_key = {s.key: s for s in specs}
+        queue = FileQueue(queue_dir, lease_s=lease_s)
+        if publish:
+            queue.publish(specs)
+
+        def execute(spec: TaskSpec, beat: Callable[[], None]) -> Any:
+            cached = self.cache.get(spec.key)
+            if cached is not None:
+                return cached.value
+            ckpts = (
+                TaskCheckpointStore(self._ckpt_root, spec.key) if self._ckpt_root else None
+            )
+            ctx = Context(spec=spec, checkpoints=ckpts, _heartbeat=beat)
+            t0 = time.time()
+            value = self.exp_func(ctx)
+            self.cache.put(spec.key, value, manifest={"wall_s": time.time() - t0})
+            return value
+
+        def on_result(key: str, status: str, value: Any) -> None:
+            res = TaskResult(
+                spec=by_key[key],
+                status="ok" if status == "ok" else "failed",
+                value=value if status == "ok" else None,
+                error=None if status == "ok" else str(value),
+            )
+            try:
+                self.provider.task_finished(res)
+            except Exception:
+                pass
+
+        drain(queue, by_key, execute, on_result=on_result)
+
+        # Assemble the global view (ours + peers') from the shared cache/queue.
+        results: list[TaskResult] = []
+        for spec in specs:
+            entry = self.cache.get(spec.key)
+            if entry is not None:
+                results.append(
+                    TaskResult(spec=spec, status="cached", value=entry.value)
+                )
+            elif queue.is_done(spec.key):
+                results.append(
+                    TaskResult(spec=spec, status="failed", error="failed on a peer host")
+                )
+            else:
+                results.append(TaskResult(spec=spec, status="skipped"))
+        return ResultSet(results)

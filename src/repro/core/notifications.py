@@ -1,0 +1,154 @@
+"""Notification providers.
+
+The paper ships a ``ConsoleNotificationProvider``; we add file, callback and
+aggregating providers plus a webhook-shaped provider that writes the payload
+it *would* post (this container has no network; on a cluster you'd point it
+at Slack/PagerDuty). Providers must never take the run down: every dispatch
+is wrapped and failures are counted, not raised.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, TextIO
+
+from .task import TaskResult
+
+
+@dataclass
+class Event:
+    kind: str  # task_started | task_finished | task_failed | task_retry |
+    #            straggler_respawned | run_started | run_finished
+    message: str
+    unix_time: float = field(default_factory=time.time)
+    payload: dict[str, Any] = field(default_factory=dict)
+
+
+class NotificationProvider:
+    """Interface. ``notify`` must be cheap and exception-safe."""
+
+    def notify(self, event: Event) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    # Paper-compatible sugar -------------------------------------------------
+    def task_finished(self, result: TaskResult) -> None:
+        self.notify(
+            Event(
+                kind="task_finished" if result.ok else "task_failed",
+                message=result.summary(),
+                payload={"key": result.spec.key, "status": result.status},
+            )
+        )
+
+    def run_finished(self, n_ok: int, n_failed: int, wall_s: float) -> None:
+        self.notify(
+            Event(
+                kind="run_finished",
+                message=f"run finished: {n_ok} ok, {n_failed} failed in {wall_s:.1f}s",
+                payload={"ok": n_ok, "failed": n_failed, "wall_s": wall_s},
+            )
+        )
+
+
+class ConsoleNotificationProvider(NotificationProvider):
+    """The provider from the paper's demo snippet."""
+
+    def __init__(self, stream: TextIO | None = None, verbose: bool = True):
+        self.stream = stream or sys.stderr
+        self.verbose = verbose
+        self._lock = threading.Lock()
+
+    def notify(self, event: Event) -> None:
+        if not self.verbose and event.kind in ("task_started",):
+            return
+        stamp = time.strftime("%H:%M:%S", time.localtime(event.unix_time))
+        with self._lock:
+            print(f"[memento {stamp}] {event.kind}: {event.message}", file=self.stream)
+
+
+class FileNotificationProvider(NotificationProvider):
+    """Append-only JSONL event log — greppable post-mortem trail."""
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def notify(self, event: Event) -> None:
+        rec = {
+            "t": event.unix_time,
+            "kind": event.kind,
+            "message": event.message,
+            **event.payload,
+        }
+        with self._lock, open(self.path, "a") as f:
+            f.write(json.dumps(rec, default=str) + "\n")
+
+
+class CallbackNotificationProvider(NotificationProvider):
+    def __init__(self, fn: Callable[[Event], None]):
+        self.fn = fn
+
+    def notify(self, event: Event) -> None:
+        self.fn(event)
+
+
+class WebhookNotificationProvider(NotificationProvider):
+    """Writes the JSON payloads it would POST to ``url`` into a spool dir.
+
+    On a networked cluster, subclass and override ``send``.
+    """
+
+    def __init__(self, url: str, spool_dir: str | Path):
+        self.url = url
+        self.spool = Path(spool_dir)
+        self.spool.mkdir(parents=True, exist_ok=True)
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def send(self, body: dict[str, Any]) -> None:
+        with self._lock:
+            self._n += 1
+            (self.spool / f"event-{self._n:06d}.json").write_text(
+                json.dumps(body, indent=2, default=str)
+            )
+
+    def notify(self, event: Event) -> None:
+        self.send(
+            {"url": self.url, "kind": event.kind, "text": event.message, **event.payload}
+        )
+
+
+class MultiProvider(NotificationProvider):
+    """Fan out to several providers; swallow (but count) their failures."""
+
+    def __init__(self, *providers: NotificationProvider):
+        self.providers = list(providers)
+        self.dispatch_errors = 0
+
+    def notify(self, event: Event) -> None:
+        for p in self.providers:
+            try:
+                p.notify(event)
+            except Exception:
+                self.dispatch_errors += 1
+
+
+class RecordingProvider(NotificationProvider):
+    """Test helper: records every event."""
+
+    def __init__(self) -> None:
+        self.events: list[Event] = []
+        self._lock = threading.Lock()
+
+    def notify(self, event: Event) -> None:
+        with self._lock:
+            self.events.append(event)
+
+    def kinds(self) -> list[str]:
+        with self._lock:
+            return [e.kind for e in self.events]

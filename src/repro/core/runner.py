@@ -1,0 +1,440 @@
+"""Parallel task runner: retries, hard timeouts, straggler speculation.
+
+Thread mode is the default — the heavy tasks in this framework (XLA
+lower/compile, filesystem IO, JAX dispatch) all release the GIL, so threads
+give real parallelism while sharing the in-process device state. Process mode
+exists for python-bound workloads (requires the experiment function and task
+parameters to be picklable / module-level).
+
+Fault model (beyond the paper, needed at cluster scale):
+  * a task raising       -> captured traceback, retried up to the budget
+  * a task hanging       -> hard timeout, the attempt is abandoned (the thread
+                            is left to die with the process), retried/marked
+  * a straggler          -> speculative duplicate attempt once the runtime
+                            exceeds ``straggler_factor`` x median of completed
+                            peers; first finisher wins, tasks must be
+                            idempotent (they are: pure functions + atomic
+                            caches + versioned checkpoints)
+  * the whole host dying -> handled one level up by the file-queue runner
+                            (lease expiry) and by task checkpoints
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import os
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+from .cache import BaseCache, NullCache
+from .matrix import TaskSpec
+from .notifications import Event, NotificationProvider
+from .task import Context, TaskCheckpointStore, TaskResult
+
+
+@dataclass
+class RunnerConfig:
+    max_workers: int | None = None  # None -> os.cpu_count()
+    mode: str = "thread"  # "thread" | "process"
+    retries: int = 1  # extra attempts after the first failure
+    retry_backoff_s: float = 0.25
+    task_timeout_s: float | None = None  # hard per-attempt timeout
+    straggler_factor: float = 3.0
+    straggler_min_s: float = 30.0
+    enable_speculation: bool = True
+    max_speculative: int = 4  # concurrent duplicate attempts across the run
+    fail_fast: bool = False
+    poll_interval_s: float = 0.05
+
+    def resolved_workers(self) -> int:
+        if self.max_workers is not None:
+            return max(1, self.max_workers)
+        return max(1, os.cpu_count() or 1)
+
+
+@dataclass
+class _Attempt:
+    spec: TaskSpec
+    number: int  # 1-based attempt number
+    future: cf.Future
+    started: float
+    speculative: bool = False
+    last_beat: float = field(default_factory=time.time)
+    abandoned: bool = False
+
+
+def _run_task(
+    func: Callable[[Context], Any],
+    spec: TaskSpec,
+    ckpt_root: str | None,
+    attempt: int,
+    beat: Callable[[], None] | None,
+    progress_cb: Callable[[str], None] | None,
+) -> Any:
+    ckpts = TaskCheckpointStore(ckpt_root, spec.key) if ckpt_root else None
+    ctx = Context(
+        spec=spec,
+        checkpoints=ckpts,
+        attempt=attempt,
+        progress_cb=progress_cb,
+        _heartbeat=beat,
+    )
+    return func(ctx)
+
+
+class Runner:
+    """Executes a list of TaskSpecs under a RunnerConfig."""
+
+    def __init__(
+        self,
+        func: Callable[[Context], Any],
+        cache: BaseCache | None = None,
+        provider: NotificationProvider | None = None,
+        config: RunnerConfig | None = None,
+        checkpoint_root: str | None = None,
+    ):
+        self.func = func
+        # NOT `cache or NullCache()`: an empty FsCache is len()==0 == falsy.
+        self.cache = cache if cache is not None else NullCache()
+        self.provider = provider
+        self.config = config or RunnerConfig()
+        self.checkpoint_root = checkpoint_root
+        self.stats: dict[str, Any] = {}
+
+    # -- notifications ------------------------------------------------------
+    def _notify(self, kind: str, message: str, **payload: Any) -> None:
+        if self.provider is None:
+            return
+        try:
+            self.provider.notify(Event(kind=kind, message=message, payload=payload))
+        except Exception:
+            pass  # providers must never take the run down
+
+    # -- main entry -----------------------------------------------------------
+    def run(self, specs: Sequence[TaskSpec], force: bool = False) -> list[TaskResult]:
+        cfg = self.config
+        t_run0 = time.time()
+        results: dict[str, TaskResult] = {}
+        self._notify("run_started", f"{len(specs)} tasks, {cfg.resolved_workers()} workers")
+
+        # 1) serve from cache
+        to_run: list[TaskSpec] = []
+        for spec in specs:
+            entry = None if force else self.cache.get(spec.key)
+            if entry is not None:
+                results[spec.key] = TaskResult(
+                    spec=spec, status="cached", value=entry.value, wall_s=0.0
+                )
+            else:
+                to_run.append(spec)
+
+        if to_run:
+            if cfg.mode == "process":
+                self._run_processes(to_run, results)
+            else:
+                self._run_threads(to_run, results)
+
+        ordered = [results[s.key] for s in specs if s.key in results]
+        n_ok = sum(1 for r in ordered if r.ok)
+        n_failed = len(ordered) - n_ok
+        wall = time.time() - t_run0
+        self.stats = {
+            "tasks": len(specs),
+            "ok": n_ok,
+            "failed": n_failed,
+            "cached": sum(1 for r in ordered if r.status == "cached"),
+            "wall_s": wall,
+            "speculative_launched": self.stats.get("speculative_launched", 0),
+        }
+        self._notify(
+            "run_finished",
+            f"{n_ok} ok / {n_failed} failed in {wall:.1f}s",
+            **{k: v for k, v in self.stats.items() if k != "tasks"},
+        )
+        return ordered
+
+    # -- thread mode (full feature set) ---------------------------------------
+    def _run_threads(
+        self, specs: Sequence[TaskSpec], results: dict[str, TaskResult]
+    ) -> None:
+        cfg = self.config
+        n_spec_launched = 0
+        failures_left = {s.key: cfg.retries for s in specs}
+        pending: list[TaskSpec] = list(specs)
+        retry_at: list[tuple[float, TaskSpec, int]] = []  # (when, spec, next_attempt_no)
+        attempts: dict[str, list[_Attempt]] = {}
+        done_keys: set[str] = set()
+        completed_durations: list[float] = []
+        lock = threading.Lock()
+
+        def make_beat(holder: _Attempt) -> Callable[[], None]:
+            def beat() -> None:
+                holder.last_beat = time.time()
+
+            return beat
+
+        pool = cf.ThreadPoolExecutor(max_workers=cfg.resolved_workers())
+        try:
+
+            def submit(spec: TaskSpec, number: int, speculative: bool = False) -> None:
+                holder = _Attempt(
+                    spec=spec,
+                    number=number,
+                    future=None,  # type: ignore[arg-type]
+                    started=time.time(),
+                    speculative=speculative,
+                )
+                holder.future = pool.submit(
+                    _run_task,
+                    self.func,
+                    spec,
+                    self.checkpoint_root,
+                    number,
+                    make_beat(holder),
+                    None,
+                )
+                attempts.setdefault(spec.key, []).append(holder)
+                self._notify(
+                    "task_started",
+                    spec.describe() + (" [speculative]" if speculative else ""),
+                    key=spec.key,
+                    attempt=number,
+                )
+
+            for spec in pending:
+                submit(spec, 1)
+            pending.clear()
+
+            def record_success(att: _Attempt, value: Any) -> None:
+                with lock:
+                    if att.spec.key in done_keys:
+                        return
+                    done_keys.add(att.spec.key)
+                wall = time.time() - att.started
+                completed_durations.append(wall)
+                res = TaskResult(
+                    spec=att.spec,
+                    status="ok",
+                    value=value,
+                    attempts=att.number,
+                    started_unix=att.started,
+                    wall_s=wall,
+                    speculative=att.speculative,
+                )
+                results[att.spec.key] = res
+                try:
+                    self.cache.put(
+                        att.spec.key,
+                        value,
+                        manifest={
+                            "params": {
+                                k: getattr(v, "__name__", None) or str(v)
+                                for k, v in att.spec.params.items()
+                            },
+                            "wall_s": wall,
+                            "attempts": att.number,
+                        },
+                    )
+                except Exception as e:
+                    self._notify("cache_error", f"{att.spec.key[:12]}: {e}")
+                if self.provider is not None:
+                    try:
+                        self.provider.task_finished(res)
+                    except Exception:
+                        pass
+
+            def record_failure(att: _Attempt, exc: BaseException | None, status: str) -> None:
+                """Handle a failed/timed-out attempt: retry or finalise."""
+                key = att.spec.key
+                with lock:
+                    if key in done_keys:
+                        return
+                live_twins = [
+                    a
+                    for a in attempts.get(key, [])
+                    if a is not att and not a.future.done() and not a.abandoned
+                ]
+                if live_twins:
+                    return  # a speculative duplicate is still running; let it finish
+                if failures_left[key] > 0:
+                    failures_left[key] -= 1
+                    next_no = att.number + 1
+                    self._notify(
+                        "task_retry",
+                        f"{att.spec.describe()} attempt {att.number} {status}; retrying",
+                        key=key,
+                        attempt=next_no,
+                    )
+                    retry_at.append((time.time() + self.config.retry_backoff_s, att.spec, next_no))
+                    return
+                with lock:
+                    done_keys.add(key)
+                if exc is not None:
+                    res = TaskResult.from_exception(att.spec, exc, att.number, att.started)
+                else:
+                    res = TaskResult(
+                        spec=att.spec,
+                        status=status,
+                        error=f"attempt exceeded {self.config.task_timeout_s}s",
+                        attempts=att.number,
+                        started_unix=att.started,
+                        wall_s=time.time() - att.started,
+                    )
+                results[key] = res
+                if self.provider is not None:
+                    try:
+                        self.provider.task_finished(res)
+                    except Exception:
+                        pass
+
+            # -- supervision loop ---------------------------------------------
+            while True:
+                with lock:
+                    n_done = len(done_keys)
+                if n_done == len(specs):
+                    break
+                if cfg.fail_fast and any(not r.ok for r in results.values()):
+                    break
+
+                now = time.time()
+                # due retries
+                due = [r for r in retry_at if r[0] <= now]
+                for item in due:
+                    retry_at.remove(item)
+                    _, spec, number = item
+                    if spec.key not in done_keys:
+                        submit(spec, number)
+
+                live: list[_Attempt] = [
+                    a
+                    for atts in attempts.values()
+                    for a in atts
+                    if not a.future.done() and not a.abandoned
+                ]
+
+                # hard timeouts
+                if cfg.task_timeout_s is not None:
+                    for att in live:
+                        if now - att.started > cfg.task_timeout_s:
+                            att.abandoned = True
+                            att.future.cancel()
+                            self._notify(
+                                "task_timeout",
+                                f"{att.spec.describe()} abandoned after "
+                                f"{cfg.task_timeout_s:.1f}s",
+                                key=att.spec.key,
+                            )
+                            record_failure(att, None, "timeout")
+
+                # straggler speculation
+                if (
+                    cfg.enable_speculation
+                    and len(completed_durations) >= 3
+                    and n_spec_launched < cfg.max_speculative
+                ):
+                    median = statistics.median(completed_durations)
+                    threshold = max(cfg.straggler_min_s, cfg.straggler_factor * median)
+                    for att in live:
+                        if att.speculative or att.spec.key in done_keys:
+                            continue
+                        twins = attempts.get(att.spec.key, [])
+                        if sum(1 for a in twins if not a.future.done()) > 1:
+                            continue  # already speculated
+                        if now - att.started > threshold:
+                            n_spec_launched += 1
+                            self.stats["speculative_launched"] = n_spec_launched
+                            self._notify(
+                                "straggler_respawned",
+                                f"{att.spec.describe()} running {now - att.started:.1f}s "
+                                f"(median {median:.1f}s); launching duplicate",
+                                key=att.spec.key,
+                            )
+                            submit(att.spec, att.number, speculative=True)
+                            if n_spec_launched >= cfg.max_speculative:
+                                break
+
+                # harvest finished futures
+                finished = [
+                    a
+                    for atts in attempts.values()
+                    for a in atts
+                    if a.future.done() and not a.abandoned and not getattr(a, "_seen", False)
+                ]
+                for att in finished:
+                    att._seen = True  # type: ignore[attr-defined]
+                    if att.future.cancelled():
+                        continue
+                    exc = att.future.exception()
+                    if exc is None:
+                        record_success(att, att.future.result())
+                    else:
+                        self._notify(
+                            "task_attempt_failed",
+                            f"{att.spec.describe()} attempt {att.number}: {exc}",
+                            key=att.spec.key,
+                        )
+                        record_failure(att, exc, "failed")
+
+                if not finished and not due:
+                    time.sleep(cfg.poll_interval_s)
+
+            # drop any still-running abandoned attempts on the floor: cancel
+            # what never started and do NOT wait for hung threads (they are
+            # joined at interpreter exit; the fleet answer is process kill).
+            for atts in attempts.values():
+                for a in atts:
+                    if not a.future.done():
+                        a.future.cancel()
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    # -- process mode (no speculation/heartbeat; picklable funcs only) --------
+    def _run_processes(
+        self, specs: Sequence[TaskSpec], results: dict[str, TaskResult]
+    ) -> None:
+        cfg = self.config
+        with cf.ProcessPoolExecutor(max_workers=cfg.resolved_workers()) as pool:
+            fut_to_spec: dict[cf.Future, tuple[TaskSpec, float, int]] = {}
+            for spec in specs:
+                fut = pool.submit(_run_task, self.func, spec, self.checkpoint_root, 1, None, None)
+                fut_to_spec[fut] = (spec, time.time(), 1)
+            failures_left = {s.key: cfg.retries for s in specs}
+            while fut_to_spec:
+                done, _ = cf.wait(
+                    list(fut_to_spec), timeout=1.0, return_when=cf.FIRST_COMPLETED
+                )
+                for fut in done:
+                    spec, started, number = fut_to_spec.pop(fut)
+                    exc = fut.exception()
+                    if exc is None:
+                        value = fut.result()
+                        res = TaskResult(
+                            spec=spec,
+                            status="ok",
+                            value=value,
+                            attempts=number,
+                            started_unix=started,
+                            wall_s=time.time() - started,
+                        )
+                        results[spec.key] = res
+                        try:
+                            self.cache.put(spec.key, value, manifest={"wall_s": res.wall_s})
+                        except Exception:
+                            pass
+                    elif failures_left[spec.key] > 0:
+                        failures_left[spec.key] -= 1
+                        nf = pool.submit(
+                            _run_task, self.func, spec, self.checkpoint_root, number + 1, None, None
+                        )
+                        fut_to_spec[nf] = (spec, time.time(), number + 1)
+                    else:
+                        results[spec.key] = TaskResult.from_exception(
+                            spec, exc, number, started
+                        )
+                    if self.provider is not None and spec.key in results:
+                        try:
+                            self.provider.task_finished(results[spec.key])
+                        except Exception:
+                            pass

@@ -1,0 +1,236 @@
+"""Task execution context and results.
+
+``Context`` is what a user's ``exp_func(context)`` receives — the paper's
+example accesses the task's parameters, checks/restores checkpoints, and
+declares what to checkpoint. ``TaskResult`` is the engine's record of one
+execution attempt (value or failure + timing + provenance).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import socket
+import tempfile
+import time
+import traceback
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable
+
+from .exceptions import CheckpointError
+from .matrix import TaskSpec
+
+
+class TaskCheckpointStore:
+    """Versioned pickle checkpoints for one task, atomic on shared FS.
+
+    Layout: ``<root>/<task-key>/ckpt-<n>.pkl`` with ``LATEST`` pointing at the
+    newest complete file. Writes go through a temp file + rename so a crash
+    mid-write can never be mistaken for a complete checkpoint.
+    """
+
+    def __init__(self, root: str | os.PathLike[str], key: str):
+        self.dir = Path(root) / key
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    def _latest_path(self) -> Path:
+        return self.dir / "LATEST"
+
+    def latest_version(self) -> int | None:
+        p = self._latest_path()
+        if not p.exists():
+            return None
+        try:
+            v = int(p.read_text().strip())
+        except ValueError:
+            return None
+        return v if (self.dir / f"ckpt-{v}.pkl").exists() else None
+
+    def exists(self) -> bool:
+        return self.latest_version() is not None
+
+    def save(self, obj: Any) -> int:
+        version = (self.latest_version() or 0) + 1
+        target = self.dir / f"ckpt-{version}.pkl"
+        try:
+            fd, tmp = tempfile.mkstemp(prefix=".ckpt-", dir=self.dir)
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(obj, f, protocol=pickle.HIGHEST_PROTOCOL)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, target)
+            fd2, tmp2 = tempfile.mkstemp(prefix=".latest-", dir=self.dir)
+            with os.fdopen(fd2, "w") as f:
+                f.write(str(version))
+            os.replace(tmp2, self._latest_path())
+        except Exception as e:
+            raise CheckpointError(f"failed to save checkpoint v{version}: {e}") from e
+        # Keep only the two most recent checkpoints.
+        for old in sorted(self.dir.glob("ckpt-*.pkl")):
+            try:
+                v = int(old.stem.split("-")[1])
+            except (IndexError, ValueError):
+                continue
+            if v <= version - 2:
+                old.unlink(missing_ok=True)
+        return version
+
+    def restore(self) -> Any:
+        v = self.latest_version()
+        if v is None:
+            raise CheckpointError("no checkpoint to restore")
+        try:
+            with open(self.dir / f"ckpt-{v}.pkl", "rb") as f:
+                return pickle.load(f)
+        except Exception as e:
+            raise CheckpointError(f"failed to restore checkpoint v{v}: {e}") from e
+
+
+@dataclass
+class Context:
+    """Handle passed to the user's experiment function for one task."""
+
+    spec: TaskSpec
+    checkpoints: TaskCheckpointStore | None = None
+    attempt: int = 0
+    cancel_requested: Callable[[], bool] = lambda: False
+    progress_cb: Callable[[str], None] | None = None
+    _heartbeat: Callable[[], None] | None = None
+
+    # Paper API: parameters and settings are plain attribute access.
+    @property
+    def params(self) -> dict[str, Any]:
+        return self.spec.params
+
+    @property
+    def settings(self) -> dict[str, Any]:
+        return self.spec.settings
+
+    @property
+    def key(self) -> str:
+        return self.spec.key
+
+    def __getitem__(self, name: str) -> Any:
+        if name in self.spec.params:
+            return self.spec.params[name]
+        if name in self.spec.settings:
+            return self.spec.settings[name]
+        raise KeyError(name)
+
+    # -- checkpointing ------------------------------------------------------
+    def checkpoint_exists(self) -> bool:
+        return bool(self.checkpoints and self.checkpoints.exists())
+
+    def checkpoint(self, obj: Any) -> int:
+        if self.checkpoints is None:
+            raise CheckpointError("checkpointing is disabled for this run")
+        self.heartbeat()
+        return self.checkpoints.save(obj)
+
+    def restore(self, default: Any = None) -> Any:
+        if self.checkpoints is None or not self.checkpoints.exists():
+            if default is not None:
+                return default
+            raise CheckpointError(f"task {self.key[:12]} has no checkpoint")
+        return self.checkpoints.restore()
+
+    # -- liveness -------------------------------------------------------------
+    def heartbeat(self) -> None:
+        """Long-running tasks should call this periodically; the runner uses it
+        for straggler detection and the file-queue uses it to renew leases."""
+        if self._heartbeat is not None:
+            self._heartbeat()
+
+    def progress(self, message: str) -> None:
+        self.heartbeat()
+        if self.progress_cb is not None:
+            self.progress_cb(f"{self.spec.describe()}: {message}")
+
+
+@dataclass
+class TaskResult:
+    """Outcome of one task (possibly after retries)."""
+
+    spec: TaskSpec
+    status: str  # "ok" | "failed" | "timeout" | "cached" | "skipped"
+    value: Any = None
+    error: str | None = None
+    traceback_str: str | None = None
+    attempts: int = 1
+    started_unix: float = 0.0
+    wall_s: float = 0.0
+    host: str = field(default_factory=socket.gethostname)
+    pid: int = field(default_factory=os.getpid)
+    speculative: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return self.status in ("ok", "cached")
+
+    @classmethod
+    def from_exception(
+        cls, spec: TaskSpec, exc: BaseException, attempts: int, started: float
+    ) -> "TaskResult":
+        return cls(
+            spec=spec,
+            status="failed",
+            error=f"{type(exc).__qualname__}: {exc}",
+            traceback_str="".join(
+                traceback.format_exception(type(exc), exc, exc.__traceback__)
+            ),
+            attempts=attempts,
+            started_unix=started,
+            wall_s=time.time() - started,
+        )
+
+    def summary(self) -> str:
+        base = f"{self.spec.describe()} -> {self.status} in {self.wall_s:.2f}s"
+        if self.error:
+            base += f" ({self.error})"
+        return base
+
+
+class ResultSet:
+    """Ordered collection of task results with paper-style conveniences."""
+
+    def __init__(self, results: list[TaskResult]):
+        self._results = sorted(results, key=lambda r: r.spec.index)
+
+    def __iter__(self):
+        return iter(self._results)
+
+    def __len__(self) -> int:
+        return len(self._results)
+
+    def __getitem__(self, i: int) -> TaskResult:
+        return self._results[i]
+
+    @property
+    def ok(self) -> list[TaskResult]:
+        return [r for r in self._results if r.ok]
+
+    @property
+    def failed(self) -> list[TaskResult]:
+        return [r for r in self._results if not r.ok]
+
+    @property
+    def values(self) -> list[Any]:
+        return [r.value for r in self._results if r.ok]
+
+    def value_by_params(self, **params: Any) -> Any:
+        for r in self._results:
+            if all(r.spec.params.get(k) == v for k, v in params.items()):
+                if not r.ok:
+                    raise LookupError(f"matching task {r.spec.key[:12]} failed: {r.error}")
+                return r.value
+        raise LookupError(f"no task matches {params}")
+
+    def summary(self) -> str:
+        n_ok = len(self.ok)
+        n_cached = sum(1 for r in self._results if r.status == "cached")
+        lines = [
+            f"{len(self._results)} tasks: {n_ok} ok ({n_cached} from cache), "
+            f"{len(self.failed)} failed"
+        ]
+        lines.extend(r.summary() for r in self.failed)
+        return "\n".join(lines)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+wrapped in ops.py (jit'd public API, custom_vjp where differentiable) and
+asserted against ref.py (pure-jnp oracles) across shape/dtype sweeps in
+tests/test_kernels.py. interpret=True on CPU; Mosaic on TPU.
+"""

@@ -1,0 +1,105 @@
+"""Flash-decoding split-K attention kernel (one new token vs a long cache).
+
+GPU flash-decoding [arXiv:2311.01282] splits the KV length across SMs and
+combines partials in a second pass. The TPU adaptation runs the KV blocks as
+the sequential innermost grid dimension with the running (m, l, acc) state
+in VMEM scratch — the combine is the carry, no second pass needed; split-K
+ACROSS chips comes from sharding the cache seq dim over the mesh (the
+decode_default profile), whose partial-softmax combine XLA handles.
+
+Layout: q (BKV, G, D) — one program per (batch, kv-head); G = query heads
+per kv head ride the sublane dim. k/v: (BKV, T, D). Validity is positional:
+slots with k_pos > cur_pos (or outside the window ring) are masked, so the
+same kernel serves dense caches and ring buffers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+F32 = jnp.float32
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, kpos_ref, curpos_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, sm_scale, window, blk_k, n_k,
+):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(F32)  # (G, D)
+    k = k_ref[0].astype(F32)  # (blk_k, D)
+    v = v_ref[0].astype(F32)
+    k_pos = kpos_ref[...]  # (blk_k,)
+    cur = curpos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32) * sm_scale
+    valid = (k_pos <= cur) & (k_pos >= 0)
+    if window:
+        valid = valid & (k_pos > cur - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)  # (G, blk_k)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (BKV, G, D)
+    k: jax.Array,  # (BKV, T, D)
+    v: jax.Array,  # (BKV, T, D)
+    k_pos: jax.Array,  # (T,) int32 positions held by each slot
+    cur_pos: jax.Array,  # scalar int32
+    *, window: int = 0, sm_scale: float | None = None, blk_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    BKV, G, D = q.shape
+    T = k.shape[1]
+    blk_k = min(blk_k, T)
+    assert T % blk_k == 0, (T, blk_k)
+    n_k = T // blk_k
+    sm = sm_scale if sm_scale is not None else D ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel, sm_scale=sm, window=window, blk_k=blk_k, n_k=n_k
+        ),
+        grid=(BKV, n_k),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((blk_k,), lambda b, j: (j,)),
+            pl.BlockSpec((1,), lambda b, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), F32),
+            pltpu.VMEM((G,), F32),
+            pltpu.VMEM((G,), F32),
+        ],
+        interpret=interpret,
+    )(q, k, v, k_pos, cur_pos[None].astype(jnp.int32))

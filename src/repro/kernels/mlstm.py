@@ -1,0 +1,122 @@
+"""Chunkwise mLSTM (xLSTM matrix-memory) Pallas kernel.
+
+One program instance owns one (batch, head); the chunk index is the
+sequential innermost grid dimension carrying the stabilised state
+(C: dh x dh, n: dh, m: 1) in VMEM scratch. Within a chunk of length L the
+math is the parallel form (the same as repro.models.recurrent.mlstm_chunked,
+the oracle): intra-chunk (L x L) score matmuls hit the MXU; the inter-chunk
+contributions use the carried state. All state math is fp32.
+
+Inputs are per-head: q/k/v (BH, S, dh) (q pre-scaled by dh^-0.5), gate
+pre-activations i/f (BH, S).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _mlstm_kernel(
+    q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
+    C_ref, n_ref, m_ref,
+    *, L,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    q = q_ref[0].astype(F32)  # (L, dh)
+    k = k_ref[0].astype(F32)
+    v = v_ref[0].astype(F32)
+    a = i_ref[0].astype(F32)  # (L,) log input gate
+    g = -jax.nn.softplus(-f_ref[0].astype(F32))  # (L,) log sigmoid(f)
+
+    C = C_ref[...]
+    n = n_ref[...]
+    m = m_ref[0]
+
+    b = jnp.cumsum(g)  # (L,)
+    btot = b[L - 1]
+
+    # Per-position stabiliser.
+    intra_carry = a - b
+    run_max = jax.lax.cummax(intra_carry, axis=0)
+    m_state = b + m
+    m_out = jnp.maximum(m_state, b + run_max)  # (L,)
+
+    # Intra-chunk attention-like term.
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32)
+    logD = b[:, None] + (a - b)[None, :] - m_out[:, None]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    D = jnp.where(s_idx <= t_idx, jnp.exp(logD), 0.0)
+    wS = scores * D
+    intra_num = jax.lax.dot_general(wS, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    intra_den = jnp.sum(wS, axis=1)  # (L,)
+
+    # Inter-chunk (state) term.
+    sdec = jnp.exp(m_state - m_out)  # (L,)
+    qC = jax.lax.dot_general(q, C, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    inter_num = qC * sdec[:, None]
+    inter_den = (q @ n.reshape(-1, 1))[:, 0] * sdec
+
+    num = intra_num + inter_num
+    den = inter_den + intra_den
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_out))
+    h_ref[0] = (num / denom[:, None]).astype(h_ref.dtype)
+
+    # State update to chunk end.
+    m_a = jnp.max(a + btot - b)
+    m_new = jnp.maximum(m + btot, m_a)
+    state_scale = jnp.exp(m + btot - m_new)
+    in_w = jnp.exp(a + btot - b - m_new)  # (L,)
+    C_ref[...] = C * state_scale + jax.lax.dot_general(
+        k * in_w[:, None], v, (((0,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    n_ref[...] = n * state_scale + jnp.sum(k * in_w[:, None], axis=0)
+    m_ref[0] = m_new
+
+
+def mlstm_chunk_kernel(
+    q: jax.Array,  # (BH, S, dh), pre-scaled
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,  # (BH, S)
+    f_pre: jax.Array,  # (BH, S)
+    *, chunk: int = 64, interpret: bool = True,
+) -> jax.Array:
+    BH, S, dh = q.shape
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    n_chunks = S // L
+
+    return pl.pallas_call(
+        functools.partial(_mlstm_kernel, L=L),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, L, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L), lambda b, c: (b, c)),
+            pl.BlockSpec((1, L), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, L, dh), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), F32),
+            pltpu.VMEM((dh,), F32),
+            pltpu.VMEM((1,), F32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i_pre, f_pre)

@@ -1,0 +1,74 @@
+"""Grouped matmul (MoE expert FFN) Pallas kernel — megablocks, TPU-style.
+
+GPU megablocks [arXiv:2211.15841] builds CSR block-sparse GEMMs; the TPU
+adaptation exploits that our dispatcher (repro/models/moe.py) delivers rows
+SORTED by expert. With group boundaries pre-padded to blk_m multiples, every
+(m-block, n-block) tile belongs to exactly ONE expert, so the kernel is a
+dense tiled matmul whose rhs block index is data-dependent: a scalar-prefetch
+array maps m-block -> group id and drives the rhs BlockSpec index_map
+(PrefetchScalarGridSpec — the TPU analogue of megablocks' row indices).
+
+lhs (M, K) @ rhs[group_of_block] (K, N) -> out (M, N), fp32 accumulation,
+K is kept whole per tile (d_model/d_ff sized — fits VMEM alongside the
+blk_m x blk_n accumulator).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _gmm_kernel(group_map_ref, lhs_ref, rhs_ref, out_ref):
+    out_ref[...] = jax.lax.dot_general(
+        lhs_ref[...].astype(jnp.float32),
+        rhs_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=F32,
+    ).astype(out_ref.dtype)
+
+
+def gmm(
+    lhs: jax.Array,  # (M, K) rows sorted by group; group boundaries % blk_m == 0
+    rhs: jax.Array,  # (G, K, N)
+    group_map: jax.Array,  # (M // blk_m,) int32: m-block -> group id
+    *, blk_m: int = 128, blk_n: int = 128, interpret: bool = True,
+) -> jax.Array:
+    M, K = lhs.shape
+    G, K2, N = rhs.shape
+    assert K == K2, (K, K2)
+    blk_m = min(blk_m, M)
+    blk_n = min(blk_n, N)
+    assert M % blk_m == 0 and N % blk_n == 0, (M, blk_m, N, blk_n)
+    assert group_map.shape == (M // blk_m,), group_map.shape
+
+    grid = (M // blk_m, N // blk_n)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((blk_m, K), lambda i, j, gm: (i, 0)),
+                pl.BlockSpec((1, K, blk_n), lambda i, j, gm: (gm[i], 0, j)),
+            ],
+            out_specs=pl.BlockSpec((blk_m, blk_n), lambda i, j, gm: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), lhs.dtype),
+        interpret=interpret,
+    )(group_map, lhs, rhs)
+
+
+def pad_group_sizes_to_blocks(group_sizes: jax.Array, blk_m: int, cap: int):
+    """Host-side helper (static shapes): given per-group row counts that are
+    already multiples of blk_m, produce the m-block -> group map."""
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    blocks = jnp.arange(cap // blk_m) * blk_m
+    # group of a block = number of groups whose start <= block offset, minus 1
+    gm = jnp.sum(blocks[:, None] >= starts[None, :], axis=1) - 1
+    return jnp.clip(gm, 0, group_sizes.shape[0] - 1).astype(jnp.int32)

@@ -1,0 +1,142 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+* ``flash_attention`` — differentiable (custom_vjp over the fwd/bwd kernels),
+  accepts model-layout (B, S, H, D) tensors with GQA broadcast, folds heads
+  into the grid dim.
+* ``decode_attention_op`` — model-layout decode step.
+* ``rglru_op`` / ``mlstm_op`` — recurrence wrappers.
+* ``moe_gmm_op`` — grouped matmul with block padding.
+
+``interpret`` defaults to True off-TPU (this container validates kernels on
+CPU via the Pallas interpreter); on a TPU backend the same code compiles to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import mlstm as _ml
+from . import moe_gmm as _gmm
+from . import rglru as _rg
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ==========================================================================
+# Flash attention (differentiable)
+# ==========================================================================
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, blk_q, blk_k):
+    o, _ = _fa.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
+        interpret=default_interpret(),
+    )
+    return o
+
+
+def _flash_fwd(q, k, v, causal, window, blk_q, blk_k):
+    o, lse = _fa.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
+        interpret=default_interpret(),
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, blk_q, blk_k, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _fa.flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, interpret=default_interpret(),
+    )
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    *, causal: bool = True, window: int = 0, blk_q: int = 128, blk_k: int = 128,
+) -> jax.Array:
+    """Model-layout flash attention with GQA broadcast. Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, G, D)).reshape(B, S, H, D)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (B, S, KV, G, D)).reshape(B, S, H, D)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    o = _flash(fold(q), fold(k), fold(v), causal, window, blk_q, blk_k)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+# ==========================================================================
+# Decode attention
+# ==========================================================================
+def decode_attention_op(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, T, KV, D)
+    v_cache: jax.Array,
+    k_pos: jax.Array,  # (T,)
+    cur_pos: jax.Array,
+    *, window: int = 0, blk_k: int = 256,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    o = _dec.decode_attention(
+        qf, kf, vf, k_pos, cur_pos, window=window, blk_k=blk_k,
+        interpret=default_interpret(),
+    )
+    return o.reshape(B, KV, G, D).reshape(B, 1, H, D)
+
+
+# ==========================================================================
+# Recurrences
+# ==========================================================================
+def rglru_op(a: jax.Array, b: jax.Array, h0: jax.Array | None = None, **kw) -> jax.Array:
+    return _rg.rglru_scan_kernel(a, b, h0, interpret=default_interpret(), **kw)
+
+
+def mlstm_op(
+    q: jax.Array,  # (B, S, nh, dh) NOT pre-scaled
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,  # (B, S, nh)
+    f_pre: jax.Array,
+    *, chunk: int = 64,
+) -> jax.Array:
+    B, S, nh, dh = q.shape
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * nh, S, dh)
+    foldg = lambda x: x.transpose(0, 2, 1).reshape(B * nh, S)
+    h = _ml.mlstm_chunk_kernel(
+        fold(q), fold(k), fold(v), foldg(i_pre), foldg(f_pre),
+        chunk=chunk, interpret=default_interpret(),
+    )
+    return h.reshape(B, nh, S, dh).transpose(0, 2, 1, 3)
+
+
+# ==========================================================================
+# MoE grouped matmul
+# ==========================================================================
+def moe_gmm_op(
+    lhs: jax.Array,  # (M, K), rows sorted by group, boundaries % blk_m == 0
+    rhs: jax.Array,  # (G, K, N)
+    group_sizes: jax.Array,  # (G,) multiples of blk_m summing to M
+    *, blk_m: int = 128, blk_n: int = 128,
+) -> jax.Array:
+    M = lhs.shape[0]
+    gm = _gmm.pad_group_sizes_to_blocks(group_sizes, blk_m, M)
+    return _gmm.gmm(lhs, rhs, gm, blk_m=blk_m, blk_n=blk_n, interpret=default_interpret())

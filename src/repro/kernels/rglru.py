@@ -1,0 +1,73 @@
+"""Blocked RG-LRU linear-recurrence kernel.
+
+GPU implementations use warp-level scans; TPU has no warp shuffle, so the
+adaptation is a *blocked sequential* scan: the grid is (B, D/blk_d, T/blk_t)
+with the time dimension innermost (sequential on TPU), the carry h
+(blk_d lanes) living in VMEM scratch across time blocks, and an unrolled
+elementwise FMA loop inside each (blk_t, blk_d) tile. Lanes (d) are the
+vector dimension — the VPU processes 8x128 vregs per step; there is no
+cross-lane dependency, so the only serialization is over time, exactly the
+recurrence's data dependency.
+
+Computes h_t = a_t * h_{t-1} + b_t given precomputed (a, b); the gate math
+(sigmoids, softplus) stays in XLA where it fuses with the projections.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hcarry, *, blk_t, unroll):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        hcarry[...] = h0_ref[0].astype(F32)
+
+    a = a_ref[0].astype(F32)  # (blk_t, blk_d)
+    b = b_ref[0].astype(F32)
+    h = hcarry[...]  # (blk_d,)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, blk_t, step, h, unroll=unroll)
+    hcarry[...] = h
+
+
+def rglru_scan_kernel(
+    a: jax.Array,  # (B, T, D) decay in (0,1)
+    b: jax.Array,  # (B, T, D) gated input
+    h0: jax.Array | None = None,  # (B, D) initial state
+    *, blk_t: int = 256, blk_d: int = 256, unroll: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    B, T, D = a.shape
+    blk_t = min(blk_t, T)
+    blk_d = min(blk_d, D)
+    assert T % blk_t == 0 and D % blk_d == 0, (T, blk_t, D, blk_d)
+    if h0 is None:
+        h0 = jnp.zeros((B, D), F32)
+
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, blk_t=blk_t, unroll=unroll),
+        grid=(B, D // blk_d, T // blk_t),
+        in_specs=[
+            pl.BlockSpec((1, blk_t, blk_d), lambda b_, d, t: (b_, t, d)),
+            pl.BlockSpec((1, blk_t, blk_d), lambda b_, d, t: (b_, t, d)),
+            pl.BlockSpec((1, blk_d), lambda b_, d, t: (b_, d)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_t, blk_d), lambda b_, d, t: (b_, t, d)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), a.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_d,), F32)],
+        interpret=interpret,
+    )(a, b, h0)

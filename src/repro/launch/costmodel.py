@@ -1,0 +1,278 @@
+"""Analytic per-cell cost model: FLOPs and HBM bytes per device per step.
+
+WHY ANALYTIC: XLA's ``compiled.cost_analysis()`` counts every while-loop
+body exactly ONCE (verified in tests/test_roofline.py with a trip-count
+sweep), and this framework deliberately scans layers/microbatches, so raw
+cost_analysis under-reports large models by 2-3 orders of magnitude. The
+roofline therefore uses this explicit op-accounting model, validated against
+XLA ground truth on a fully-unrolled small cell (whisper-tiny; see
+EXPERIMENTS.md §Dry-run validation), with raw cost_analysis numbers recorded
+alongside for transparency. Collective bytes ARE taken from the HLO, with a
+loop-aware parser that multiplies by scan trip counts (roofline.py).
+
+Conventions:
+  * flops count multiply+add as 2
+  * attention is causal: average K length = T/2 (window: min(window, T/2))
+  * backward = 2x forward; full remat adds one extra forward of the scanned
+    stack (the unembed/xent sits outside the remat scope)
+  * per-device numbers divide global totals by the chip count — SPMD keeps
+    per-chip work uniform for every sharding profile we emit
+  * HBM traffic is a napkin model: weight bytes per pass, optimizer/grad
+    state traffic, residual-stream activations (K_ACT tensor-passes per
+    layer), KV-cache reads for decode, logits traffic for the chunked xent
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+K_ACT_FWD = 16  # residual-stream tensor passes per layer, forward
+K_ACT_BWD = 32  # and backward
+
+
+# ==========================================================================
+# FLOPs
+# ==========================================================================
+def _attn_flops(cfg: ModelConfig, T: float, kv_len: float, causal: bool) -> float:
+    """GQA attention for T query tokens against kv_len keys (per layer)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    proj = 2 * T * d * (nq * hd) * 2 + 2 * T * d * (nkv * hd) * 2  # q,o + k,v
+    eff_kv = kv_len / 2 if causal else kv_len
+    core = 2 * 2 * T * eff_kv * nq * hd  # scores + AV
+    return proj + core
+
+
+def _mla_flops(cfg: ModelConfig, T: float, kv_len: float, decode: bool) -> float:
+    m = cfg.mla
+    d, nq = cfg.d_model, cfg.n_heads
+    qk = m.nope_dim + m.rope_dim
+    fl = 2 * T * d * m.q_lora + 2 * T * m.q_lora * nq * qk  # q path
+    fl += 2 * T * d * (m.kv_lora + m.rope_dim)  # kv down
+    if decode:
+        # absorbed: q_abs, scores vs ckv+rope, ctx, v_b expansion, o
+        fl += 2 * T * nq * m.nope_dim * m.kv_lora
+        fl += 2 * T * kv_len * nq * (m.kv_lora + m.rope_dim)
+        fl += 2 * T * kv_len * nq * m.kv_lora
+        fl += 2 * T * nq * m.kv_lora * m.v_dim
+    else:
+        eff = kv_len / 2
+        fl += 2 * T * m.kv_lora * nq * (m.nope_dim + m.v_dim)  # k_b, v_b
+        fl += 2 * 2 * T * eff * nq * qk  # scores+AV (v_dim~nope_dim)
+    fl += 2 * T * (nq * m.v_dim) * d  # o proj
+    return fl
+
+
+def _moe_flops(cfg: ModelConfig, T: float) -> float:
+    mo = cfg.moe
+    d = cfg.d_model
+    fl = 2 * T * d * mo.n_experts  # router
+    fl += 6 * T * mo.top_k * d * mo.d_ff_expert  # routed experts (3 matmuls)
+    fl += 6 * T * d * (mo.n_shared * mo.d_ff_expert)  # shared experts
+    return fl
+
+
+def _mlp_flops(cfg: ModelConfig, T: float, d_ff: int | None = None) -> float:
+    return 6 * T * cfg.d_model * (d_ff or cfg.d_ff)
+
+
+def _rglru_flops(cfg: ModelConfig, T: float) -> float:
+    d, dr, K = cfg.d_model, cfg.d_rnn, cfg.conv_width
+    fl = 2 * T * d * dr * 2  # two input projections
+    fl += 2 * T * dr * dr * 2  # two gate matmuls
+    fl += 2 * T * K * dr + 10 * T * dr  # conv + scan elementwise
+    fl += 2 * T * dr * d  # out projection
+    return fl
+
+
+def _mlstm_flops(cfg: ModelConfig, T: float, chunk: int = 64) -> float:
+    d = cfg.d_model
+    dp = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    dh = dp // nh
+    L = max(1, min(chunk, int(T) or 1))
+    fl = 2 * T * d * dp * 2  # up projections
+    fl += 2 * T * cfg.conv_width * dp
+    fl += 3 * 2 * T * dh * dp  # block-diag qkv
+    fl += 2 * 2 * T * dp * nh / dp * 0  # gates negligible
+    # chunked core: intra (scores+AV over L) + inter/state (dh^2 per token x2)
+    fl += T * nh * (4 * L * dh + 4 * dh * dh)
+    fl += 2 * T * dp * d  # down
+    return fl
+
+
+def _slstm_flops(cfg: ModelConfig, T: float) -> float:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ffs = int(cfg.slstm_proj_factor * d)
+    fl = 2 * T * d * 4 * d  # W gates
+    fl += 8 * T * d * dh  # recurrent R per step (4 gates, block-diag)
+    fl += 6 * T * d * ffs  # post FFN
+    return fl
+
+
+def _block_flops(cfg: ModelConfig, kind: str, T: float, kv_len: float, decode: bool) -> float:
+    causal = True
+    if kind in ("attn_mlp", "attn_moe"):
+        if cfg.attn_kind == "mla":
+            a = _mla_flops(cfg, T, kv_len, decode)
+        else:
+            a = _attn_flops(cfg, T, kv_len, causal and not decode)
+            if decode:  # decode attends full cache, not half
+                a += 2 * 2 * T * (kv_len / 2) * cfg.n_heads * cfg.resolved_head_dim
+        f = _moe_flops(cfg, T) if kind == "attn_moe" else _mlp_flops(cfg, T)
+        return a + f
+    if kind == "local_attn":
+        eff = min(cfg.window_size, kv_len)
+        a = _attn_flops(cfg, T, 2 * eff if decode else min(2 * eff, kv_len), True)
+        return a + _mlp_flops(cfg, T)
+    if kind == "rglru":
+        return _rglru_flops(cfg, T) + _mlp_flops(cfg, T)
+    if kind == "mlstm":
+        return _mlstm_flops(cfg, T)
+    if kind == "slstm":
+        return _slstm_flops(cfg, T)
+    if kind == "cross_attn_mlp":
+        a = _attn_flops(cfg, T, kv_len, not decode)
+        # cross attention: q/o projections on T, scores vs enc_seq
+        x = 2 * T * cfg.d_model * cfg.n_heads * cfg.resolved_head_dim * 2
+        x += 2 * 2 * T * cfg.enc_seq * cfg.n_heads * cfg.resolved_head_dim
+        return a + x + _mlp_flops(cfg, T)
+    raise ValueError(kind)
+
+
+def _layers(cfg: ModelConfig) -> list[str]:
+    return list(cfg.first_blocks) + list(cfg.block_pattern) * cfg.n_pattern_groups
+
+
+def forward_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global forward FLOPs of one step of this cell."""
+    decode = shape.kind == "decode"
+    B = shape.global_batch
+    if decode:
+        T = float(B)  # one token per sequence
+        kv_len = float(shape.seq_len)
+    else:
+        T = float(shape.tokens)
+        kv_len = float(shape.seq_len)
+    fl = sum(_block_flops(cfg, k, T, kv_len, decode) for k in _layers(cfg))
+    fl += 2 * T * cfg.d_model * cfg.padded_vocab  # unembed
+    if cfg.enc_dec and not decode:
+        enc_T = float(B * cfg.enc_seq)
+        enc_fl = _attn_flops(cfg, enc_T, cfg.enc_seq, causal=False) + _mlp_flops(cfg, enc_T)
+        fl += cfg.n_enc_layers * enc_fl
+    if cfg.prefix_len and not decode:
+        fl += 2 * B * cfg.prefix_len * cfg.d_model * cfg.d_model  # prefix proj
+    return fl
+
+
+def cell_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    f = forward_flops(cfg, shape)
+    if shape.kind != "train":
+        return f
+    factor = 3.0  # fwd + bwd
+    if cfg.remat == "full":
+        factor += 1.0  # recompute of the scanned stack; xent ~unrematted (small vs total)
+    return factor * f
+
+
+# ==========================================================================
+# HBM bytes
+# ==========================================================================
+def param_bytes(cfg: ModelConfig) -> int:
+    from repro.models import lm as _lm
+    from repro.models.schema import count_params
+
+    return count_params(_lm.model_schema(cfg))
+
+
+def cell_bytes_per_device(
+    cfg: ModelConfig, shape: ShapeConfig, chips: int, int8_moments: bool = False
+) -> float:
+    """Per-device HBM traffic of one step (napkin model, documented above)."""
+    n_params = param_bytes(cfg)
+    d = cfg.d_model
+    n_layers = len(_layers(cfg))
+    V = cfg.padded_vocab
+
+    if shape.kind == "train":
+        n_micro = max(1, cfg.train_microbatches)
+        T_loc = shape.tokens / chips
+        T_micro = T_loc / n_micro
+        passes = 3.0 + (1.0 if cfg.remat == "full" else 0.0)
+        w = n_params * BF16 / chips  # weights fully sharded (ZeRO-1/3) once gathered
+        weights = n_micro * passes * w
+        opt = n_params / chips * ((4 + 1 + 1) * 2 if int8_moments else (4 + 4 + 4) * 2)
+        grads = n_micro * n_params / chips * 2 * F32
+        acts = n_micro * n_layers * (K_ACT_FWD + K_ACT_BWD) * T_micro * d * BF16
+        logits = n_micro * 3 * T_micro * V * BF16
+        return weights + opt + grads + acts + logits
+
+    if shape.kind == "prefill":
+        T_loc = shape.tokens / chips
+        weights = n_params * BF16 / chips
+        acts = n_layers * K_ACT_FWD * T_loc * d * BF16
+        kv_write = _decode_state_bytes(cfg, shape) / chips
+        logits = 3 * (shape.global_batch / chips) * V * BF16  # last position only
+        return weights + acts + kv_write + logits
+
+    # decode: weights + full cache read + small activations
+    B_loc = shape.global_batch / chips
+    weights = n_params * BF16 / chips
+    cache = _decode_state_bytes(cfg, shape) / chips * 2  # read + write-back
+    acts = n_layers * K_ACT_FWD * B_loc * d * BF16
+    logits = 3 * B_loc * V * BF16
+    return weights + cache + acts + logits
+
+
+def _decode_state_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global bytes of the decode state (KV caches / recurrent states)."""
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    total = 0.0
+    for kind in _layers(cfg):
+        if kind in ("attn_mlp", "attn_moe"):
+            if cfg.attn_kind == "mla":
+                total += B * S * (cfg.mla.kv_lora + cfg.mla.rope_dim) * BF16
+            else:
+                total += 2 * B * S * cfg.n_kv_heads * hd * BF16
+        elif kind == "local_attn":
+            total += 2 * B * min(cfg.window_size, S) * cfg.n_kv_heads * hd * BF16
+        elif kind == "rglru":
+            total += B * cfg.d_rnn * F32 + B * (cfg.conv_width - 1) * cfg.d_rnn * F32
+        elif kind == "mlstm":
+            dp = int(cfg.mlstm_proj_factor * cfg.d_model)
+            nh = cfg.n_heads
+            dh = dp // nh
+            total += B * nh * (dh * dh + dh + 1) * F32 + B * (cfg.conv_width - 1) * dp * F32
+        elif kind == "slstm":
+            total += 4 * B * cfg.d_model * F32
+        elif kind == "cross_attn_mlp":
+            total += 2 * B * S * cfg.n_kv_heads * hd * BF16
+            total += 2 * B * cfg.enc_seq * cfg.n_kv_heads * hd * BF16
+    return total
+
+
+@dataclass
+class AnalyticCost:
+    flops_total: float
+    flops_per_device: float
+    bytes_per_device: float
+    state_bytes_total: float
+
+
+def analytic_cost(
+    cfg: ModelConfig, shape: ShapeConfig, chips: int, int8_moments: bool = False
+) -> AnalyticCost:
+    fl = cell_flops(cfg, shape)
+    return AnalyticCost(
+        flops_total=fl,
+        flops_per_device=fl / chips,
+        bytes_per_device=cell_bytes_per_device(cfg, shape, chips, int8_moments),
+        state_bytes_total=_decode_state_bytes(cfg, shape),
+    )

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")  # SPMD warning floods
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, WITHOUT allocating any real tensors
+(ShapeDtypeStruct stand-ins everywhere):
+
+  * a compiled SPMD executable for the production mesh,
+  * ``compiled.memory_analysis()``  -> proves the cell fits per-device HBM,
+  * ``compiled.cost_analysis()``    -> per-device FLOPs/bytes for §Roofline,
+  * the post-SPMD HLO collective schedule -> collective bytes for §Roofline.
+
+The full 40-cell sweep is itself a Memento configuration matrix (the
+paper's technique orchestrating its own evaluation): results are cached by
+task hash under ``results/dryrun`` — interrupt and re-run freely.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all                 # single-pod sweep
+  python -m repro.launch.dryrun --all --multipod      # 2-pod sweep
+  python -m repro.launch.dryrun --all --both          # both meshes
+"""
+import argparse
+import json
+import time
+import traceback
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    ModelConfig,
+    ShapeConfig,
+    shape_applicable,
+)
+from repro.configs.registry import get_config, list_archs
+from repro.core import ConfigMatrix, ConsoleNotificationProvider, Context, Memento, RunnerConfig
+from repro.launch import costmodel as cm
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.models import lm
+from repro.models.schema import count_params, is_spec
+from repro.serve.step import (
+    decode_state_specs,
+    make_decode_step,
+    make_prefill_step,
+    serve_param_specs,
+    token_specs,
+)
+from repro.sharding.rules import ShardingCtx, get_profile
+from repro.train.step import batch_specs, make_train_setup, make_train_step
+
+RESULTS_DIR = Path(os.environ.get("REPRO_RESULTS", "results")) / "dryrun"
+
+
+# ==========================================================================
+# Cell definition
+# ==========================================================================
+def profile_name_for(cfg: ModelConfig, shape: ShapeConfig, override: str = "") -> str:
+    if override:
+        return override
+    if shape.kind in ("train", "prefill"):
+        return cfg.train_profile or cfg.sharding_profile
+    if shape.name == "long_500k":
+        return "decode_long"
+    return cfg.decode_profile or "decode_default"
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params that do math for one token (MODEL_FLOPS = 6 * N_active * D)."""
+    schema = lm.model_schema(cfg)
+    total = count_params(schema)
+    # Embedding gather costs no FLOPs; tied unembed still does the matmul.
+    total -= cfg.padded_vocab * cfg.d_model
+    if cfg.tie_embeddings:
+        total += cfg.padded_vocab * cfg.d_model
+    if cfg.moe is not None:
+        n_moe_layers = sum(
+            1 for k in cfg.first_blocks if k == "attn_moe"
+        ) + cfg.n_pattern_groups * sum(1 for k in cfg.block_pattern if k == "attn_moe")
+        per_expert = 3 * cfg.d_model * cfg.moe.d_ff_expert
+        total -= n_moe_layers * (cfg.moe.n_experts - cfg.moe.top_k) * per_expert
+    return int(total)
+
+
+@dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    profile: str
+    ok: bool
+    compile_s: float = 0.0
+    error: str = ""
+    roofline: dict[str, Any] | None = None
+    memory: dict[str, Any] | None = None
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, profile_override: str = ""
+) -> CellResult:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    applicable, why = shape_applicable(cfg, shape)
+    if not applicable:
+        return CellResult(arch, shape_name, mesh_name, "-", ok=True, error=f"SKIP: {why}")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pname = profile_name_for(cfg, shape, profile_override)
+    sctx = ShardingCtx(mesh=mesh, profile=get_profile(pname))
+    chips = mesh_chip_count(mesh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            setup = make_train_setup(cfg, shape, sctx)
+            fn = make_train_step(setup)
+            args = (setup.abstract_state(), setup.abstract_batch())
+            lowered = jax.jit(fn, donate_argnums=(0,)).lower(*args)
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(cfg, sctx)
+            params = serve_param_specs(cfg, sctx)
+            args = (params, batch_specs(cfg, shape, sctx))
+            lowered = jax.jit(fn).lower(*args)
+        else:  # decode
+            fn = make_decode_step(cfg, sctx)
+            params = serve_param_specs(cfg, sctx)
+            states = decode_state_specs(cfg, shape, sctx)
+            args = (params, states, token_specs(shape, sctx))
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(*args)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    memory = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+    }
+    per_device_bytes = (
+        memory["argument_bytes"] + memory["temp_bytes"] + memory["output_bytes"]
+        - memory["alias_bytes"]
+    )
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    raw_flops = float(ca.get("flops", 0.0))
+    raw_bytes = float(ca.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    coll = rf.parse_collectives(hlo, chips)
+    cost = cm.analytic_cost(cfg, shape, chips)
+
+    roof = rf.Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops_per_device=cost.flops_per_device,
+        hlo_bytes_per_device=cost.bytes_per_device,
+        raw_cost_analysis_flops=raw_flops,
+        raw_cost_analysis_bytes=raw_bytes,
+        collective_bytes_per_device=coll.per_device_bytes,
+        model_flops=rf.model_flops(cfg, shape, active_param_count(cfg)),
+        per_device_memory_bytes=per_device_bytes,
+        op_bytes=coll.op_bytes,
+        op_counts=coll.op_counts,
+    )
+    return CellResult(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        profile=pname,
+        ok=True,
+        compile_s=compile_s,
+        roofline=roof.to_dict(),
+        memory=memory,
+    )
+
+
+# ==========================================================================
+# Memento-orchestrated sweep
+# ==========================================================================
+def dryrun_exp(ctx: Context) -> dict[str, Any]:
+    """The Memento experiment function: one dry-run cell per task."""
+    try:
+        res = run_cell(
+            ctx["arch"], ctx["shape"], ctx["multi_pod"], ctx.settings.get("profile", "")
+        )
+    except Exception as e:  # captured into the result, run continues
+        res = CellResult(
+            ctx["arch"], ctx["shape"], "2x16x16" if ctx["multi_pod"] else "16x16",
+            "-", ok=False, error=f"{type(e).__qualname__}: {e}\n{traceback.format_exc()}",
+        )
+    return res.__dict__
+
+
+def config_revision(archs) -> str:
+    """Fingerprint of every arch config + sharding profile, so the Memento
+    cache key changes whenever the configuration (not just the cell name)
+    changes — stale-result reuse is impossible by construction."""
+    from repro.core.hashing import stable_hash
+    from repro.sharding.rules import PROFILES
+
+    payload = {
+        "configs": {a: get_config(a) for a in archs},
+        "profiles": {k: (v.rules, v.zero1, v.fsdp_params) for k, v in PROFILES.items()},
+    }
+    return stable_hash(payload)[:16]
+
+
+def sweep_matrix(meshes: list[bool], archs=None, shapes=None) -> dict[str, Any]:
+    archs = archs or list_archs()
+    shapes = shapes or [s.name for s in ALL_SHAPES]
+    exclude = []
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            appl, _ = shape_applicable(cfg, SHAPES_BY_NAME[s])
+            if not appl:
+                # Keep skipped cells OUT of the compile queue; they are
+                # reported as skipped rows by the report generator.
+                for mp in meshes:
+                    exclude.append({"arch": a, "shape": s, "multi_pod": mp})
+    return {
+        "parameters": {
+            "arch": archs,
+            "shape": shapes,
+            "multi_pod": meshes,
+            "rev": [config_revision(archs)],
+        },
+        "settings": {},
+        "exclude": exclude,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both", action="store_true", help="single-pod AND multi-pod")
+    ap.add_argument("--all", action="store_true", help="full sweep via Memento")
+    ap.add_argument("--profile", default="", help="sharding profile override")
+    ap.add_argument("--force", action="store_true", help="ignore the result cache")
+    ap.add_argument("--workers", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.all or (not args.arch):
+        meshes = [False, True] if args.both else [args.multipod]
+        matrix = sweep_matrix(meshes)
+        if args.profile:
+            matrix["settings"]["profile"] = args.profile
+        eng = Memento(
+            dryrun_exp,
+            ConsoleNotificationProvider(),
+            workdir=str(RESULTS_DIR),
+            runner_config=RunnerConfig(
+                max_workers=args.workers, retries=0, enable_speculation=False
+            ),
+        )
+        results = eng.run(matrix, force=args.force)
+        rows, failed, skipped = [], [], []
+        for r in results:
+            if not r.ok:
+                failed.append(r)
+                continue
+            v = r.value
+            if v.get("error", "").startswith("SKIP"):
+                skipped.append(v)
+            elif v.get("roofline"):
+                rows.append(v)
+            else:
+                failed.append(r)
+        print(f"\n=== dry-run sweep: {len(rows)} compiled, {len(skipped)} skipped, "
+              f"{len(failed)} failed ===")
+        for v in rows:
+            rl = v["roofline"]
+            print(
+                f"  {v['arch']:26s} {v['shape']:12s} {v['mesh']:9s} {v['profile']:15s} "
+                f"compile={v['compile_s']:6.1f}s bottleneck={rl['bottleneck']:10s} "
+                f"mem/dev={rl['per_device_memory_bytes']/2**30:6.2f}GiB"
+            )
+        for v in skipped:
+            print(f"  {v['arch']:26s} {v['shape']:12s} SKIPPED ({v['error'][6:]})")
+        for r in failed:
+            err = r.error or (r.value or {}).get("error", "")
+            print(f"  FAILED {r.spec.params}: {str(err)[:400]}")
+        raise SystemExit(1 if failed else 0)
+
+    res = run_cell(args.arch, args.shape, args.multipod, args.profile)
+    print(json.dumps(res.__dict__, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

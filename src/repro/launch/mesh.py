@@ -1,0 +1,46 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). Single pod = 256 chips as (16, 16) -> ("data", "model");
+multi-pod = 2 x 256 as (2, 16, 16) -> ("pod", "data", "model").
+
+The dry-run launcher sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; everything else (tests, benches) sees the real single
+CPU device and uses ``make_test_mesh``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} are "
+            "visible. The dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import (repro/launch/dryrun.py does this)."
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0) -> Mesh:
+    """Small mesh over however many devices exist (CPU tests: 1x1)."""
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"test mesh {shape} needs {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,421 @@
+"""Attention: GQA/MQA/MHA (+qk-norm, +qkv-bias, windows, prefix-LM, cross)
+and DeepSeek-style MLA with compressed-KV decode.
+
+Three execution modes share one weight schema:
+  * ``train``   — full-sequence, query-block-chunked softmax attention (the
+                  XLA-native flash equivalent; the Pallas kernel is the TPU
+                  hot path, selected with backend="pallas")
+  * ``prefill`` — train-mode math + returns the KV cache
+  * ``decode``  — one query token against the cache (ring buffer for
+                  windowed layers so 500k-context hybrids stay O(window))
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import F32, apply_rope, cdt, rmsnorm, rmsnorm_schema
+from repro.models.schema import ParamSpec
+from repro.sharding.rules import ShardingCtx, constrain
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# Schemas
+# ==========================================================================
+def gqa_schema(cfg: ModelConfig, cross: bool = False) -> dict[str, Any]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    sch: dict[str, Any] = {
+        "wq": ParamSpec((d, nq, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, nkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((nq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = ParamSpec((nq, hd), ("heads", "head_dim"), init="zeros")
+        sch["bk"] = ParamSpec((nkv, hd), ("kv_heads", "head_dim"), init="zeros")
+        sch["bv"] = ParamSpec((nkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        sch["q_norm"] = {"scale": ParamSpec((hd,), (None,), init="ones")}
+        sch["k_norm"] = {"scale": ParamSpec((hd,), (None,), init="ones")}
+    return sch
+
+
+def mla_schema(cfg: ModelConfig) -> dict[str, Any]:
+    m = cfg.mla
+    d, nq = cfg.d_model, cfg.n_heads
+    qk = m.nope_dim + m.rope_dim
+    return {
+        "wq_a": ParamSpec((d, m.q_lora), ("embed", "q_lora")),
+        "q_norm": {"scale": ParamSpec((m.q_lora,), (None,), init="ones")},
+        "wq_b": ParamSpec((m.q_lora, nq, qk), ("q_lora", "heads", "head_dim")),
+        "wkv_a": ParamSpec((d, m.kv_lora + m.rope_dim), ("embed", "kv_lora")),
+        "kv_norm": {"scale": ParamSpec((m.kv_lora,), (None,), init="ones")},
+        "wk_b": ParamSpec((m.kv_lora, nq, m.nope_dim), ("kv_lora", "heads", "head_dim")),
+        "wv_b": ParamSpec((m.kv_lora, nq, m.v_dim), ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((nq, m.v_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def attention_schema(cfg: ModelConfig, cross: bool = False) -> dict[str, Any]:
+    if cfg.attn_kind == "mla" and not cross:
+        return mla_schema(cfg)
+    return gqa_schema(cfg, cross=cross)
+
+
+# ==========================================================================
+# Caches
+# ==========================================================================
+class KVCache(NamedTuple):
+    """Dense GQA cache. ``k``/``v``: (B, S_max, n_kv, hd). For windowed layers
+    S_max == window and writes wrap (ring buffer)."""
+
+    k: jax.Array
+    v: jax.Array
+
+
+class MLACache(NamedTuple):
+    """Compressed cache: ``ckv``: (B, S_max, kv_lora); ``krope``: (B, S_max, rope_dim)."""
+
+    ckv: jax.Array
+    krope: jax.Array
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int, windowed: bool) -> dict[str, ParamSpec]:
+    hd = cfg.resolved_head_dim
+    length = min(cfg.window_size, s_max) if windowed and cfg.window_size else s_max
+    seq_axis = "window" if windowed and cfg.window_size else "kv_seq"
+    return {
+        "k": ParamSpec((batch, length, cfg.n_kv_heads, hd), ("batch", seq_axis, "kv_heads", "head_dim"), dtype=jnp.bfloat16, init="zeros"),
+        "v": ParamSpec((batch, length, cfg.n_kv_heads, hd), ("batch", seq_axis, "kv_heads", "head_dim"), dtype=jnp.bfloat16, init="zeros"),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int) -> dict[str, ParamSpec]:
+    m = cfg.mla
+    return {
+        "ckv": ParamSpec((batch, s_max, m.kv_lora), ("batch", "kv_seq", "kv_lora"), dtype=jnp.bfloat16, init="zeros"),
+        "krope": ParamSpec((batch, s_max, m.rope_dim), ("batch", "kv_seq", None), dtype=jnp.bfloat16, init="zeros"),
+    }
+
+
+# ==========================================================================
+# Masking
+# ==========================================================================
+def _mask(
+    q_pos: jax.Array,  # (Q,) int32 absolute positions
+    k_pos: jax.Array,  # (K,)
+    kind: str,  # causal | bidir | prefix | window
+    window: int = 0,
+    prefix_len: int = 0,
+    k_valid: jax.Array | None = None,  # (K,) bool extra validity (ring buffers)
+) -> jax.Array:
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    if kind == "bidir":
+        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    elif kind == "causal":
+        m = k <= q
+    elif kind == "prefix":
+        m = (k <= q) | (k < prefix_len)
+    elif kind == "window":
+        m = (k <= q) & (k > q - window)
+    else:
+        raise ValueError(f"unknown mask kind {kind}")
+    if k_valid is not None:
+        m = m & k_valid[None, :]
+    return m
+
+
+# ==========================================================================
+# Core softmax attention (query-block chunked — XLA flash equivalent)
+# ==========================================================================
+def _sdpa_chunked(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, KV, D)
+    v: jax.Array,  # (B, T, KV, Dv)
+    q_pos: jax.Array,  # (S,)
+    k_pos: jax.Array,  # (T,)
+    mask_kind: str,
+    cfg: ModelConfig,
+    sctx: ShardingCtx,
+    window: int = 0,
+    prefix_len: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV  # queries per kv head
+    sc = scale if scale is not None else D ** -0.5
+    # KV heads are broadcast to the full H layout so the contraction keeps a
+    # single head axis. With heads TP-sharded, a (KV, G) split would force
+    # XLA to reshard inside the chunk loop (measured: per-chunk all-reduces);
+    # the broadcast fuses into the dot and keeps TP to one all-reduce at the
+    # o-projection.
+    if G > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, KV, G, D)).reshape(B, T, H, D)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (B, T, KV, G, Dv)).reshape(B, T, H, Dv)
+    k = constrain(k, ("batch", None, "heads", None), sctx)
+    v = constrain(v, ("batch", None, "heads", None), sctx)
+    # Query-chunk size adapts to a fp32-score budget so long-context prefill
+    # can never materialise a multi-GB score block on one chip.
+    b_loc = sctx.local_size(B, "batch")
+    h_loc = sctx.local_size(H, "heads")
+    budget = 256 * 2**20
+    fit = budget // max(b_loc * h_loc * T * 4, 1)
+    chunk = max(1, min(cfg.attn_q_chunk, S, max(64, int(fit))))
+
+    def block(qb: jax.Array, qpb: jax.Array) -> jax.Array:
+        # qb: (B, C, H, D)
+        s = jnp.einsum("bchd,bthd->bhct", qb, k, preferred_element_type=F32) * sc
+        m = _mask(qpb, k_pos, mask_kind, window=window, prefix_len=prefix_len)
+        s = jnp.where(m[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhct,bthe->bche", p.astype(cdt(cfg)), v, preferred_element_type=F32)
+        return o.astype(cdt(cfg))  # (B, C, H, Dv)
+
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+    outs = []
+    if n_chunks > 0:
+        qs = q[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, H, D)
+        qs = jnp.moveaxis(qs, 1, 0)  # (n, B, C, H, D)
+        qp = q_pos[: n_chunks * chunk].reshape(n_chunks, chunk)
+        if bool(int(os.environ.get("REPRO_UNROLL_SCANS", "0"))):
+            o = jnp.stack([block(qs[i], qp[i]) for i in range(n_chunks)])
+        else:
+            o = jax.lax.map(lambda args: block(*args), (qs, qp))
+        outs.append(jnp.moveaxis(o, 0, 1).reshape(B, n_chunks * chunk, H, Dv))
+    if rem:
+        outs.append(block(q[:, n_chunks * chunk :], q_pos[n_chunks * chunk :]))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    return out
+
+
+def _sdpa_decode(
+    q: jax.Array,  # (B, 1, H, D)
+    k: jax.Array,  # (B, T, KV, D)
+    v: jax.Array,  # (B, T, KV, Dv)
+    k_pos: jax.Array,  # (T,) absolute positions held in the cache slots
+    cur_pos: jax.Array,  # scalar: position of the query token
+    cfg: ModelConfig,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    B, _, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    Dv = v.shape[-1]
+    sc = scale if scale is not None else D ** -0.5
+    if G > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, KV, G, D)).reshape(B, T, H, D)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (B, T, KV, G, Dv)).reshape(B, T, H, Dv)
+    qh = q.reshape(B, H, D)
+    s = jnp.einsum("bhd,bthd->bht", qh, k, preferred_element_type=F32) * sc
+    valid = (k_pos <= cur_pos) & (k_pos >= 0)
+    if window:
+        valid = valid & (k_pos > cur_pos - window)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bht,bthe->bhe", p.astype(cdt(cfg)), v, preferred_element_type=F32)
+    return o.reshape(B, 1, H, Dv).astype(cdt(cfg))
+
+
+# ==========================================================================
+# GQA attention block
+# ==========================================================================
+def _project_qkv(p, cfg, x, xkv=None):
+    dt = cdt(cfg)
+    xkv = x if xkv is None else xkv
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt), preferred_element_type=dt)
+    k = jnp.einsum("bsd,dhe->bshe", xkv, p["wk"].astype(dt), preferred_element_type=dt)
+    v = jnp.einsum("bsd,dhe->bshe", xkv, p["wv"].astype(dt), preferred_element_type=dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_attention(
+    p: dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d)
+    *,
+    mode: str,  # train | prefill | decode
+    positions: jax.Array,  # (S,) absolute positions of x's tokens
+    mask_kind: str = "causal",
+    window: int = 0,
+    prefix_len: int = 0,
+    cache: KVCache | None = None,
+    cur_pos: jax.Array | None = None,  # scalar, decode only
+    use_rope: bool = True,
+    sctx: ShardingCtx,
+) -> tuple[jax.Array, KVCache | None]:
+    dt = cdt(cfg)
+    q, k, v = _project_qkv(p, cfg, x)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None), sctx)
+
+    new_cache: KVCache | None = None
+    use_pallas = (
+        cfg.attn_backend == "pallas"
+        and mode != "decode"
+        and mask_kind in ("causal", "bidir")
+        and not (cfg.prefix_lm and cfg.prefix_len)
+        and x.shape[1] % min(128, x.shape[1]) == 0
+    )
+    if mode == "decode":
+        assert cache is not None and cur_pos is not None
+        T = cache.k.shape[1]
+        slot = cur_pos % T if window else cur_pos
+        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        ck = constrain(ck, ("batch", "window" if window else "kv_seq", "kv_heads", "head_dim"), sctx)
+        cv = constrain(cv, ("batch", "window" if window else "kv_seq", "kv_heads", "head_dim"), sctx)
+        new_cache = KVCache(ck, cv)
+        # Positions held by each cache slot, derived analytically:
+        #   full cache: slot i holds position i;
+        #   ring buffer: slot i holds the latest p <= cur_pos with p % T == i
+        #   (negative -> never written; masked in _sdpa_decode).
+        idx = jnp.arange(T, dtype=jnp.int32)
+        if window:
+            k_pos = cur_pos - ((cur_pos - idx) % T)
+        else:
+            k_pos = idx
+        out = _sdpa_decode(q, ck.astype(dt), cv.astype(dt), k_pos, cur_pos, cfg, window=window)
+    else:
+        if mode == "prefill":
+            new_cache = KVCache(k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+        kind = "window" if window else mask_kind
+        if use_pallas:
+            # TPU hot path: the Pallas flash kernel (fwd + bwd custom_vjp).
+            from repro.kernels import ops as _kops
+
+            blk = min(128, q.shape[1])
+            out = _kops.flash_attention(
+                q, k, v, causal=(kind != "bidir"), window=window,
+                blk_q=blk, blk_k=blk,
+            )
+        else:
+            out = _sdpa_chunked(
+                q, k, v, positions, positions, kind, cfg, sctx,
+                window=window, prefix_len=prefix_len,
+            )
+    # Row-parallel o-projection: bf16 output => bf16 TP all-reduce.
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt), preferred_element_type=dt)
+    return constrain(y.astype(dt), ("batch", "seq", "embed_act"), sctx), new_cache
+
+
+def cross_attention(
+    p: dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d) decoder states
+    enc_kv: KVCache,  # precomputed from encoder output
+    sctx: ShardingCtx,
+) -> jax.Array:
+    """Decoder->encoder attention (bidirectional over encoder frames)."""
+    dt = cdt(cfg)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt), preferred_element_type=F32).astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    B, S, H, D = q.shape
+    k, v = enc_kv.k.astype(dt), enc_kv.v.astype(dt)
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, S, KV, G, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qh, k, preferred_element_type=F32) * (D ** -0.5)
+    pmat = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btke->bskge", pmat.astype(dt), v, preferred_element_type=F32)
+    o = o.reshape(B, S, H, D).astype(dt)
+    y = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(dt), preferred_element_type=F32)
+    return constrain(y.astype(dt), ("batch", "seq", "embed_act"), sctx)
+
+
+def encoder_kv(p: dict[str, Any], cfg: ModelConfig, enc_out: jax.Array) -> KVCache:
+    dt = cdt(cfg)
+    k = jnp.einsum("btd,dhe->bthe", enc_out, p["wk"].astype(dt), preferred_element_type=F32).astype(jnp.bfloat16)
+    v = jnp.einsum("btd,dhe->bthe", enc_out, p["wv"].astype(dt), preferred_element_type=F32).astype(jnp.bfloat16)
+    if cfg.qkv_bias:
+        k = (k.astype(dt) + p["bk"].astype(dt)).astype(jnp.bfloat16)
+        v = (v.astype(dt) + p["bv"].astype(dt)).astype(jnp.bfloat16)
+    return KVCache(k, v)
+
+
+# ==========================================================================
+# MLA (DeepSeek-V2)
+# ==========================================================================
+def mla_attention(
+    p: dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cache: MLACache | None = None,
+    cur_pos: jax.Array | None = None,
+    sctx: ShardingCtx,
+) -> tuple[jax.Array, MLACache | None]:
+    m = cfg.mla
+    dt = cdt(cfg)
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+
+    # Query path: low-rank down -> norm -> up, split nope/rope.
+    q_c = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt), preferred_element_type=F32).astype(dt)
+    q_c = rmsnorm(p["q_norm"], q_c, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", q_c, p["wq_b"].astype(dt), preferred_element_type=F32).astype(dt)
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # KV path: compressed latent + shared rope key.
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt), preferred_element_type=F32).astype(dt)
+    ckv, k_rope = kv[..., : m.kv_lora], kv[..., m.kv_lora :]
+    ckv = rmsnorm(p["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B, S, rope)
+
+    new_cache: MLACache | None = None
+    if mode == "decode":
+        assert cache is not None and cur_pos is not None
+        ckv_all = jax.lax.dynamic_update_slice(cache.ckv, ckv.astype(cache.ckv.dtype), (0, cur_pos, 0))
+        krope_all = jax.lax.dynamic_update_slice(cache.krope, k_rope.astype(cache.krope.dtype), (0, cur_pos, 0))
+        ckv_all = constrain(ckv_all, ("batch", "kv_seq", "kv_lora"), sctx)
+        new_cache = MLACache(ckv_all, krope_all)
+        # Absorbed decode: score against the compressed cache directly.
+        q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["wk_b"].astype(dt), preferred_element_type=F32).astype(dt)
+        s = jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(dt), preferred_element_type=F32)
+        s = s + jnp.einsum("bshe,bte->bhst", q_rope, krope_all.astype(dt), preferred_element_type=F32)
+        T = cache.ckv.shape[1]
+        valid = jnp.arange(T) <= cur_pos
+        s = jnp.where(valid[None, None, None, :], s * scale, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx_c = jnp.einsum("bhst,btr->bshr", pr.astype(dt), ckv_all.astype(dt), preferred_element_type=F32).astype(dt)
+        o = jnp.einsum("bshr,rhe->bshe", ctx_c, p["wv_b"].astype(dt), preferred_element_type=F32).astype(dt)
+    else:
+        k_nope = jnp.einsum("bsr,rhe->bshe", ckv, p["wk_b"].astype(dt), preferred_element_type=F32).astype(dt)
+        v = jnp.einsum("bsr,rhe->bshe", ckv, p["wv_b"].astype(dt), preferred_element_type=F32).astype(dt)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.rope_dim))], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa_chunked(
+            q_full, k_full, v, positions, positions, "causal", cfg, sctx, scale=scale
+        )
+        o = out
+        if mode == "prefill":
+            new_cache = MLACache(ckv.astype(jnp.bfloat16), k_rope.astype(jnp.bfloat16))
+    y = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(dt), preferred_element_type=F32)
+    return constrain(y.astype(dt), ("batch", "seq", "embed_act"), sctx), new_cache

@@ -1,0 +1,340 @@
+"""Block assembly: pre-norm residual blocks of every kind, plus the scanned
+pattern-group machinery that turns 26..88-layer stacks into a single
+``lax.scan`` over stacked weights (fast compiles, one remat lever).
+
+A config's layer stack = ``first_blocks`` (unscanned, e.g. DeepSeek-V2's
+dense layer 0) followed by ``n_pattern_groups`` repetitions of
+``block_pattern`` (scanned). Each pattern element owns its params stacked on
+a leading "layer" axis.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec_mod
+from repro.models.attention import KVCache, MLACache
+from repro.models.layers import cdt, mlp, mlp_schema, rmsnorm, rmsnorm_schema
+from repro.models.recurrent import MLSTMState, RGLRUState, SLSTMState
+from repro.models.schema import ParamSpec, stack_specs
+from repro.sharding.rules import ShardingCtx
+
+F32 = jnp.float32
+
+
+# ==========================================================================
+# Per-kind schemas
+# ==========================================================================
+def block_schema(cfg: ModelConfig, kind: str) -> dict[str, Any]:
+    d = cfg.d_model
+    if kind in ("attn_mlp", "local_attn"):
+        return {
+            "ln1": rmsnorm_schema(d),
+            "attn": attn_mod.attention_schema(cfg),
+            "ln2": rmsnorm_schema(d),
+            "mlp": mlp_schema(cfg),
+        }
+    if kind == "attn_moe":
+        return {
+            "ln1": rmsnorm_schema(d),
+            "attn": attn_mod.attention_schema(cfg),
+            "ln2": rmsnorm_schema(d),
+            "moe": moe_mod.moe_schema(cfg),
+        }
+    if kind == "rglru":
+        return {
+            "ln1": rmsnorm_schema(d),
+            "rec": rec_mod.rglru_schema(cfg),
+            "ln2": rmsnorm_schema(d),
+            "mlp": mlp_schema(cfg),
+        }
+    if kind == "mlstm":
+        return {"ln": rmsnorm_schema(d), "core": rec_mod.mlstm_schema(cfg)}
+    if kind == "slstm":
+        return {"ln": rmsnorm_schema(d), "core": rec_mod.slstm_schema(cfg)}
+    if kind == "cross_attn_mlp":
+        return {
+            "ln1": rmsnorm_schema(d),
+            "attn": attn_mod.gqa_schema(cfg),
+            "ln_x": rmsnorm_schema(d),
+            "xattn": attn_mod.gqa_schema(cfg, cross=True),
+            "ln2": rmsnorm_schema(d),
+            "mlp": mlp_schema(cfg),
+        }
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def block_state_schema(
+    cfg: ModelConfig, kind: str, batch: int, s_max: int
+) -> dict[str, Any] | None:
+    """Decode-state schema for one block (None when stateless)."""
+    if kind in ("attn_mlp", "attn_moe"):
+        if cfg.attn_kind == "mla":
+            return attn_mod.init_mla_cache(cfg, batch, s_max)
+        return attn_mod.init_kv_cache(cfg, batch, s_max, windowed=False)
+    if kind == "local_attn":
+        return attn_mod.init_kv_cache(cfg, batch, s_max, windowed=True)
+    if kind == "rglru":
+        return rec_mod.init_rglru_state(cfg, batch)
+    if kind == "mlstm":
+        return rec_mod.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return rec_mod.init_slstm_state(cfg, batch)
+    if kind == "cross_attn_mlp":
+        self_c = attn_mod.init_kv_cache(cfg, batch, s_max, windowed=False)
+        hd = cfg.resolved_head_dim
+        cross_c = {
+            "k": ParamSpec((batch, cfg.enc_seq, cfg.n_kv_heads, hd), ("batch", "frames", "kv_heads", "head_dim"), dtype=jnp.bfloat16, init="zeros"),
+            "v": ParamSpec((batch, cfg.enc_seq, cfg.n_kv_heads, hd), ("batch", "frames", "kv_heads", "head_dim"), dtype=jnp.bfloat16, init="zeros"),
+        }
+        return {"self": self_c, "cross": cross_c}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _state_to_struct(kind: str, cfg: ModelConfig, raw: dict[str, Any] | None):
+    """Wrap a raw state dict into the typed containers the block fns expect."""
+    if raw is None:
+        return None
+    if kind in ("attn_mlp", "attn_moe"):
+        if cfg.attn_kind == "mla":
+            return MLACache(ckv=raw["ckv"], krope=raw["krope"])
+        return KVCache(k=raw["k"], v=raw["v"])
+    if kind == "local_attn":
+        return KVCache(k=raw["k"], v=raw["v"])
+    if kind == "rglru":
+        return RGLRUState(h=raw["h"], conv=raw["conv"])
+    if kind == "mlstm":
+        return MLSTMState(C=raw["C"], n=raw["n"], m=raw["m"], conv=raw["conv"])
+    if kind == "slstm":
+        return SLSTMState(c=raw["c"], n=raw["n"], h=raw["h"], m=raw["m"])
+    if kind == "cross_attn_mlp":
+        return {
+            "self": KVCache(k=raw["self"]["k"], v=raw["self"]["v"]),
+            "cross": KVCache(k=raw["cross"]["k"], v=raw["cross"]["v"]),
+        }
+    raise ValueError(kind)
+
+
+def _state_to_raw(kind: str, cfg: ModelConfig, st) -> dict[str, Any] | None:
+    if st is None:
+        return None
+    if isinstance(st, KVCache):
+        return {"k": st.k, "v": st.v}
+    if isinstance(st, MLACache):
+        return {"ckv": st.ckv, "krope": st.krope}
+    if isinstance(st, RGLRUState):
+        return {"h": st.h, "conv": st.conv}
+    if isinstance(st, MLSTMState):
+        return {"C": st.C, "n": st.n, "m": st.m, "conv": st.conv}
+    if isinstance(st, SLSTMState):
+        return {"c": st.c, "n": st.n, "h": st.h, "m": st.m}
+    if isinstance(st, dict) and "self" in st:
+        return {
+            "self": {"k": st["self"].k, "v": st["self"].v},
+            "cross": {"k": st["cross"].k, "v": st["cross"].v},
+        }
+    raise ValueError(f"unexpected state {type(st)}")
+
+
+# ==========================================================================
+# Block application
+# ==========================================================================
+class BlockIO(NamedTuple):
+    x: jax.Array
+    aux: jax.Array  # accumulated aux loss (MoE load balance)
+
+
+def apply_block(
+    p: dict[str, Any],
+    cfg: ModelConfig,
+    kind: str,
+    io: BlockIO,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cur_pos: jax.Array | None,
+    state_raw: dict[str, Any] | None,
+    mask_kind: str,
+    sctx: ShardingCtx,
+    enc_out: jax.Array | None = None,
+) -> tuple[BlockIO, dict[str, Any] | None]:
+    x, aux = io
+    st = _state_to_struct(kind, cfg, state_raw)
+    eps = cfg.norm_eps
+    new_st = None
+
+    if kind in ("attn_mlp", "attn_moe", "local_attn"):
+        window = cfg.window_size if kind == "local_attn" else 0
+        h = rmsnorm(p["ln1"], x, eps)
+        if cfg.attn_kind == "mla" and kind != "local_attn":
+            a, new_st = attn_mod.mla_attention(
+                p["attn"], cfg, h, mode=mode, positions=positions,
+                cache=st, cur_pos=cur_pos, sctx=sctx,
+            )
+        else:
+            a, new_st = attn_mod.gqa_attention(
+                p["attn"], cfg, h, mode=mode, positions=positions,
+                mask_kind=mask_kind, window=window,
+                prefix_len=cfg.prefix_len if cfg.prefix_lm else 0,
+                cache=st, cur_pos=cur_pos,
+                sctx=sctx,
+            )
+        x = x + a
+        h = rmsnorm(p["ln2"], x, eps)
+        if kind == "attn_moe":
+            f, moe_aux = moe_mod.moe_ffn(p["moe"], cfg, h, sctx)
+            aux = aux + moe_aux
+        else:
+            f = mlp(p["mlp"], cfg, h, sctx)
+        x = x + f
+
+    elif kind == "rglru":
+        h = rmsnorm(p["ln1"], x, eps)
+        r, new_st = rec_mod.rglru_block(p["rec"], cfg, h, mode=mode, state=st, sctx=sctx)
+        x = x + r
+        h = rmsnorm(p["ln2"], x, eps)
+        x = x + mlp(p["mlp"], cfg, h, sctx)
+
+    elif kind == "mlstm":
+        h = rmsnorm(p["ln"], x, eps)
+        r, new_st = rec_mod.mlstm_block(p["core"], cfg, h, mode=mode, state=st, sctx=sctx)
+        x = x + r
+
+    elif kind == "slstm":
+        h = rmsnorm(p["ln"], x, eps)
+        r, new_st = rec_mod.slstm_block(p["core"], cfg, h, mode=mode, state=st, sctx=sctx)
+        x = x + r
+
+    elif kind == "cross_attn_mlp":
+        h = rmsnorm(p["ln1"], x, eps)
+        a, new_self = attn_mod.gqa_attention(
+            p["attn"], cfg, h, mode=mode, positions=positions, mask_kind="causal",
+            cache=st["self"] if st else None,
+            cur_pos=cur_pos, sctx=sctx,
+        )
+        x = x + a
+        h = rmsnorm(p["ln_x"], x, eps)
+        if mode == "decode":
+            assert st is not None and "cross" in st, "decode needs a prefilled encoder cache"
+            cross_kv = st["cross"]
+        else:
+            assert enc_out is not None, "enc-dec train/prefill needs encoder output"
+            cross_kv = attn_mod.encoder_kv(p["xattn"], cfg, enc_out)
+        x = x + attn_mod.cross_attention(p["xattn"], cfg, h, cross_kv, sctx)
+        h = rmsnorm(p["ln2"], x, eps)
+        x = x + mlp(p["mlp"], cfg, h, sctx)
+        if mode in ("prefill", "decode"):
+            new_st = {
+                "self": new_self if new_self is not None else (st["self"] if st else None),
+                "cross": cross_kv,
+            }
+        else:
+            new_st = None
+
+    else:
+        raise ValueError(kind)
+
+    return BlockIO(x=x, aux=aux), _state_to_raw(kind, cfg, new_st)
+
+
+# ==========================================================================
+# Stacks: first blocks (unscanned) + pattern groups (scanned)
+# ==========================================================================
+def stack_schema(cfg: ModelConfig) -> dict[str, Any]:
+    sch: dict[str, Any] = {}
+    if cfg.first_blocks:
+        sch["first"] = {
+            f"b{i}": block_schema(cfg, k) for i, k in enumerate(cfg.first_blocks)
+        }
+    n_groups = cfg.n_pattern_groups
+    sch["groups"] = {
+        f"g{i}": stack_specs(block_schema(cfg, k), n_groups)
+        for i, k in enumerate(cfg.block_pattern)
+    }
+    return sch
+
+
+def stack_state_schema(cfg: ModelConfig, batch: int, s_max: int) -> dict[str, Any]:
+    sch: dict[str, Any] = {}
+    if cfg.first_blocks:
+        sch["first"] = {
+            f"b{i}": block_state_schema(cfg, k, batch, s_max)
+            for i, k in enumerate(cfg.first_blocks)
+        }
+    n_groups = cfg.n_pattern_groups
+    sch["groups"] = {
+        f"g{i}": stack_specs(block_state_schema(cfg, k, batch, s_max), n_groups)
+        for i, k in enumerate(cfg.block_pattern)
+    }
+    return sch
+
+
+def apply_stack(
+    params: dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cur_pos: jax.Array | None = None,
+    states: dict[str, Any] | None = None,
+    mask_kind: str = "causal",
+    sctx: ShardingCtx,
+    enc_out: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, dict[str, Any] | None]:
+    """Run the whole layer stack. Returns (x, aux_loss, new_states)."""
+    io = BlockIO(x=x, aux=jnp.zeros((), F32))
+    new_states: dict[str, Any] = {"first": {}, "groups": {}}
+    want_states = mode in ("prefill", "decode")
+
+    # -- unscanned prefix blocks ------------------------------------------
+    for i, kind in enumerate(cfg.first_blocks):
+        key = f"b{i}"
+        st = states["first"][key] if states is not None else None
+        io, new_st = apply_block(
+            params["first"][key], cfg, kind, io, mode=mode, positions=positions,
+            cur_pos=cur_pos, state_raw=st,
+            mask_kind=mask_kind, sctx=sctx, enc_out=enc_out,
+        )
+        if want_states:
+            new_states["first"][key] = new_st
+
+    # -- scanned pattern groups -------------------------------------------
+    def group_body(carry: BlockIO, per_layer):
+        g_params, g_states = per_layer
+        new_group_states = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"g{i}"
+            st = g_states[key] if g_states is not None else None
+            carry, new_st = apply_block(
+                g_params[key], cfg, kind, carry, mode=mode, positions=positions,
+                cur_pos=cur_pos, state_raw=st,
+                mask_kind=mask_kind, sctx=sctx, enc_out=enc_out,
+            )
+            new_group_states[key] = new_st
+        return carry, (new_group_states if want_states else None)
+
+    body = group_body
+    if cfg.remat == "full" and mode == "train":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    g_states_in = states["groups"] if states is not None else None
+    # REPRO_UNROLL_SCANS=1: fully unroll so XLA cost_analysis (which counts
+    # while bodies once) sees every layer — used to validate the analytic
+    # cost model on small cells (EXPERIMENTS.md SS Dry-run validation).
+    unroll = bool(int(os.environ.get("REPRO_UNROLL_SCANS", "0")))
+    io, scanned_states = jax.lax.scan(
+        body, io, (params["groups"], g_states_in), unroll=True if unroll else 1
+    )
+    if want_states:
+        new_states["groups"] = scanned_states
+    if not cfg.first_blocks:
+        new_states.pop("first", None)
+    return io.x, io.aux, (new_states if want_states else None)

@@ -1,0 +1,193 @@
+"""Unified model API over every assigned architecture.
+
+  * ``model_schema(cfg)``            — full parameter schema
+  * ``decode_state_schema(cfg, B, S)`` — per-layer decode states + step counter
+  * ``forward_train(params, cfg, batch, sctx)`` — (loss, metrics)
+  * ``prefill(params, cfg, batch, sctx)``       — (last_logits, states)
+  * ``decode_step(params, cfg, states, token, sctx)`` — (logits, new states)
+
+``batch`` dict keys by family:
+  lm:    tokens (B,S) int32, labels (B,S) int32
+  vlm:   + prefix_embeds (B, P, d)   (SigLIP stub output)
+  audio: + enc_embeds (B, T_enc, d)  (conv-frontend stub output)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
+from repro.models.layers import (
+    F32,
+    cdt,
+    chunked_softmax_xent,
+    embed_tokens,
+    embedding_schema,
+    logits_for_positions,
+    rmsnorm,
+    rmsnorm_schema,
+    unembed_weight,
+)
+from repro.models.schema import ParamSpec
+from repro.sharding.rules import ShardingCtx, constrain
+
+
+# ==========================================================================
+# Schemas
+# ==========================================================================
+def model_schema(cfg: ModelConfig) -> dict[str, Any]:
+    cfg.validate()
+    sch: dict[str, Any] = {
+        "embed": embedding_schema(cfg),
+        "stack": blk.stack_schema(cfg),
+        "final_norm": rmsnorm_schema(cfg.d_model),
+    }
+    if cfg.enc_dec:
+        enc_cfg = _encoder_cfg(cfg)
+        sch["encoder"] = {
+            "stack": blk.stack_schema(enc_cfg),
+            "final_norm": rmsnorm_schema(cfg.d_model),
+        }
+    if cfg.prefix_len:
+        # Projection applied to the (stubbed) modality embeddings.
+        sch["prefix_proj"] = ParamSpec((cfg.d_model, cfg.d_model), ("embed", None))
+    return sch
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    from dataclasses import replace
+
+    return replace(
+        cfg,
+        name=cfg.name + "-enc",
+        n_layers=cfg.n_enc_layers,
+        block_pattern=("attn_mlp",),
+        first_blocks=(),
+        enc_dec=False,
+        moe=None if cfg.moe is None else cfg.moe,
+    )
+
+
+def decode_state_schema(cfg: ModelConfig, batch: int, s_max: int) -> dict[str, Any]:
+    return {
+        "layers": blk.stack_state_schema(cfg, batch, s_max),
+        "pos": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+# ==========================================================================
+# Shared forward trunk
+# ==========================================================================
+def _embed_inputs(
+    params: dict[str, Any], cfg: ModelConfig, batch: dict[str, Any], sctx: ShardingCtx
+) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """Returns (x (B,S,d), positions (S,), enc_out or None)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], cfg, tokens, sctx)
+    x = x * jnp.asarray(cfg.d_model**0.5, cdt(cfg))
+
+    if cfg.prefix_len:
+        pe = batch["prefix_embeds"].astype(cdt(cfg))
+        pe = jnp.einsum("bpd,de->bpe", pe, params["prefix_proj"].astype(cdt(cfg)))
+        x = jnp.concatenate([pe, x], axis=1)
+
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    enc_out = None
+    if cfg.enc_dec:
+        enc_cfg = _encoder_cfg(cfg)
+        e = batch["enc_embeds"].astype(cdt(cfg))
+        e, _, _ = blk.apply_stack(
+            params["encoder"]["stack"], enc_cfg, e, mode="train",
+            positions=jnp.arange(e.shape[1], dtype=jnp.int32),
+            mask_kind="bidir", sctx=sctx,
+        )
+        enc_out = rmsnorm(params["encoder"]["final_norm"], e, cfg.norm_eps)
+    return x, positions, enc_out
+
+
+def _mask_kind(cfg: ModelConfig) -> str:
+    return "prefix" if cfg.prefix_lm else "causal"
+
+
+# ==========================================================================
+# Training
+# ==========================================================================
+def forward_train(
+    params: dict[str, Any], cfg: ModelConfig, batch: dict[str, Any], sctx: ShardingCtx
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    x, positions, enc_out = _embed_inputs(params, cfg, batch, sctx)
+    x, aux, _ = blk.apply_stack(
+        params["stack"], cfg, x, mode="train", positions=positions,
+        mask_kind=_mask_kind(cfg), sctx=sctx, enc_out=enc_out,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    labels = batch["labels"]
+    if cfg.prefix_len:
+        # Image/prefix positions carry no LM loss.
+        pad = jnp.full((labels.shape[0], cfg.prefix_len), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    w = unembed_weight(params["embed"], cfg)
+    loss_sum, n_tok = chunked_softmax_xent(x, w, labels, cfg, sctx)
+    xent = loss_sum / jnp.maximum(n_tok, 1.0)
+    loss = xent + aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux, "tokens": n_tok}
+
+
+# ==========================================================================
+# Prefill / decode
+# ==========================================================================
+def prefill(
+    params: dict[str, Any], cfg: ModelConfig, batch: dict[str, Any], sctx: ShardingCtx
+) -> tuple[jax.Array, dict[str, Any]]:
+    x, positions, enc_out = _embed_inputs(params, cfg, batch, sctx)
+    S = x.shape[1]
+    x, _, states = blk.apply_stack(
+        params["stack"], cfg, x, mode="prefill", positions=positions,
+        mask_kind=_mask_kind(cfg), sctx=sctx, enc_out=enc_out,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_for_positions(
+        x[:, -1:, :], unembed_weight(params["embed"], cfg), cfg, sctx
+    )
+    states = {"layers": states, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, states
+
+
+def _pad_prefill_states(
+    cfg: ModelConfig, states: dict[str, Any], s_max: int
+) -> dict[str, Any]:
+    """Grow prefill caches (length S) to the serving cache length s_max."""
+
+    def grow(path: tuple, leaf: jax.Array) -> jax.Array:
+        return leaf
+
+    return states  # caches are allocated at prefill length; engine re-pads
+
+
+def decode_step(
+    params: dict[str, Any],
+    cfg: ModelConfig,
+    states: dict[str, Any],
+    token: jax.Array,  # (B, 1) int32
+    sctx: ShardingCtx,
+    prefix_embeds: jax.Array | None = None,
+) -> tuple[jax.Array, dict[str, Any]]:
+    cur_pos = states["pos"]
+    x = embed_tokens(params["embed"], cfg, token, sctx)
+    x = x * jnp.asarray(cfg.d_model**0.5, cdt(cfg))
+    positions = cur_pos[None].astype(jnp.int32)
+
+    x, _, new_states = blk.apply_stack(
+        params["stack"], cfg, x, mode="decode", positions=positions,
+        cur_pos=cur_pos,
+        states=states["layers"], mask_kind=_mask_kind(cfg), sctx=sctx,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_for_positions(x, unembed_weight(params["embed"], cfg), cfg, sctx)
+    return logits, {"layers": new_states, "pos": cur_pos + 1}

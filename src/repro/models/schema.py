@@ -1,0 +1,148 @@
+"""Declarative parameter schemas.
+
+A model's parameters are described once as a pytree of :class:`ParamSpec`
+(shape + dtype + logical sharding axes + initializer). From that single
+source of truth we derive:
+
+  * ``init_params``      — real arrays for CPU smoke tests / small trainings
+  * ``abstract_params``  — ShapeDtypeStructs with NamedShardings for the
+                           multi-pod dry-run (no allocation, ever)
+  * ``pspec_tree``       — in/out shardings for pjit
+  * ``count_params``     — exact parameter counts (roofline MODEL_FLOPS)
+
+Keeping shapes and logical axes in one record is what guarantees the dry-run
+shardings can never drift from what the training code actually does.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import ShardingCtx, ShardingProfile, pspec_for
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float | None = None
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"ParamSpec shape {self.shape} / axes {self.axes} mismatch")
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_specs(tree: Any, fn: Callable[[ParamSpec], Any]) -> Any:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1]))
+
+
+def init_params(schema: Any, key: jax.Array, dtype: Any = None) -> Any:
+    """Materialise real arrays (smoke tests / real small trainings)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def one(spec: ParamSpec, k: jax.Array) -> jax.Array:
+        dt = dtype or spec.dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        if spec.init == "embed":
+            scale = spec.scale if spec.scale is not None else 1.0
+            return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt)
+        scale = spec.scale
+        if scale is None:
+            scale = 1.0 / np.sqrt(max(_fan_in(spec.shape), 1))
+        if spec.init == "small":
+            scale = scale * 0.1
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt)
+
+    out = [one(spec, k) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def pspec_tree(schema: Any, ctx: ShardingCtx, extra_leading: tuple[str | None, ...] = ()) -> Any:
+    """PartitionSpecs for every param (optionally with stacked leading axes)."""
+
+    def one(spec: ParamSpec) -> P:
+        if ctx.mesh is None:
+            return P()
+        return pspec_for(spec.shape, spec.axes, ctx.profile, ctx.mesh)
+
+    return _map_specs(schema, one)
+
+
+def abstract_params(schema: Any, ctx: ShardingCtx, dtype: Any = None) -> Any:
+    """ShapeDtypeStructs with shardings attached — the dry-run's 'weights'."""
+
+    def one(spec: ParamSpec) -> jax.ShapeDtypeStruct:
+        dt = dtype or spec.dtype
+        if ctx.mesh is None:
+            return jax.ShapeDtypeStruct(spec.shape, dt)
+        sharding = NamedSharding(
+            ctx.mesh, pspec_for(spec.shape, spec.axes, ctx.profile, ctx.mesh)
+        )
+        return jax.ShapeDtypeStruct(spec.shape, dt, sharding=sharding)
+
+    return _map_specs(schema, one)
+
+
+def count_params(schema: Any) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_spec)
+    return int(sum(l.size for l in leaves))
+
+
+def stack_specs(schema: Any, n: int, axis_name: str | None = "layer") -> Any:
+    """Stack a per-layer schema ``n`` times along a new leading 'layer' dim.
+
+    Used for scanned blocks: params live as (n_layers, ...) arrays so the
+    layer loop is a single ``lax.scan`` over the leading axis.
+    """
+
+    def one(spec: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            shape=(n,) + spec.shape,
+            axes=(axis_name,) + spec.axes,
+            dtype=spec.dtype,
+            init=spec.init,
+            scale=spec.scale,
+        )
+
+    return _map_specs(schema, one)
+
+
+def cast_tree(tree: Any, dtype: Any) -> Any:
+    return jax.tree.map(lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree)
+
+
+def tree_bytes(tree: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total

@@ -1,0 +1,123 @@
+"""Batched serving engine: prefill -> iterative decode with ring/window and
+recurrent states, greedy or temperature sampling, per-sequence stop.
+
+The engine owns the non-jitted policy (request batching, sampling, stop
+conditions, cache sizing); the jitted hot path is ``serve.step`` exactly as
+lowered by the dry-run, so what we benchmark is what serves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serve.step import init_decode_state
+from repro.sharding.rules import ShardingCtx
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    cache_len: int = 256  # decode cache slots (>= prompt + new tokens for dense)
+    temperature: float = 0.0  # 0 => greedy
+    stop_token: int = -1  # -1 => never stop early
+    seed: int = 0
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, <=max_new_tokens)
+    steps: int
+    prefill_logits: np.ndarray
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Any, sctx: ShardingCtx, serve: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.sctx = sctx
+        self.serve = serve
+        self._prefill = jax.jit(lambda p, b: lm.prefill(p, cfg, b, sctx))
+        self._decode = jax.jit(lambda p, s, t: lm.decode_step(p, cfg, s, t, sctx))
+
+    # -- state surgery -------------------------------------------------------
+    def _grow_states(self, states: dict[str, Any], prompt_len: int, batch: int) -> dict[str, Any]:
+        """Move prefill caches (length S) into serving caches (cache_len).
+
+        Dense caches are left-aligned; window ring buffers are filled so slot
+        ``p % W`` holds position p for the last W prompt positions; recurrent
+        states copy through untouched.
+        """
+        target = init_decode_state(self.cfg, batch, self.serve.cache_len, start_pos=prompt_len)
+
+        def graft(dst, src):
+            if isinstance(dst, dict) and isinstance(src, dict):
+                return {k: graft(dst[k], src[k]) for k in dst}
+            d, s = jnp.asarray(dst), jnp.asarray(src)
+            if d.shape == s.shape:
+                return s
+            if d.ndim != s.ndim:
+                raise ValueError(f"cannot graft cache {s.shape} -> {d.shape}")
+            diff = [i for i in range(d.ndim) if d.shape[i] != s.shape[i]]
+            if len(diff) != 1:
+                raise ValueError(f"cannot graft cache {s.shape} -> {d.shape}")
+            ax = diff[0]  # the cache-sequence axis (works for stacked groups too)
+            dm = jnp.moveaxis(d, ax, 0)
+            sm = jnp.moveaxis(s, ax, 0)
+            W = dm.shape[0]
+            if sm.shape[0] >= W:
+                # ring buffer: the last W prompt positions land at slot p % W
+                tail = sm[-W:]
+                pos = jnp.arange(prompt_len - W, prompt_len) % W
+                dm = dm.at[pos].set(tail.astype(dm.dtype))
+            else:
+                # dense cache longer than the prompt: left-aligned
+                dm = dm.at[: sm.shape[0]].set(sm.astype(dm.dtype))
+            return jnp.moveaxis(dm, 0, ax)
+
+        grafted = graft(target["layers"], states["layers"])
+        return {"layers": grafted, "pos": jnp.asarray(prompt_len, jnp.int32)}
+
+    # -- generation ---------------------------------------------------------
+    def generate(self, batch: dict[str, Any]) -> GenerationResult:
+        cfg, serve = self.cfg, self.serve
+        B = batch["tokens"].shape[0]
+        prompt_len = batch["tokens"].shape[1] + (cfg.prefix_len or 0)
+        assert prompt_len + serve.max_new_tokens <= serve.cache_len or cfg.supports_long_context or cfg.window_size, (
+            f"cache_len {serve.cache_len} too small for {prompt_len}+{serve.max_new_tokens}"
+        )
+        logits, states = self._prefill(self.params, batch)
+        states = self._grow_states(states, prompt_len, B)
+
+        key = jax.random.PRNGKey(serve.seed)
+        tok = self._sample(logits[:, -1], key)
+        out = [np.asarray(tok)[:, 0]]
+        done = np.zeros(B, bool)
+        steps = 1
+        for i in range(serve.max_new_tokens - 1):
+            logits, states = self._decode(self.params, states, tok)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1], sub)
+            col = np.asarray(tok)[:, 0]
+            out.append(col)
+            steps += 1
+            if serve.stop_token >= 0:
+                done |= col == serve.stop_token
+                if done.all():
+                    break
+        return GenerationResult(
+            tokens=np.stack(out, axis=1), steps=steps, prefill_logits=np.asarray(logits)
+        )
+
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        logits = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
+        if self.serve.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.serve.temperature, axis=-1)[
+            :, None
+        ].astype(jnp.int32)

@@ -1,0 +1,73 @@
+"""Serving step factories: prefill and single-token decode.
+
+``decode``/``long`` shapes lower these (never train_step). Params are bf16
+(no masters/optimizer); decode states follow the arch's decode sharding
+profile (KV seq over model when kv-heads can't split; recurrent state
+matrices over (data, model) for the batch=1 500k cell).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.models.schema import ParamSpec, abstract_params, init_params, is_spec
+from repro.sharding.rules import ShardingCtx, pspec_for
+
+
+def serve_param_specs(cfg: ModelConfig, sctx: ShardingCtx) -> Any:
+    """bf16 serving weights (abstract)."""
+    schema = lm.model_schema(cfg)
+    return abstract_params(schema, sctx, dtype=jnp.bfloat16)
+
+
+def decode_state_specs(
+    cfg: ModelConfig, shape: ShapeConfig, sctx: ShardingCtx
+) -> Any:
+    schema = lm.decode_state_schema(cfg, shape.global_batch, shape.seq_len)
+    return abstract_params(schema, sctx)
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, s_max: int, start_pos: int = 0
+) -> dict[str, Any]:
+    """Real zeroed decode state (smoke tests / serving engine)."""
+    schema = lm.decode_state_schema(cfg, batch, s_max)
+    state = init_params(schema, jax.random.PRNGKey(0))
+    state["pos"] = jnp.asarray(start_pos, jnp.int32)
+    return state
+
+
+def token_specs(shape: ShapeConfig, sctx: ShardingCtx) -> jax.ShapeDtypeStruct:
+    B = shape.global_batch
+    if sctx.mesh is None:
+        return jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return jax.ShapeDtypeStruct(
+        (B, 1),
+        jnp.int32,
+        sharding=NamedSharding(
+            sctx.mesh, pspec_for((B, 1), ("batch", None), sctx.profile, sctx.mesh)
+        ),
+    )
+
+
+def make_decode_step(cfg: ModelConfig, sctx: ShardingCtx) -> Callable:
+    def serve_step(params, states, token):
+        logits, new_states = lm.decode_step(params, cfg, states, token, sctx)
+        # Greedy next token: keeps the lowered program end-to-end (sampling
+        # strategies live in the engine, not the hot step).
+        next_tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, logits, new_states
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, sctx: ShardingCtx) -> Callable:
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, sctx)
+
+    return prefill_step

@@ -1,0 +1,98 @@
+"""Training loop wired into Memento checkpointing + the checkpoint store.
+
+A training run is a Memento *task*: the loop checkpoints sharded state every
+``ckpt_every`` steps (async), heartbeats the task lease, and on restart
+``Context.restore``/CheckpointStore pick up at the last complete step with
+the data pipeline resuming deterministically from the step counter. Kill the
+process at any point and re-run: the task's identity (config hash) routes it
+back to the same checkpoint directory.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ckpt.store import CheckpointStore
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.task import Context
+from repro.data.pipeline import DataConfig, Prefetcher, make_batch_fn
+from repro.sharding.rules import ShardingCtx
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import TrainSetup, make_train_setup, make_train_step
+
+
+@dataclass
+class TrainRunConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = ""
+    log_every: int = 10
+    seed: int = 0
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    data: DataConfig | None = None
+
+
+def train_run(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    sctx: ShardingCtx,
+    run: TrainRunConfig,
+    ctx: Context | None = None,
+    on_metrics: Callable[[int, dict], None] | None = None,
+) -> dict[str, Any]:
+    """Run (or resume) a training segment; returns the final metrics."""
+    setup = make_train_setup(cfg, shape, sctx, run.opt)
+    step_fn = jax.jit(make_train_step(setup), donate_argnums=(0,))
+
+    store = CheckpointStore(run.ckpt_dir or f"checkpoints/{cfg.name}-{shape.name}")
+    start_step = 0
+    state = None
+    latest = store.latest_step()
+    if latest is not None:
+        like = setup.init_state(jax.random.PRNGKey(run.seed))
+        start_step, state = store.restore(like)
+        if ctx is not None:
+            ctx.progress(f"resumed from checkpoint step {start_step}")
+    if state is None:
+        state = setup.init_state(jax.random.PRNGKey(run.seed))
+
+    fetch = make_batch_fn(cfg, shape, run.data)
+    prefetch = Prefetcher(fetch, start_step=start_step, prefetch=2)
+    history: list[dict[str, float]] = []
+    t0 = time.time()
+    try:
+        for step, batch in prefetch:
+            if step >= run.steps:
+                break
+            state, metrics = step_fn(state, batch)
+            if ctx is not None:
+                ctx.heartbeat()
+            if (step + 1) % run.log_every == 0 or step + 1 == run.steps:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                m["step"] = step + 1
+                history.append(m)
+                if on_metrics is not None:
+                    on_metrics(step + 1, m)
+            if (step + 1) % run.ckpt_every == 0:
+                store.save(step + 1, state, blocking=False)
+    finally:
+        prefetch.close()
+    store.wait()
+    store.save(run.steps, state, blocking=True)
+    wall = time.time() - t0
+
+    result = {
+        "final_step": run.steps,
+        "wall_s": wall,
+        "history": history,
+        "loss_first": history[0]["loss"] if history else None,
+        "loss_last": history[-1]["loss"] if history else None,
+    }
+    if ctx is not None:
+        ctx.checkpoint({"summary": result})
+    return result

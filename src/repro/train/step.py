@@ -1,0 +1,311 @@
+"""Train-step factory: microbatched grad accumulation, ZeRO-1 sharding,
+bf16 parameter gathers, optional bf16 gradient-reduction compression.
+
+State layout (all leaves carry NamedShardings via the schema system):
+    state = {"params": fp32 master @ zero1 spec,
+             "opt":    {"m","v","step"} @ zero1 spec,
+             "step":   int32 scalar}
+
+Per step:
+  1. compute params = cast(master, bf16) constrained to the *compute* spec —
+     under dp_tp this is the ZeRO-1 all-gather, done in bf16 (half the bytes
+     of a fp32 gather: a recorded distributed-optimization trick);
+  2. scan over microbatches accumulating fp32 grads constrained to the
+     zero1 spec (XLA turns the constraint into per-microbatch
+     reduce-scatters that overlap with the next microbatch's compute);
+  3. AdamW on the sharded shards; masters never leave their shard.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.models.schema import ParamSpec, abstract_params, init_params, is_spec
+from repro.sharding.rules import ShardingCtx, pspec_for
+from repro.train.optimizer import AdamW, AdamWConfig
+
+F32 = jnp.float32
+
+
+# ==========================================================================
+# ZeRO-1 sharding of optimizer/master state
+# ==========================================================================
+# Dims safe to carry extra ZeRO sharding: "outer" dims whose sharding the
+# SPMD propagator cannot profitably push into attention/matmul contractions.
+# head/state dims are excluded — a head_dim-sharded master layout was
+# measured to pull partial-sum dots into the attention backward (3.6 TB/step
+# of score-sized all-reduces on qwen2.5-14b, whose 40 heads defeat the
+# head-count sharding and leave head_dim as the first divisible dim).
+_ZERO1_SAFE_AXES = {
+    "layer", "embed", "vocab", "mlp", "expert", "expert_mlp",
+    "kv_lora", "q_lora", "rnn", "conv", "frames",
+}
+
+
+def zero1_pspec(
+    spec: ParamSpec, base: P, ctx: ShardingCtx, axes: tuple[str, ...] = ("data", "model", "pod")
+) -> P:
+    """ZeRO sharding of masters/moments/grad-accum: extend the param's pspec
+    with every mesh axis in ``axes`` it does not already use, greedily, on
+    the first divisible SAFE dims (standard fully-sharded optimizer state)."""
+    if ctx.mesh is None or not ctx.profile.zero1:
+        return base
+    entries = list(base) + [None] * (len(spec.shape) - len(base))
+    used = {a for e in entries if e for a in ((e,) if isinstance(e, str) else e)}
+    for axis in axes:
+        if axis not in ctx.mesh.shape or axis in used:
+            continue
+        n = ctx.mesh.shape[axis]
+        for i, dim in enumerate(spec.shape):
+            if spec.axes[i] not in _ZERO1_SAFE_AXES:
+                continue
+            cur = entries[i]
+            cur_axes = (cur,) if isinstance(cur, str) else tuple(cur or ())
+            shard = 1
+            for a in cur_axes:
+                shard *= ctx.mesh.shape[a]
+            if dim % (shard * n) == 0:
+                entries[i] = cur_axes + (axis,) if cur_axes else axis
+                used.add(axis)
+                break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _state_pspec_tree(
+    schema: Any, ctx: ShardingCtx, zero1: bool,
+    zero1_axes: tuple[str, ...] = ("data", "model", "pod"),
+) -> Any:
+    def one(spec: ParamSpec) -> P:
+        if ctx.mesh is None:
+            return P()
+        base = pspec_for(spec.shape, spec.axes, ctx.profile, ctx.mesh)
+        return zero1_pspec(spec, base, ctx, zero1_axes) if zero1 else base
+
+    return jax.tree.map(one, schema, is_leaf=is_spec)
+
+
+def _to_shardings(pspecs: Any, ctx: ShardingCtx) -> Any:
+    if ctx.mesh is None:
+        return jax.tree.map(lambda _: None, pspecs)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), pspecs)
+
+
+def _abstract(schema: Any, pspecs: Any, ctx: ShardingCtx, dtype=None) -> Any:
+    def one(spec: ParamSpec, ps: P):
+        dt = dtype or spec.dtype
+        if ctx.mesh is None:
+            return jax.ShapeDtypeStruct(spec.shape, dt)
+        return jax.ShapeDtypeStruct(spec.shape, dt, sharding=NamedSharding(ctx.mesh, ps))
+
+    return jax.tree.map(one, schema, pspecs, is_leaf=is_spec)
+
+
+# ==========================================================================
+# Train state
+# ==========================================================================
+@dataclass
+class TrainSetup:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    sctx: ShardingCtx
+    opt: AdamW
+    param_schema: Any
+    opt_schema: Any
+    master_pspecs: Any  # zero1 specs for masters + moments
+    compute_pspecs: Any  # profile specs used during fwd/bwd
+    accum_pspecs: Any = None  # microbatch grad accumulator (model/pod-sharded)
+    grad_compress_bf16: bool = True
+
+    # -- abstract state for the dry-run (no allocation) ---------------------
+    def abstract_state(self) -> dict[str, Any]:
+        return {
+            "params": _abstract(self.param_schema, self.master_pspecs["params"], self.sctx),
+            "opt": _abstract(self.opt_schema, self.master_pspecs["opt"], self.sctx),
+            "step": jax.ShapeDtypeStruct(
+                (), jnp.int32,
+                sharding=(NamedSharding(self.sctx.mesh, P()) if self.sctx.mesh else None),
+            ),
+        }
+
+    def abstract_batch(self) -> dict[str, Any]:
+        return batch_specs(self.cfg, self.shape, self.sctx)
+
+    # -- real state for smoke-scale runs -------------------------------------
+    def init_state(self, key: jax.Array) -> dict[str, Any]:
+        params = init_params(self.param_schema, key)
+        return {"params": params, "opt": self.opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, sctx: ShardingCtx) -> dict[str, Any]:
+    """ShapeDtypeStructs for one global batch of this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    mesh = sctx.mesh
+
+    def sds(shp, dtype, axes):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=NamedSharding(mesh, pspec_for(shp, axes, sctx.profile, mesh))
+        )
+
+    tok_len = S - cfg.prefix_len if cfg.prefix_len else S
+    out = {
+        "tokens": sds((B, tok_len), jnp.int32, ("batch", "seq")),
+        "labels": sds((B, tok_len), jnp.int32, ("batch", "seq")),
+    }
+    if cfg.prefix_len:
+        out["prefix_embeds"] = sds(
+            (B, cfg.prefix_len, cfg.d_model), jnp.bfloat16, ("batch", None, "embed_act")
+        )
+    if cfg.enc_dec:
+        out["enc_embeds"] = sds(
+            (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16, ("batch", "frames", "embed_act")
+        )
+    return out
+
+
+def make_train_setup(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    sctx: ShardingCtx,
+    opt_cfg: AdamWConfig | None = None,
+) -> TrainSetup:
+    opt = AdamW(opt_cfg or AdamWConfig())
+    param_schema = lm.model_schema(cfg)
+    opt_schema = opt.state_schema(param_schema)
+    # FSDP profiles keep compute weights at the master (fully-sharded)
+    # layout; XLA inserts per-layer all-gathers inside the scan. DP profiles
+    # hoist one bf16 gather per step (ZeRO-1 semantics).
+    compute = _state_pspec_tree(param_schema, sctx, zero1=sctx.profile.fsdp_params)
+    masters = {
+        "params": _state_pspec_tree(param_schema, sctx, zero1=True),
+        "opt": _state_pspec_tree(opt_schema, sctx, zero1=True),
+    }
+    # Microbatch grad accumulator: sharded over model/pod only. Grads of
+    # TP-sharded weights are naturally model-sharded and grads of replicated
+    # weights are computed redundantly per model rank (slicing is free), so
+    # per-microbatch cross-shard reduction happens only over DATA partials of
+    # a 16x-smaller tensor; the data-axis reduction to the full ZeRO layout
+    # is deferred to one reshard after the loop (measured on qwen2.5-14b:
+    # ~420 GiB/step of per-micro grad all-reduce -> ~30 GiB).
+    # (A deferred data-axis reduction via a model-sharded accumulator was
+    # tried and REFUTED: +13% collective bytes — XLA re-gathered activation
+    # grads to match the accumulator layout. See EXPERIMENTS.md SSPerf.)
+    accum = masters["params"]
+    return TrainSetup(
+        cfg=cfg, shape=shape, sctx=sctx, opt=opt,
+        param_schema=param_schema, opt_schema=opt_schema,
+        master_pspecs=masters, compute_pspecs=compute, accum_pspecs=accum,
+    )
+
+
+# ==========================================================================
+# The step
+# ==========================================================================
+def _constrain_tree(tree: Any, pspecs: Any, ctx: ShardingCtx) -> Any:
+    if ctx.mesh is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, s)),
+        tree,
+        pspecs,
+    )
+
+
+def make_train_step(setup: TrainSetup) -> Callable[[dict, dict], tuple[dict, dict]]:
+    cfg, shape, sctx = setup.cfg, setup.shape, setup.sctx
+    n_micro = max(1, cfg.train_microbatches)
+    assert shape.global_batch % n_micro == 0, (
+        f"{cfg.name}: global batch {shape.global_batch} not divisible by "
+        f"{n_micro} microbatches"
+    )
+    compute_dt = jnp.dtype(cfg.compute_dtype)
+
+    def train_step(state: dict[str, Any], batch: dict[str, Any]):
+        # 1) bf16 parameter gather (ZeRO-1 -> compute layout). The
+        # optimization_barrier pins the gather here: without it XLA's
+        # sharding propagation may keep weights at the ZeRO layout and
+        # partial-sum the consuming dots instead — measured on
+        # qwen2.5-14b as a 3.6 TB/step all-reduce of fp32 attention
+        # scores (head_dim-sharded masters poisoning the contraction).
+        compute_params = jax.tree.map(lambda p: p.astype(compute_dt), state["params"])
+        compute_params = _constrain_tree(compute_params, setup.compute_pspecs, sctx)
+        if sctx.mesh is not None:
+            # Pins the bf16 cast BEFORE any gather: without the barrier the
+            # simplifier swaps convert/all-gather and moves fp32 masters over
+            # ICI (2x bytes), and under ZeRO layouts propagation can even
+            # push the master sharding into consumer dots (measured 3.6
+            # TB/step of score-sized all-reduces on qwen2.5-14b).
+            compute_params = jax.lax.optimization_barrier(compute_params)
+
+        def loss_fn(params, mb):
+            loss, metrics = lm.forward_train(params, cfg, mb, sctx)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(compute_params, batch)
+            if setup.grad_compress_bf16:
+                # Cross-shard gradient reduction rides in bf16 (half the ICI
+                # bytes); the barrier stops XLA re-fusing the reduction into
+                # fp32. The optimizer math upcasts after the reshard.
+                grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+                grads = _constrain_tree(grads, setup.master_pspecs["params"], sctx)
+                if sctx.mesh is not None:
+                    grads = jax.lax.optimization_barrier(grads)
+                grads = jax.tree.map(lambda g: g.astype(F32), grads)
+            else:
+                grads = jax.tree.map(lambda g: g.astype(F32), grads)
+                grads = _constrain_tree(grads, setup.master_pspecs["params"], sctx)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch,
+            )
+            acc_pspecs = setup.accum_pspecs or setup.master_pspecs["params"]
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, F32), state["params"]
+            )
+            zero_grads = _constrain_tree(zero_grads, acc_pspecs, sctx)
+
+            def mb_body(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(compute_params, mb)
+                if setup.grad_compress_bf16:
+                    # Cross-replica reduction rides in bf16; accumulate fp32.
+                    g = jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+                acc = jax.tree.map(lambda a, x: a + x.astype(F32), acc, g)
+                acc = _constrain_tree(acc, acc_pspecs, sctx)
+                return (acc, loss_acc + loss), metrics
+
+            unroll = bool(int(os.environ.get("REPRO_UNROLL_SCANS", "0")))
+            (grads, loss_sum), metrics = jax.lax.scan(
+                mb_body, (zero_grads, jnp.zeros((), F32)), micro,
+                unroll=True if unroll else 1,
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            # One deferred data-axis reshard to the ZeRO layout.
+            grads = _constrain_tree(grads, setup.master_pspecs["params"], sctx)
+            loss = loss_sum / n_micro
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        # 3) sharded AdamW on masters.
+        new_params, new_opt, opt_metrics = setup.opt.update(
+            grads, state["opt"], state["params"]
+        )
+        new_params = _constrain_tree(new_params, setup.master_pspecs["params"], sctx)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = {**metrics, **opt_metrics, "loss_mean": loss}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,176 @@
+"""Configuration matrix + hashing: unit and property tests."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ConfigMatrix, ConfigMatrixError, HashingError
+from repro.core.hashing import canonicalize, stable_hash, task_key
+
+
+def model_a():
+    return "a"
+
+
+def model_b():
+    return "b"
+
+
+class TestExpansion:
+    def test_paper_example_counts(self):
+        # 3 x 2 x 3 x 3 = 54 tasks, exactly the paper's example.
+        m = ConfigMatrix.from_dict(
+            {
+                "parameters": {
+                    "dataset": ["digits", "wine", "cancer"],
+                    "feature_engineering": ["dummy", "simple"],
+                    "preprocessing": ["none", "minmax", "standard"],
+                    "model": [model_a, model_b, "svc"],
+                },
+                "settings": {"n_fold": 5},
+            }
+        )
+        assert m.cartesian_size == 54
+        tasks = m.task_list()
+        assert len(tasks) == 54
+        assert all(t.settings == {"n_fold": 5} for t in tasks)
+
+    def test_exclude_is_partial_match_lookup(self):
+        m = ConfigMatrix.from_dict(
+            {
+                "parameters": {"a": [1, 2, 3], "b": ["x", "y"]},
+                "exclude": [{"a": 2}],  # kills every combo with a=2
+            }
+        )
+        combos = list(m.combinations())
+        assert len(combos) == 4
+        assert all(c["a"] != 2 for c in combos)
+
+    def test_exclude_full_assignment(self):
+        m = ConfigMatrix.from_dict(
+            {
+                "parameters": {"a": [1, 2], "b": ["x", "y"]},
+                "exclude": [{"a": 1, "b": "y"}],
+            }
+        )
+        combos = list(m.combinations())
+        assert {"a": 1, "b": "y"} not in combos
+        assert len(combos) == 3
+
+    def test_exclude_matches_callables(self):
+        m = ConfigMatrix.from_dict(
+            {
+                "parameters": {"model": [model_a, model_b]},
+                "exclude": [{"model": model_a}],
+            }
+        )
+        assert [c["model"] for c in m.combinations()] == [model_b]
+
+    def test_task_indices_stable_and_keys_unique(self):
+        m = ConfigMatrix.from_dict({"parameters": {"a": [1, 2], "b": [3, 4]}})
+        tasks = m.task_list()
+        assert [t.index for t in tasks] == [0, 1, 2, 3]
+        assert len({t.key for t in tasks}) == 4
+
+    def test_shard_partition(self):
+        m = ConfigMatrix.from_dict({"parameters": {"a": list(range(10))}})
+        parts = [m.shard(i, 3) for i in range(3)]
+        all_idx = sorted(t.index for p in parts for t in p)
+        assert all_idx == list(range(10))
+
+    @pytest.mark.parametrize(
+        "bad",
+        [
+            {},
+            {"parameters": {}},
+            {"parameters": {"a": []}},
+            {"parameters": {"a": [1]}, "bogus": 1},
+            {"parameters": {"a": [1]}, "exclude": [{"zzz": 1}]},
+            {"parameters": {"a": "not-a-list"}},
+        ],
+    )
+    def test_invalid_matrices_rejected(self, bad):
+        with pytest.raises(ConfigMatrixError):
+            ConfigMatrix.from_dict(bad)
+
+    @given(
+        sizes=st.lists(st.integers(min_value=1, max_value=4), min_size=1, max_size=4),
+        n_excl=st.integers(min_value=0, max_value=5),
+        seed=st.integers(min_value=0, max_value=10_000),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_property_count_equals_product_minus_excluded(self, sizes, n_excl, seed):
+        import random
+
+        rng = random.Random(seed)
+        params = {f"p{i}": list(range(n)) for i, n in enumerate(sizes)}
+        full = list(itertools.product(*params.values()))
+        names = list(params.keys())
+        excl = []
+        for _ in range(n_excl):
+            combo = rng.choice(full)
+            keys = rng.sample(names, rng.randint(1, len(names)))
+            excl.append({k: combo[names.index(k)] for k in keys})
+        m = ConfigMatrix.from_dict({"parameters": params, "exclude": excl})
+        expected = [
+            c
+            for c in full
+            if not any(
+                all(c[names.index(k)] == v for k, v in rule.items()) for rule in excl
+            )
+        ]
+        assert len(list(m.combinations())) == len(expected)
+
+
+class TestHashing:
+    def test_dict_order_invariance(self):
+        assert stable_hash({"a": 1, "b": 2}) == stable_hash({"b": 2, "a": 1})
+
+    def test_nested_structures(self):
+        v1 = {"x": [1, 2, {"y": (3, 4)}], "s": {2, 1}}
+        v2 = {"s": {1, 2}, "x": [1, 2, {"y": [3, 4]}]}  # tuple/list normalise
+        assert stable_hash(v1) == stable_hash(v2)
+
+    def test_callables_by_qualified_name(self):
+        assert stable_hash(model_a) != stable_hash(model_b)
+        assert stable_hash(model_a) == stable_hash(model_a)
+
+    def test_lambda_rejected(self):
+        with pytest.raises(HashingError):
+            stable_hash(lambda x: x)
+
+    def test_closure_rejected(self):
+        def outer():
+            def inner():
+                return 1
+
+            return inner
+
+        with pytest.raises(HashingError):
+            stable_hash(outer())
+
+    def test_dataclass_and_model_config(self):
+        from repro.configs.registry import get_config
+
+        c1 = get_config("qwen3-8b")
+        c2 = get_config("qwen3-8b")
+        assert stable_hash(c1) == stable_hash(c2)
+        assert stable_hash(c1) != stable_hash(get_config("llama3.2-3b"))
+
+    def test_numpy_values(self):
+        import numpy as np
+
+        a = np.arange(6).reshape(2, 3)
+        assert stable_hash(a) == stable_hash(a.copy())
+        assert stable_hash(a) != stable_hash(a.T)
+        assert stable_hash(np.float32(1.5)) == stable_hash(1.5)
+
+    def test_float_specials(self):
+        assert stable_hash(float("nan")) == stable_hash(float("nan"))
+        assert stable_hash(float("inf")) != stable_hash(float("-inf"))
+
+    @given(st.dictionaries(st.text(min_size=1, max_size=8), st.integers(), min_size=1, max_size=6))
+    @settings(max_examples=30, deadline=None)
+    def test_property_shuffled_dict_same_key(self, d):
+        items = list(d.items())
+        assert task_key(dict(items)) == task_key(dict(reversed(items)))

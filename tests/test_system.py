@@ -1,0 +1,73 @@
+"""End-to-end behaviour: Memento orchestrating real JAX training tasks —
+the paper's Fig. 1 workflow at miniature scale, including the
+fail -> fix code -> rerun-from-cache loop."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config
+from repro.core import ConsoleNotificationProvider, Memento, RecordingProvider, RunnerConfig
+from repro.data.pipeline import DataConfig
+from repro.sharding.rules import ShardingCtx
+from repro.train.loop import TrainRunConfig, train_run
+from repro.train.optimizer import AdamWConfig, Schedule
+
+_BROKEN = {"enabled": True}
+
+
+def train_task(ctx):
+    """One (lr x arch) hyperparameter cell: a real (tiny) training run."""
+    if _BROKEN["enabled"] and ctx["lr"] == 3e-3:
+        raise RuntimeError("simulated bug in the high-lr branch")
+    cfg = get_config(ctx["arch"]).reduced()
+    shape = ShapeConfig("tiny", "train", seq_len=32, global_batch=4)
+    run = TrainRunConfig(
+        steps=6, ckpt_every=100, log_every=3,
+        ckpt_dir=str(ctx.settings["workdir"]) + f"/ckpt-{ctx.key[:8]}",
+        opt=AdamWConfig(schedule=Schedule(base_lr=ctx["lr"], warmup_steps=2, kind="const")),
+        data=DataConfig(seed=0, vocab_size=cfg.vocab_size),
+    )
+    res = train_run(cfg, shape, ShardingCtx.null(), run, ctx=ctx)
+    return {"loss_last": res["loss_last"], "lr": ctx["lr"]}
+
+
+def test_memento_orchestrates_training_with_failure_and_fix(tmp_path):
+    matrix = {
+        "parameters": {"arch": ["llama3.2-3b"], "lr": [1e-3, 3e-3]},
+        "settings": {"workdir": str(tmp_path)},
+    }
+    prov = RecordingProvider()
+    eng = Memento(
+        train_task, prov, workdir=tmp_path / "memento",
+        runner_config=RunnerConfig(max_workers=1, retries=0, enable_speculation=False),
+    )
+    # First run: one task fails (the simulated bug), one succeeds + caches.
+    _BROKEN["enabled"] = True
+    res1 = eng.run(matrix)
+    assert len(res1.failed) == 1 and len(res1.ok) == 1
+    assert "simulated bug" in res1.failed[0].error
+
+    # "Fix the code" and rerun: the good task comes from cache (no recompute),
+    # only the fixed task executes.
+    _BROKEN["enabled"] = False
+    res2 = eng.run(matrix)
+    assert len(res2.failed) == 0
+    statuses = {r.spec.params["lr"]: r.status for r in res2}
+    assert statuses[1e-3] == "cached"
+    assert statuses[3e-3] == "ok"
+    assert all(r.value["loss_last"] is not None for r in res2)
+
+
+def test_dryrun_sweep_matrix_shape():
+    """The 40-cell assignment sweep is a well-formed Memento matrix."""
+    from repro.launch.dryrun import sweep_matrix
+    from repro.core import ConfigMatrix
+
+    m = ConfigMatrix.from_dict(sweep_matrix([False]))
+    tasks = m.task_list()
+    # 10 archs x 4 shapes = 40 raw; 8 long_500k cells excluded per assignment
+    assert m.cartesian_size == 40
+    assert len(tasks) == 32
+    long_archs = {t.params["arch"] for t in tasks if t.params["shape"] == "long_500k"}
+    assert long_archs == {"xlstm-1.3b", "recurrentgemma-2b"}
