@@ -1,0 +1,11 @@
+.PHONY: test bench demo
+
+# Tier-1 verify (ROADMAP.md): must stay green.
+test:
+	./scripts/test.sh
+
+bench:
+	PYTHONPATH=src python benchmarks/run.py
+
+demo:
+	PYTHONPATH=src python examples/serve_demo.py

@@ -10,6 +10,7 @@ plus framework-level benchmarks:
   B6  per-kernel interpret-mode microbenches (us_per_call vs jnp oracle)
   B7  train-step wall time for a tiny model (CPU, smoke scale)
   B8  dry-run roofline summary (from the cached sweep, if present)
+  B9  continuous-batching serve throughput under Poisson arrivals
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -178,6 +179,69 @@ def bench_train_step() -> None:
     _row("B7_train_step_smoke_llama", us, f"{toks/(us/1e6):.0f} tok/s CPU smoke")
 
 
+def bench_serve_throughput() -> None:
+    """B9: continuous-batching scheduler under Poisson arrivals with mixed
+    prompt/output lengths. Reports aggregate tokens/s and p50/p95 request
+    latency (submit -> last token)."""
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.models import lm
+    from repro.models.schema import init_params
+    from repro.serve.request import Request
+    from repro.serve.scheduler import Scheduler, SchedulerConfig
+    from repro.sharding.rules import ShardingCtx
+
+    cfg = get_config("llama3.2-3b").reduced()
+    params = init_params(lm.model_schema(cfg), jax.random.PRNGKey(0))
+    sched = Scheduler(
+        cfg, params, ShardingCtx.null(), SchedulerConfig(n_slots=4, cache_len=64)
+    )
+
+    rng = np.random.default_rng(0)
+    n_req = 12
+    arrivals = np.cumsum(rng.exponential(scale=0.05, size=n_req))  # Poisson process
+    prompt_lens = rng.choice([4, 8, 12], size=n_req)
+    out_lens = rng.choice([4, 8], size=n_req)
+    requests = [
+        Request(
+            rng.integers(0, cfg.vocab_size, size=int(p)).astype(np.int32),
+            max_new_tokens=int(o),
+        )
+        for p, o in zip(prompt_lens, out_lens)
+    ]
+
+    # Warm every prompt-length bucket (prefill/admit compile per length) and
+    # the decode step so the measured run sees steady-state latencies.
+    for p in sorted(set(int(x) for x in prompt_lens)):
+        sched.submit(Request(np.zeros(p, np.int32), max_new_tokens=2))
+    sched.run()
+
+    rids = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < n_req or sched.pending or sched.num_active:
+        now = time.perf_counter() - t0
+        while i < n_req and arrivals[i] <= now:
+            rids.append(sched.submit(requests[i]))
+            i += 1
+        if not sched.step() and i < n_req:
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+    wall = time.perf_counter() - t0
+
+    done = [sched.result(r) for r in rids]
+    toks = sum(len(r.tokens) for r in done)
+    lat = np.array([r.latency_s for r in done])
+    p50, p95 = np.percentile(lat, 50), np.percentile(lat, 95)
+    _row(
+        "B9_serve_poisson_12req_4slots",
+        wall * 1e6,
+        f"{toks / wall:.1f} tok/s p50={p50 * 1e3:.0f}ms p95={p95 * 1e3:.0f}ms "
+        f"decode_traces={sched.decode_traces}",
+    )
+
+
 def bench_roofline_summary() -> None:
     try:
         from repro.launch.report import load_results
@@ -205,6 +269,7 @@ def main() -> None:
     bench_failure_isolation()
     bench_kernels()
     bench_train_step()
+    bench_serve_throughput()
     bench_roofline_summary()
 
 

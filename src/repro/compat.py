@@ -1,0 +1,41 @@
+"""Version-compat shims over the moving parts of the JAX API surface.
+
+The repo targets the newest stable API names; everything older is adapted
+here so call sites stay clean. Currently covered:
+
+  * ``shard_map`` — moved from ``jax.experimental.shard_map`` to ``jax``;
+    the replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+  * ``tree_flatten_with_path`` — ``jax.tree.flatten_with_path`` only exists
+    on newer jax; ``jax.tree_util.tree_flatten_with_path`` is the stable
+    spelling.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map_impl).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """``jax.shard_map`` with the replication-check kwarg normalized."""
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{_CHECK_KW: check}
+    )
+
+
+def tree_flatten_with_path(tree: Any):
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)

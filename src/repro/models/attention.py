@@ -203,8 +203,8 @@ def _sdpa_decode(
     q: jax.Array,  # (B, 1, H, D)
     k: jax.Array,  # (B, T, KV, D)
     v: jax.Array,  # (B, T, KV, Dv)
-    k_pos: jax.Array,  # (T,) absolute positions held in the cache slots
-    cur_pos: jax.Array,  # scalar: position of the query token
+    k_pos: jax.Array,  # (B, T) absolute positions held in each row's cache slots
+    cur_pos: jax.Array,  # (B,): position of each row's query token
     cfg: ModelConfig,
     window: int = 0,
     scale: float | None = None,
@@ -219,10 +219,11 @@ def _sdpa_decode(
         v = jnp.broadcast_to(v[:, :, :, None, :], (B, T, KV, G, Dv)).reshape(B, T, H, Dv)
     qh = q.reshape(B, H, D)
     s = jnp.einsum("bhd,bthd->bht", qh, k, preferred_element_type=F32) * sc
-    valid = (k_pos <= cur_pos) & (k_pos >= 0)
+    cp = cur_pos[:, None]  # (B, 1)
+    valid = (k_pos <= cp) & (k_pos >= 0)
     if window:
-        valid = valid & (k_pos > cur_pos - window)
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
+        valid = valid & (k_pos > cp - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bht,bthe->bhe", p.astype(cdt(cfg)), v, preferred_element_type=F32)
     return o.reshape(B, 1, H, Dv).astype(cdt(cfg))
@@ -279,23 +280,28 @@ def gqa_attention(
     )
     if mode == "decode":
         assert cache is not None and cur_pos is not None
-        T = cache.k.shape[1]
-        slot = cur_pos % T if window else cur_pos
-        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        B, T = cache.k.shape[0], cache.k.shape[1]
+        # cur_pos is a scalar (classic static batch: every row at the same
+        # position) or (B,) (continuous batching: each slot at its own
+        # position). Both run the same per-row scatter program.
+        pos_v = jnp.broadcast_to(jnp.atleast_1d(cur_pos), (B,)).astype(jnp.int32)
+        slot = pos_v % T if window else pos_v
+        rows = jnp.arange(B)
+        ck = cache.k.at[rows, slot].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[rows, slot].set(v[:, 0].astype(cache.v.dtype))
         ck = constrain(ck, ("batch", "window" if window else "kv_seq", "kv_heads", "head_dim"), sctx)
         cv = constrain(cv, ("batch", "window" if window else "kv_seq", "kv_heads", "head_dim"), sctx)
         new_cache = KVCache(ck, cv)
-        # Positions held by each cache slot, derived analytically:
+        # Positions held by each row's cache slots, derived analytically:
         #   full cache: slot i holds position i;
         #   ring buffer: slot i holds the latest p <= cur_pos with p % T == i
         #   (negative -> never written; masked in _sdpa_decode).
         idx = jnp.arange(T, dtype=jnp.int32)
         if window:
-            k_pos = cur_pos - ((cur_pos - idx) % T)
+            k_pos = pos_v[:, None] - ((pos_v[:, None] - idx[None, :]) % T)
         else:
-            k_pos = idx
-        out = _sdpa_decode(q, ck.astype(dt), cv.astype(dt), k_pos, cur_pos, cfg, window=window)
+            k_pos = jnp.broadcast_to(idx[None, :], (B, T))
+        out = _sdpa_decode(q, ck.astype(dt), cv.astype(dt), k_pos, pos_v, cfg, window=window)
     else:
         if mode == "prefill":
             new_cache = KVCache(k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
@@ -390,17 +396,19 @@ def mla_attention(
     new_cache: MLACache | None = None
     if mode == "decode":
         assert cache is not None and cur_pos is not None
-        ckv_all = jax.lax.dynamic_update_slice(cache.ckv, ckv.astype(cache.ckv.dtype), (0, cur_pos, 0))
-        krope_all = jax.lax.dynamic_update_slice(cache.krope, k_rope.astype(cache.krope.dtype), (0, cur_pos, 0))
+        T = cache.ckv.shape[1]
+        pos_v = jnp.broadcast_to(jnp.atleast_1d(cur_pos), (B,)).astype(jnp.int32)
+        rows = jnp.arange(B)
+        ckv_all = cache.ckv.at[rows, pos_v].set(ckv[:, 0].astype(cache.ckv.dtype))
+        krope_all = cache.krope.at[rows, pos_v].set(k_rope[:, 0].astype(cache.krope.dtype))
         ckv_all = constrain(ckv_all, ("batch", "kv_seq", "kv_lora"), sctx)
         new_cache = MLACache(ckv_all, krope_all)
         # Absorbed decode: score against the compressed cache directly.
         q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["wk_b"].astype(dt), preferred_element_type=F32).astype(dt)
         s = jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(dt), preferred_element_type=F32)
         s = s + jnp.einsum("bshe,bte->bhst", q_rope, krope_all.astype(dt), preferred_element_type=F32)
-        T = cache.ckv.shape[1]
-        valid = jnp.arange(T) <= cur_pos
-        s = jnp.where(valid[None, None, None, :], s * scale, NEG_INF)
+        valid = jnp.arange(T)[None, :] <= pos_v[:, None]  # (B, T)
+        s = jnp.where(valid[:, None, None, :], s * scale, NEG_INF)
         pr = jax.nn.softmax(s, axis=-1)
         ctx_c = jnp.einsum("bhst,btr->bshr", pr.astype(dt), ckv_all.astype(dt), preferred_element_type=F32).astype(dt)
         o = jnp.einsum("bshr,rhe->bshe", ctx_c, p["wv_b"].astype(dt), preferred_element_type=F32).astype(dt)

@@ -127,13 +127,21 @@ def rope_freqs(dim: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., S, H, D) or (..., S, D); positions: (..., S) or (S,)."""
+    """x: (..., S, H, D) or (..., S, D); positions: (S,) shared across the
+    batch, or (B, S) per-sequence (continuous-batching decode, where every
+    slot sits at its own position)."""
     d = x.shape[-1]
     freqs = rope_freqs(d, theta)  # (d/2,)
     angles = positions.astype(F32)[..., None] * freqs  # (..., S, d/2)
     # Insert singleton head axes so the seq axis of `angles` lines up with
-    # the seq axis of x (which may carry trailing head dims).
-    for _ in range(x.ndim - angles.ndim - 1):
+    # the seq axis of x (which may carry trailing head dims). Shared (S,)
+    # positions rely on right-aligned broadcast over the batch axes; batched
+    # positions already carry them, so only the head axes are missing.
+    if positions.ndim <= 1:
+        n_insert = x.ndim - angles.ndim - 1
+    else:
+        n_insert = x.ndim - positions.ndim - 1
+    for _ in range(n_insert):
         angles = angles[..., None, :]
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)

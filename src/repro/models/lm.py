@@ -159,17 +159,6 @@ def prefill(
     return logits, states
 
 
-def _pad_prefill_states(
-    cfg: ModelConfig, states: dict[str, Any], s_max: int
-) -> dict[str, Any]:
-    """Grow prefill caches (length S) to the serving cache length s_max."""
-
-    def grow(path: tuple, leaf: jax.Array) -> jax.Array:
-        return leaf
-
-    return states  # caches are allocated at prefill length; engine re-pads
-
-
 def decode_step(
     params: dict[str, Any],
     cfg: ModelConfig,
@@ -178,10 +167,17 @@ def decode_step(
     sctx: ShardingCtx,
     prefix_embeds: jax.Array | None = None,
 ) -> tuple[jax.Array, dict[str, Any]]:
-    cur_pos = states["pos"]
+    """One decode step. ``states["pos"]`` is either a scalar (static batch:
+    every sequence at the same position) or (B,) (continuous batching: each
+    slot at its own position). The output pos mirrors the input structure, so
+    the jitted step keeps a stable pytree either way."""
+    cur_pos = jnp.asarray(states["pos"])
     x = embed_tokens(params["embed"], cfg, token, sctx)
     x = x * jnp.asarray(cfg.d_model**0.5, cdt(cfg))
-    positions = cur_pos[None].astype(jnp.int32)
+    if cur_pos.ndim == 0:
+        positions = cur_pos[None].astype(jnp.int32)  # (1,) shared
+    else:
+        positions = cur_pos[:, None].astype(jnp.int32)  # (B, 1) per slot
 
     x, _, new_states = blk.apply_stack(
         params["stack"], cfg, x, mode="decode", positions=positions,

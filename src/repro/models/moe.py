@@ -33,10 +33,7 @@ from repro.models.layers import F32, _act, cdt
 from repro.models.schema import ParamSpec
 from repro.sharding.rules import ShardingCtx, constrain
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.compat import shard_map as _compat_shard_map
 
 from jax.sharding import PartitionSpec as P
 
@@ -235,12 +232,12 @@ def moe_ffn(
                 stats = jax.lax.pmean(stats, ep_axes)
             return y, stats
 
-        out, stats = _shard_map(
+        out, stats = _compat_shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=in_specs,
             out_specs=out_specs,
-            check_vma=False,
+            check=False,
         )(x_flat, p)
 
     E = mo.n_experts

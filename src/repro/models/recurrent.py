@@ -455,8 +455,9 @@ def _shard_map_batched(fn, sctx: ShardingCtx, batch_dim_size: int):
             size *= mesh.shape[a]
     if not axes:
         return fn
-    from jax import shard_map as _sm
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map as _sm
 
     bspec = P(tuple(axes))
 
@@ -466,7 +467,7 @@ def _shard_map_batched(fn, sctx: ShardingCtx, batch_dim_size: int):
             mesh=mesh,
             in_specs=(bspec, P(), jax.tree.map(lambda _: bspec, state)),
             out_specs=(bspec, jax.tree.map(lambda _: bspec, state)),
-            check_vma=False,
+            check=False,
         )(gates, r, state)
 
     return wrapped

@@ -1,0 +1,86 @@
+"""Slot-cache surgery for serving.
+
+Two layers of state rewriting, both shape-driven so they work for every
+state kind in the model zoo (dense KV, windowed ring KV, MLA compressed,
+recurrent h/conv, cross-attention encoder KV) and for scan-stacked group
+states with a leading layer axis:
+
+  * ``graft_states`` — move prefill caches (allocated at prompt length S)
+    into serving-length caches (cache_len): dense caches left-align, window
+    ring buffers place position p at slot ``p % W`` for the last W prompt
+    positions, recurrent/equal-shape states copy through. The single axis
+    whose size differs between source and target is the cache-sequence axis.
+  * ``insert_slot`` — write a single-slot (batch=1) serving-length state
+    into slot ``s`` of the batched scheduler state. Here the single
+    differing axis is the batch axis; equal shapes mean n_slots == 1.
+
+Both preserve the destination dtype (bf16 caches stay bf16 even when the
+prefill ran in fp32).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _graft_leaf(dst: jax.Array, src: jax.Array, prompt_len: int) -> jax.Array:
+    d, s = jnp.asarray(dst), jnp.asarray(src)
+    if d.shape == s.shape:
+        return s.astype(d.dtype)
+    if d.ndim != s.ndim:
+        raise ValueError(f"cannot graft cache {s.shape} -> {d.shape}")
+    diff = [i for i in range(d.ndim) if d.shape[i] != s.shape[i]]
+    if len(diff) != 1:
+        raise ValueError(f"cannot graft cache {s.shape} -> {d.shape}")
+    ax = diff[0]  # the cache-sequence axis (works for stacked groups too)
+    dm = jnp.moveaxis(d, ax, 0)
+    sm = jnp.moveaxis(s, ax, 0)
+    W = dm.shape[0]
+    if sm.shape[0] >= W:
+        # ring buffer: the last W prompt positions land at slot p % W
+        tail = sm[-W:]
+        pos = jnp.arange(prompt_len - W, prompt_len) % W
+        dm = dm.at[pos].set(tail.astype(dm.dtype))
+    else:
+        # dense cache longer than the prompt: left-aligned
+        dm = dm.at[: sm.shape[0]].set(sm.astype(dm.dtype))
+    return jnp.moveaxis(dm, 0, ax)
+
+
+def graft_states(
+    target_layers: Any, prefill_layers: Any, prompt_len: int
+) -> Any:
+    """Graft prefill-length layer states into serving-length layer states.
+
+    ``prompt_len`` must be a Python int (the ring placement is computed
+    statically), so jitted callers take it as a static argument.
+    """
+    return jax.tree.map(
+        lambda d, s: _graft_leaf(d, s, prompt_len), target_layers, prefill_layers
+    )
+
+
+def insert_slot(full_layers: Any, slot_layers: Any, slot: jax.Array | int) -> Any:
+    """Insert a batch-1 serving-length state pytree at batch index ``slot``.
+
+    ``slot`` may be a traced scalar: admission re-uses one compiled program
+    for every slot index.
+    """
+
+    def ins(dst: jax.Array, src: jax.Array) -> jax.Array:
+        d, s = jnp.asarray(dst), jnp.asarray(src)
+        if d.shape == s.shape:  # n_slots == 1
+            return s.astype(d.dtype)
+        if d.ndim != s.ndim:
+            raise ValueError(f"cannot insert slot state {s.shape} -> {d.shape}")
+        diff = [i for i in range(d.ndim) if d.shape[i] != s.shape[i]]
+        if len(diff) != 1 or s.shape[diff[0]] != 1:
+            raise ValueError(f"cannot insert slot state {s.shape} -> {d.shape}")
+        ax = diff[0]  # the batch axis
+        start = [0] * d.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), tuple(start))
+
+    return jax.tree.map(ins, full_layers, slot_layers)

@@ -1,14 +1,16 @@
-"""Batched serving engine: prefill -> iterative decode with ring/window and
-recurrent states, greedy or temperature sampling, per-sequence stop.
+"""Serving engine: a thin client of the continuous-batching scheduler.
 
-The engine owns the non-jitted policy (request batching, sampling, stop
-conditions, cache sizing); the jitted hot path is ``serve.step`` exactly as
-lowered by the dry-run, so what we benchmark is what serves.
+``generate()`` submits one request per batch row to a ``Scheduler`` and
+drains it; requests retire independently (per-request stop token and
+max_new_tokens), and the decode hot path is the scheduler's fixed-shape
+``(n_slots, 1)`` step. ``generate_static()`` keeps the original static-batch
+loop — all rows march in lockstep until every one finishes — as the
+reference implementation the scheduler is tested token-for-token against.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +18,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.serve.cache import graft_states
+from repro.serve.request import Request
+from repro.serve.scheduler import Scheduler, SchedulerConfig
 from repro.serve.step import init_decode_state
 from repro.sharding.rules import ShardingCtx
 
@@ -44,47 +49,72 @@ class Engine:
         self.serve = serve
         self._prefill = jax.jit(lambda p, b: lm.prefill(p, cfg, b, sctx))
         self._decode = jax.jit(lambda p, s, t: lm.decode_step(p, cfg, s, t, sctx))
+        self._schedulers: dict[int, Scheduler] = {}  # keyed by n_slots
 
     # -- state surgery -------------------------------------------------------
     def _grow_states(self, states: dict[str, Any], prompt_len: int, batch: int) -> dict[str, Any]:
-        """Move prefill caches (length S) into serving caches (cache_len).
-
-        Dense caches are left-aligned; window ring buffers are filled so slot
-        ``p % W`` holds position p for the last W prompt positions; recurrent
-        states copy through untouched.
-        """
+        """Move prefill caches (length S) into serving caches (cache_len)."""
         target = init_decode_state(self.cfg, batch, self.serve.cache_len, start_pos=prompt_len)
-
-        def graft(dst, src):
-            if isinstance(dst, dict) and isinstance(src, dict):
-                return {k: graft(dst[k], src[k]) for k in dst}
-            d, s = jnp.asarray(dst), jnp.asarray(src)
-            if d.shape == s.shape:
-                return s
-            if d.ndim != s.ndim:
-                raise ValueError(f"cannot graft cache {s.shape} -> {d.shape}")
-            diff = [i for i in range(d.ndim) if d.shape[i] != s.shape[i]]
-            if len(diff) != 1:
-                raise ValueError(f"cannot graft cache {s.shape} -> {d.shape}")
-            ax = diff[0]  # the cache-sequence axis (works for stacked groups too)
-            dm = jnp.moveaxis(d, ax, 0)
-            sm = jnp.moveaxis(s, ax, 0)
-            W = dm.shape[0]
-            if sm.shape[0] >= W:
-                # ring buffer: the last W prompt positions land at slot p % W
-                tail = sm[-W:]
-                pos = jnp.arange(prompt_len - W, prompt_len) % W
-                dm = dm.at[pos].set(tail.astype(dm.dtype))
-            else:
-                # dense cache longer than the prompt: left-aligned
-                dm = dm.at[: sm.shape[0]].set(sm.astype(dm.dtype))
-            return jnp.moveaxis(dm, 0, ax)
-
-        grafted = graft(target["layers"], states["layers"])
+        grafted = graft_states(target["layers"], states["layers"], prompt_len)
         return {"layers": grafted, "pos": jnp.asarray(prompt_len, jnp.int32)}
 
-    # -- generation ---------------------------------------------------------
+    # -- generation (continuous-batching path) ------------------------------
+    def _sched_for(self, n_slots: int) -> Scheduler:
+        # One scheduler per batch size, kept alive so alternating batch
+        # shapes reuse their compiled decode/prefill/admit programs.
+        if n_slots not in self._schedulers:
+            self._schedulers[n_slots] = Scheduler(
+                self.cfg, self.params, self.sctx,
+                SchedulerConfig(
+                    n_slots=n_slots, cache_len=self.serve.cache_len, seed=self.serve.seed
+                ),
+            )
+        return self._schedulers[n_slots]
+
     def generate(self, batch: dict[str, Any]) -> GenerationResult:
+        cfg, serve = self.cfg, self.serve
+        B = batch["tokens"].shape[0]
+        prompt_len = batch["tokens"].shape[1] + (cfg.prefix_len or 0)
+        assert prompt_len + serve.max_new_tokens <= serve.cache_len or cfg.supports_long_context or cfg.window_size, (
+            f"cache_len {serve.cache_len} too small for {prompt_len}+{serve.max_new_tokens}"
+        )
+        sched = self._sched_for(B)
+        sched.reset_rng(serve.seed)
+        steps_before = sched.total_decode_steps
+        tokens = np.asarray(batch["tokens"])
+        extras = {k: np.asarray(v) for k, v in batch.items() if k != "tokens"}
+        for i in range(B):
+            sched.submit(
+                Request(
+                    prompt=tokens[i],
+                    max_new_tokens=serve.max_new_tokens,
+                    stop_token=serve.stop_token,
+                    temperature=serve.temperature,
+                    extras={k: v[i : i + 1] for k, v in extras.items()},
+                )
+            )
+        finished = sched.run()
+
+        steps = max(len(rs.tokens) for rs in finished)
+        out = np.zeros((B, steps), np.int32)
+        for i, rs in enumerate(finished):
+            row = rs.tokens
+            # Early-retired rows pad with their final token so the result
+            # stays rectangular; the static path kept decoding instead.
+            out[i] = row + [row[-1]] * (steps - len(row))
+        if sched.total_decode_steps > steps_before:
+            logits = np.asarray(sched.last_decode_logits)
+        else:
+            # Zero decode steps this call (max_new_tokens == 1 / instant
+            # stops): report this batch's prefill logits, like the static
+            # path, rather than a stale array from a previous call.
+            logits = np.concatenate([rs.prefill_logits for rs in finished], axis=0)
+        return GenerationResult(tokens=out, steps=steps, prefill_logits=logits)
+
+    # -- generation (static-batch reference) --------------------------------
+    def generate_static(self, batch: dict[str, Any]) -> GenerationResult:
+        """The pre-scheduler static loop: one shared position counter, the
+        whole batch decodes until its slowest member finishes."""
         cfg, serve = self.cfg, self.serve
         B = batch["tokens"].shape[0]
         prompt_len = batch["tokens"].shape[1] + (cfg.prefix_len or 0)

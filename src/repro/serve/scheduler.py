@@ -1,0 +1,275 @@
+"""Continuous-batching request scheduler.
+
+The scheduler owns ``n_slots`` persistent decode slots backed by one batched
+decode state (KV/ring/recurrent caches at ``cache_len``). Requests flow
+through an admission queue; each admitted request gets a free slot:
+
+  1. **prefill** — the request's prompt runs through the jitted prefill
+     (compiled per prompt length), producing prompt-length caches,
+  2. **graft** — those caches are grafted into a slot-shaped serving cache
+     and inserted into the batched state at the slot's batch row (one
+     compiled program per prompt length; slot index is traced),
+  3. **decode** — the slot rides the shared ``(n_slots, 1)`` decode step with
+     an active mask and per-slot position indices,
+  4. **retire** — on stop-token or length the slot is freed and immediately
+     backfilled from the queue at the next step.
+
+The decode hot path is shape-stable by construction: tokens are always
+``(n_slots, 1)``, the active mask ``(n_slots,)``, positions ``(n_slots,)``
+— requests joining or leaving only changes array *values*, so the step
+never recompiles after its single warmup trace (``decode_traces`` counts
+traces for tests/monitoring). Inactive slots keep decoding garbage tokens
+with a frozen position; that is safe because a slot's cache row is always
+rewritten (graft at admission, write-before-read during decode) before any
+of it becomes visible through the position mask.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serve.cache import graft_states, insert_slot
+from repro.serve.request import Request, RequestState, RequestStatus
+from repro.serve.step import init_decode_state
+from repro.sharding.rules import ShardingCtx
+
+
+@dataclass
+class SchedulerConfig:
+    n_slots: int = 4  # concurrent sequences in the batched decode state
+    cache_len: int = 256  # per-slot cache slots (>= prompt + new tokens for dense)
+    seed: int = 0
+    keep_finished: int = 1024  # finished RequestStates retained for result()
+
+
+class Scheduler:
+    def __init__(
+        self, cfg: ModelConfig, params: Any, sctx: ShardingCtx, sched: SchedulerConfig
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.sctx = sctx
+        self.sched = sched
+        n = sched.n_slots
+
+        state = init_decode_state(cfg, n, sched.cache_len)
+        state["pos"] = jnp.zeros((n,), jnp.int32)  # per-slot positions
+        self._states: dict[str, Any] = state
+        self._tokens = np.zeros((n, 1), np.int32)  # next input token per slot
+        self._temps = np.zeros((n,), np.float32)
+        self._active_mask = np.zeros((n,), bool)
+
+        self._queue: deque[RequestState] = deque()
+        self._active: dict[int, RequestState] = {}  # slot -> request
+        self._free_slots: list[int] = list(range(n))
+        heapq.heapify(self._free_slots)
+        self._finished: dict[int, RequestState] = {}
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(sched.seed)
+
+        self.decode_traces = 0  # jit trace count of the decode hot path
+        self.total_decode_steps = 0
+        self.last_decode_logits: jax.Array | None = None
+
+        def _decode_fn(params, states, token, active):
+            # Python body runs only when jit (re)traces: counts compilations.
+            self.decode_traces += 1
+            logits, new_states = lm.decode_step(params, self.cfg, states, token, self.sctx)
+            # Freeze retired slots in place; their writes stay confined to one
+            # cache row that admission will overwrite.
+            new_pos = jnp.where(active, new_states["pos"], states["pos"])
+            return logits, {"layers": new_states["layers"], "pos": new_pos}
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill = jax.jit(lambda p, b: lm.prefill(p, self.cfg, b, self.sctx))
+
+        def _admit_fn(layers, pos, prefill_layers, slot, prompt_len):
+            target = init_decode_state(self.cfg, 1, self.sched.cache_len)
+            slot_layers = graft_states(target["layers"], prefill_layers, prompt_len)
+            new_layers = insert_slot(layers, slot_layers, slot)
+            return new_layers, pos.at[slot].set(prompt_len)
+
+        # prompt_len is static (ring placement is computed at trace time);
+        # slot is traced, so admission compiles once per prompt length.
+        self._admit_jit = jax.jit(_admit_fn, static_argnums=(4,))
+
+        def _sample_fn(logits, temps, key):
+            lg = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
+            greedy = jnp.argmax(lg, axis=-1)
+            scaled = lg / jnp.maximum(temps, 1e-6)[:, None]
+            sampled = jax.random.categorical(key, scaled, axis=-1)
+            return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
+
+        self._sample = jax.jit(_sample_fn)
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its request id."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(
+            RequestState(request=request, rid=rid, t_submit=time.perf_counter())
+        )
+        return rid
+
+    def reset_rng(self, seed: int) -> None:
+        self._key = jax.random.PRNGKey(seed)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def num_active(self) -> int:
+        return len(self._active)
+
+    def result(self, rid: int) -> RequestState:
+        return self._finished[rid]
+
+    def run(self) -> list[RequestState]:
+        """Drive steps until queue and slots drain; returns finished states
+        for the requests that were in flight at call time, in submission
+        order. Results are collected as requests retire, so they survive
+        ``keep_finished`` eviction even when one drain outruns the cap."""
+        in_flight = {rs.rid for rs in self._queue} | {
+            rs.rid for rs in self._active.values()
+        }
+        results: dict[int, RequestState] = {}
+        while self._queue or self._active:
+            self.step()
+            for rid in list(in_flight):
+                rs = self._finished.get(rid)
+                if rs is not None:
+                    results[rid] = rs
+                    in_flight.discard(rid)
+        return [results[r] for r in sorted(results)]
+
+    # -- one scheduling iteration ------------------------------------------
+    def step(self) -> bool:
+        """Admit from the queue, then run one decode step over active slots.
+
+        Returns True if a decode step ran."""
+        self._admit_pending()
+        if not self._active:
+            return False
+
+        self._key, sub = jax.random.split(self._key)
+        logits, self._states = self._decode(
+            self.params,
+            self._states,
+            jnp.asarray(self._tokens),
+            jnp.asarray(self._active_mask),
+        )
+        self.last_decode_logits = logits
+        cols = np.asarray(self._sample(logits[:, -1, :], jnp.asarray(self._temps), sub))
+        self.total_decode_steps += 1
+
+        now = time.perf_counter()
+        for slot, rs in list(self._active.items()):
+            rs.decode_steps += 1
+            tok = int(cols[slot])
+            rs.tokens.append(tok)
+            self._tokens[slot, 0] = tok
+            self._maybe_finish(rs, now)
+        return True
+
+    # -- internals ----------------------------------------------------------
+    def _admit_pending(self) -> None:
+        while self._free_slots and self._queue:
+            rs = self._queue.popleft()
+            req = rs.request
+            slot = heapq.heappop(self._free_slots)
+
+            prompt_len = req.prompt.shape[0] + (self.cfg.prefix_len or 0)
+            assert (
+                prompt_len + req.max_new_tokens <= self.sched.cache_len
+                or self.cfg.supports_long_context
+                or self.cfg.window_size
+            ), (
+                f"cache_len {self.sched.cache_len} too small for "
+                f"{prompt_len}+{req.max_new_tokens}"
+            )
+
+            batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(v)
+            logits, pstates = self._prefill(self.params, batch)
+
+            layers, pos = self._admit_jit(
+                self._states["layers"],
+                self._states["pos"],
+                pstates["layers"],
+                jnp.asarray(slot, jnp.int32),
+                prompt_len,
+            )
+            self._states = {"layers": layers, "pos": pos}
+
+            now = time.perf_counter()
+            self._key, sub = jax.random.split(self._key)
+            first = int(
+                np.asarray(
+                    self._sample(
+                        logits[:, -1, :],
+                        jnp.full((1,), req.temperature, jnp.float32),
+                        sub,
+                    )
+                )[0]
+            )
+            rs.slot = slot
+            rs.status = RequestStatus.ACTIVE
+            rs.tokens = [first]
+            rs.prefill_logits = np.asarray(logits[:, -1:, :])
+            rs.t_admit = now
+            rs.t_first_token = now
+            self._tokens[slot, 0] = first
+            self._temps[slot] = req.temperature
+            self._active_mask[slot] = True
+            self._active[slot] = rs
+            # A 1-token request (or an immediate stop) retires before ever
+            # riding the decode step, freeing the slot for this admission loop.
+            self._maybe_finish(rs, now)
+
+    def _maybe_finish(self, rs: RequestState, now: float) -> None:
+        req = rs.request
+        reason = None
+        if req.stop_token >= 0 and rs.tokens[-1] == req.stop_token:
+            reason = "stop"
+        elif len(rs.tokens) >= req.max_new_tokens:
+            reason = "length"
+        if reason is None:
+            return
+        slot = rs.slot
+        assert slot is not None
+        self._active_mask[slot] = False
+        self._tokens[slot, 0] = 0
+        del self._active[slot]
+        heapq.heappush(self._free_slots, slot)
+        rs.status = RequestStatus.FINISHED
+        rs.finish_reason = reason
+        rs.t_finish = now
+        self._finished[rs.rid] = rs
+        # Bound retention for long-running serving: evict the oldest finished
+        # states (dict preserves insertion order) beyond keep_finished.
+        while len(self._finished) > self.sched.keep_finished:
+            self._finished.pop(next(iter(self._finished)))
+
+    def stats(self) -> dict[str, Any]:
+        done = [r for r in self._finished.values()]
+        toks = sum(len(r.tokens) for r in done)
+        return {
+            "finished": len(done),
+            "generated_tokens": toks,
+            "decode_steps": self.total_decode_steps,
+            "decode_traces": self.decode_traces,
+            "pending": self.pending,
+            "active": self.num_active,
+        }

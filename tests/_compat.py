@@ -1,0 +1,139 @@
+"""Hypothesis fallback so tier-1 collects and runs everywhere.
+
+When ``hypothesis`` is installed it is re-exported untouched. When it is
+absent (minimal CI images), ``given``/``settings``/``st`` degrade to a
+deterministic example-based harness: each strategy is a seeded sampler and
+``@given`` expands to a loop over ``max_examples`` pseudo-random examples.
+That keeps the property tests meaningful (many diverse examples, stable
+across runs) without the shrinking/database machinery.
+
+Usage in test modules::
+
+    from _compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import string
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A deterministic sampler: ``draw(rng)`` returns one example."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=-(2**31), max_value=2**31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def text(alphabet=string.ascii_letters + string.digits, min_size=0, max_size=10):
+            chars = list(alphabet)
+
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return "".join(rng.choice(chars) for _ in range(n))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def dictionaries(keys, values, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                out = {}
+                # Oversample: duplicate keys collapse, mirroring hypothesis.
+                for _ in range(n * 3):
+                    if len(out) >= n:
+                        break
+                    out[keys.draw(rng)] = values.draw(rng)
+                return out
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    _PENDING_SETTINGS: dict[str, int] = {}
+
+    def settings(max_examples: int = 20, **_kw):
+        """Records max_examples for the @given applied to the same function.
+
+        Works in either decorator order because @given reads the marker off
+        the wrapped function, and @settings applied on top of the @given
+        wrapper stores it where the loop can see it.
+        """
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # Positional strategies fill the rightmost parameters (hypothesis
+            # semantics); resolve them to names so drawn values are passed by
+            # keyword and can never collide with fixture arguments.
+            sig = inspect.signature(fn)
+            param_names = list(sig.parameters)
+            pos_names = param_names[len(param_names) - len(arg_strategies):] if arg_strategies else []
+            strategies = dict(zip(pos_names, arg_strategies)) | kw_strategies
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", None) or getattr(
+                    fn, "_compat_max_examples", 20
+                )
+                # Seed from the test name: stable across runs and processes.
+                rng = random.Random(fn.__qualname__)
+                for i in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"example {i + 1}/{n} failed for {drawn}: {e}"
+                        ) from e
+
+            # Strip the strategy-bound parameters from the visible signature
+            # so pytest does not treat them as fixtures.
+            params = [p for p in sig.parameters.values() if p.name not in strategies]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco

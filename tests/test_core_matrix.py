@@ -2,7 +2,7 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, st
 
 from repro.core import ConfigMatrix, ConfigMatrixError, HashingError
 from repro.core.hashing import canonicalize, stable_hash, task_key

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, st
 
 from repro.ckpt.store import CheckpointStore
 from repro.configs.base import ModelConfig, ShapeConfig
