@@ -11,6 +11,9 @@ plus framework-level benchmarks:
   B7  train-step wall time for a tiny model (CPU, smoke scale)
   B8  dry-run roofline summary (from the cached sweep, if present)
   B9  continuous-batching serve throughput under Poisson arrivals
+  B10 paged-KV serving: mixed prompt sizes multiplexed over a fixed page
+      pool vs the contiguous per-slot baseline (tokens/s, p50/p95 latency,
+      peak cache bytes)
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -242,6 +245,84 @@ def bench_serve_throughput() -> None:
     )
 
 
+def bench_serve_paged() -> None:
+    """B10: paged-KV serving memory under mixed 32..2048-token prompts.
+
+    Drives the scheduler twice over the same workload — paged pool vs
+    contiguous per-slot rows — and reports tokens/s, p50/p95 latency, and
+    peak cache bytes. The paged pool is sized at half the contiguous
+    capacity: short requests pack around the long ones, and peak bytes
+    track live tokens (pages in use), not n_slots x cache_len.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.models import lm as _lm
+    from repro.models.schema import init_params
+    from repro.serve.request import Request
+    from repro.serve.scheduler import Scheduler, SchedulerConfig
+    from repro.sharding.rules import ShardingCtx
+
+    cfg = get_config("llama3.2-3b").reduced()
+    params = init_params(_lm.model_schema(cfg), jax.random.PRNGKey(0))
+    cache_len = 2176  # one 2048-token prompt + decode headroom
+    n_slots, page = 4, 64
+
+    rng = np.random.default_rng(0)
+    prompt_lens = [32, 64, 2048, 128, 32, 256, 512, 32]
+    requests = [
+        Request(
+            rng.integers(0, cfg.vocab_size, size=p).astype(np.int32),
+            max_new_tokens=8,
+        )
+        for p in prompt_lens
+    ]
+
+    for label, kw in (
+        ("contig", dict(paged=False)),
+        # Half the contiguous pool: admission multiplexes pages across slots.
+        ("paged", dict(paged=True, page_size=page, n_pages=(n_slots * cache_len) // (2 * page))),
+    ):
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(n_slots=n_slots, cache_len=cache_len, **kw),
+        )
+        # Warm compile per bucket so the measured run is steady-state.
+        for p in sorted({len(r.prompt) for r in requests}):
+            sched.submit(Request(np.zeros(p, np.int32), max_new_tokens=2))
+        sched.run()
+        # Peak/deferral counters must describe the measured run, not warmup.
+        if sched.pool is not None:
+            sched.pool.reset_peaks()
+        sched.deferred_admissions = 0
+
+        t0 = time.perf_counter()
+        rids = [sched.submit(r) for r in requests]
+        sched.run()
+        wall = time.perf_counter() - t0
+        done = [sched.result(r) for r in rids]
+        toks = sum(len(r.tokens) for r in done)
+        lat = np.array([r.latency_s for r in done])
+        p50, p95 = np.percentile(lat, 50), np.percentile(lat, 95)
+        cb = sched.paged_cache_bytes()
+        _row(
+            f"B10_serve_{label}_8req_{n_slots}slots",
+            wall * 1e6,
+            f"{toks / wall:.1f} tok/s p50={p50 * 1e3:.0f}ms p95={p95 * 1e3:.0f}ms "
+            + (
+                f"peak_cache_bytes={cb['peak_bytes']} "
+                f"(contiguous_equiv={cb['contiguous_bytes']}, "
+                f"pool={sched.pool.stats()['n_pages']}p x {page}tok) "
+                f"deferred={sched.stats()['deferred_admissions']} "
+                f"decode_traces={sched.decode_traces}"
+                if label == "paged"
+                else f"cache_bytes={n_slots}x{cache_len} rows "
+                f"decode_traces={sched.decode_traces}"
+            ),
+        )
+
+
 def bench_roofline_summary() -> None:
     try:
         from repro.launch.report import load_results
@@ -270,6 +351,7 @@ def main() -> None:
     bench_kernels()
     bench_train_step()
     bench_serve_throughput()
+    bench_serve_paged()
     bench_roofline_summary()
 
 

@@ -11,6 +11,14 @@ Layout: q (BKV, G, D) — one program per (batch, kv-head); G = query heads
 per kv head ride the sublane dim. k/v: (BKV, T, D). Validity is positional:
 slots with k_pos > cur_pos (or outside the window ring) are masked, so the
 same kernel serves dense caches and ring buffers.
+
+``paged_decode_attention`` is the paged-serving variant: KV lives in a
+shared page pool (P+1, page, KV, D) and each slot's blocks are gathered
+through its page-table row, passed as a scalar-prefetch operand so the
+BlockSpec index map DMAs physical pages directly — no gathered copy of
+the cache is ever materialised. Logical slot validity is computed
+in-kernel from the page index, so partially-filled tail pages and
+ring-folded windows need no extra inputs.
 """
 from __future__ import annotations
 
@@ -73,8 +81,12 @@ def decode_attention(
     k_pos: jax.Array,  # (T,) int32 positions held by each slot
     cur_pos: jax.Array,  # scalar int32
     *, window: int = 0, sm_scale: float | None = None, blk_k: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
     BKV, G, D = q.shape
     T = k.shape[1]
     blk_k = min(blk_k, T)
@@ -103,3 +115,105 @@ def decode_attention(
         ],
         interpret=interpret,
     )(q, k, v, k_pos, cur_pos[None].astype(jnp.int32))
+
+
+def _paged_decode_kernel(
+    pt_ref, cp_ref,  # scalar prefetch: (B, MP) page table, (B,) cur positions
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, sm_scale, window, page, n_lp,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)  # logical page (innermost: sequential accumulation)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(F32)  # (G, D)
+    k = k_ref[0, :, 0, :].astype(F32)  # (page, D)
+    v = v_ref[0, :, 0, :].astype(F32)
+    cur = cp_ref[b]
+
+    # Positional validity from the logical slot index alone: dense slots hold
+    # position s; ring slots s < window hold the latest p <= cur with
+    # p % window == s (negative -> never written). Tail-page slots past the
+    # write head and trash-page blocks fall out as invalid automatically.
+    s_idx = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
+    if window:
+        k_pos = cur - ((cur - s_idx) % window)
+        k_pos = jnp.where(s_idx < window, k_pos, -1)
+    else:
+        k_pos = s_idx
+    valid = (k_pos >= 0) & (k_pos <= cur)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32) * sm_scale
+    s = jnp.where(valid[None, :], s, NEG_INF)  # (G, page)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(j == n_lp - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,  # (B, KV, G, D)
+    k_pool: jax.Array,  # (P+1, page, KV, D) shared pool incl. trash page
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32 physical page per logical page
+    cur_pos: jax.Array,  # (B,) int32 position of each slot's query token
+    *, n_lp: int, window: int = 0, sm_scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash decode over page-table-gathered KV blocks.
+
+    One program per (slot, kv-head, logical page); the page table rides as a
+    scalar-prefetch operand so the k/v BlockSpecs DMA physical page
+    ``page_table[b, j]`` for grid step ``(b, h, j)``. ``n_lp`` bounds the
+    logical pages attended — ``ceil(window / page)`` for ring-folded
+    windowed layers (a bounded working set), the full table width for dense.
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    B, KV, G, D = q.shape
+    page = k_pool.shape[1]
+    sm = sm_scale if sm_scale is not None else D ** -0.5
+    assert n_lp <= page_table.shape[1], (n_lp, page_table.shape)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_lp),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, pt, cp: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D), lambda b, h, j, pt, cp: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D), lambda b, h, j, pt, cp: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, pt, cp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), F32),
+            pltpu.VMEM((G,), F32),
+            pltpu.VMEM((G,), F32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel, sm_scale=sm, window=window, page=page, n_lp=n_lp
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), cur_pos.astype(jnp.int32), q, k_pool, v_pool)

@@ -101,8 +101,12 @@ def flash_attention_fwd(
     v: jax.Array,  # (BH, Sk, D)
     *, causal: bool = True, window: int = 0, sm_scale: float | None = None,
     blk_q: int = 128, blk_k: int = 128, q_offset: int = 0,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
     BH, Sq, D = q.shape
     Sk = k.shape[1]
     blk_q = min(blk_q, Sq)
@@ -223,8 +227,12 @@ def _dkv_kernel(
 def flash_attention_bwd(
     q, k, v, o, lse, do,
     *, causal=True, window=0, sm_scale=None, blk_q=128, blk_k=128,
-    q_offset=0, interpret=True,
+    q_offset=0, interpret=None,
 ):
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
     BH, Sq, D = q.shape
     Sk = k.shape[1]
     blk_q = min(blk_q, Sq)

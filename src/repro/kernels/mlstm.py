@@ -94,8 +94,12 @@ def mlstm_chunk_kernel(
     v: jax.Array,
     i_pre: jax.Array,  # (BH, S)
     f_pre: jax.Array,  # (BH, S)
-    *, chunk: int = 64, interpret: bool = True,
+    *, chunk: int = 64, interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
     BH, S, dh = q.shape
     L = min(chunk, S)
     assert S % L == 0, (S, L)

@@ -37,8 +37,12 @@ def gmm(
     lhs: jax.Array,  # (M, K) rows sorted by group; group boundaries % blk_m == 0
     rhs: jax.Array,  # (G, K, N)
     group_map: jax.Array,  # (M // blk_m,) int32: m-block -> group id
-    *, blk_m: int = 128, blk_n: int = 128, interpret: bool = True,
+    *, blk_m: int = 128, blk_n: int = 128, interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
     M, K = lhs.shape
     G, K2, N = rhs.shape
     assert K == K2, (K, K2)

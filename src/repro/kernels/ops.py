@@ -103,6 +103,26 @@ def decode_attention_op(
     return o.reshape(B, KV, G, D).reshape(B, 1, H, D)
 
 
+def paged_decode_attention_op(
+    q: jax.Array,  # (B, 1, H, D)
+    k_pool: jax.Array,  # (P+1, page, KV, D) shared page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32
+    cur_pos: jax.Array,  # (B,) int32
+    *, n_lp: int, window: int = 0,
+) -> jax.Array:
+    """Model-layout paged decode: KV blocks gathered via the page table."""
+    B, _, H, D = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    qf = q.reshape(B, H, D).reshape(B, KV, G, D)
+    o = _dec.paged_decode_attention(
+        qf, k_pool, v_pool, page_table, cur_pos, n_lp=n_lp, window=window,
+        interpret=default_interpret(),
+    )
+    return o.reshape(B, 1, H, D)
+
+
 # ==========================================================================
 # Recurrences
 # ==========================================================================

@@ -49,8 +49,12 @@ def rglru_scan_kernel(
     b: jax.Array,  # (B, T, D) gated input
     h0: jax.Array | None = None,  # (B, D) initial state
     *, blk_t: int = 256, blk_d: int = 256, unroll: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
     B, T, D = a.shape
     blk_t = min(blk_t, T)
     blk_d = min(blk_d, D)

@@ -261,6 +261,7 @@ def gqa_attention(
     cache: KVCache | None = None,
     cur_pos: jax.Array | None = None,  # scalar, decode only
     use_rope: bool = True,
+    page_table: jax.Array | None = None,  # (B, max_pages) int32, paged decode only
     sctx: ShardingCtx,
 ) -> tuple[jax.Array, KVCache | None]:
     dt = cdt(cfg)
@@ -278,7 +279,49 @@ def gqa_attention(
         and not (cfg.prefix_lm and cfg.prefix_len)
         and x.shape[1] % min(128, x.shape[1]) == 0
     )
-    if mode == "decode":
+    if mode == "decode" and page_table is not None:
+        assert cache is not None and cur_pos is not None
+        # Paged decode: the cache is a shared page pool (P+1, page, kv, hd)
+        # and this slot's logical token s lives in physical page
+        # page_table[b, s // page] at offset s % page. Retired slots' table
+        # rows all point at the trash page (index P), so their frozen-pos
+        # garbage writes can never corrupt a live tenant's pages.
+        B = q.shape[0]
+        page = cache.k.shape[1]
+        max_pages = page_table.shape[1]
+        pos_v = jnp.broadcast_to(jnp.atleast_1d(cur_pos), (B,)).astype(jnp.int32)
+        wslot = pos_v % window if window else pos_v  # logical write slot
+        rows = jnp.arange(B)
+        pid = page_table[rows, wslot // page]  # (B,) physical page per slot
+        off = wslot % page
+        ck = cache.k.at[pid, off].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[pid, off].set(v[:, 0].astype(cache.v.dtype))
+        ck = constrain(ck, (None, None, "kv_heads", "head_dim"), sctx)
+        cv = constrain(cv, (None, None, "kv_heads", "head_dim"), sctx)
+        new_cache = KVCache(ck, cv)
+        # Windowed layers ring-fold into the leading ceil(window/page)
+        # table entries — a bounded page working set regardless of how
+        # wide the table is for dense layers.
+        n_lp = min(-(-window // page), max_pages) if window else max_pages
+        if cfg.attn_backend == "pallas":
+            from repro.kernels import ops as _kops
+
+            out = _kops.paged_decode_attention_op(
+                q, ck, cv, page_table, pos_v, n_lp=n_lp, window=window
+            ).astype(dt)
+        else:
+            sel = page_table[:, :n_lp]  # (B, n_lp)
+            T = n_lp * page
+            kg = ck[sel].reshape(B, T, *ck.shape[2:]).astype(dt)
+            vg = cv[sel].reshape(B, T, *cv.shape[2:]).astype(dt)
+            idx = jnp.arange(T, dtype=jnp.int32)
+            if window:
+                k_pos = pos_v[:, None] - ((pos_v[:, None] - idx[None, :]) % window)
+                k_pos = jnp.where(idx[None, :] < window, k_pos, -1)
+            else:
+                k_pos = jnp.broadcast_to(idx[None, :], (B, T))
+            out = _sdpa_decode(q, kg, vg, k_pos, pos_v, cfg, window=window)
+    elif mode == "decode":
         assert cache is not None and cur_pos is not None
         B, T = cache.k.shape[0], cache.k.shape[1]
         # cur_pos is a scalar (classic static batch: every row at the same

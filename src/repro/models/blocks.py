@@ -71,10 +71,46 @@ def block_schema(cfg: ModelConfig, kind: str) -> dict[str, Any]:
     raise ValueError(f"unknown block kind {kind}")
 
 
+def paged_kv_kinds(cfg: ModelConfig) -> set[str]:
+    """Block kinds whose decode KV caches live in the serving page pool.
+
+    Dense GQA and windowed attention page; MLA compressed caches,
+    recurrent states, and enc-dec cross blocks keep their per-slot
+    layout behind the same cache interface.
+    """
+    kinds = {"local_attn"}
+    if cfg.attn_kind != "mla":
+        kinds |= {"attn_mlp", "attn_moe"}
+    return kinds & (set(cfg.block_pattern) | set(cfg.first_blocks))
+
+
+def _paged_kv_pool_schema(cfg: ModelConfig, pages) -> dict[str, ParamSpec]:
+    """Pool-shaped KV leaves: (n_pages + 1, page_size, n_kv, head_dim).
+
+    The +1 page is the trash page all unused page-table entries point at
+    (see serve/pages.py). Pages are replicated across the mesh; heads
+    keep their TP sharding.
+    """
+    hd = cfg.resolved_head_dim
+    shape = (pages.total_pages, pages.page_size, cfg.n_kv_heads, hd)
+    axes = (None, None, "kv_heads", "head_dim")
+    return {
+        "k": ParamSpec(shape, axes, dtype=jnp.bfloat16, init="zeros"),
+        "v": ParamSpec(shape, axes, dtype=jnp.bfloat16, init="zeros"),
+    }
+
+
 def block_state_schema(
-    cfg: ModelConfig, kind: str, batch: int, s_max: int
+    cfg: ModelConfig, kind: str, batch: int, s_max: int, pages=None
 ) -> dict[str, Any] | None:
-    """Decode-state schema for one block (None when stateless)."""
+    """Decode-state schema for one block (None when stateless).
+
+    With ``pages`` (a serve.pages.PageLayout), paged kinds store their KV
+    as a shared page pool instead of per-slot rows; everything else is
+    unchanged.
+    """
+    if pages is not None and kind in paged_kv_kinds(cfg):
+        return _paged_kv_pool_schema(cfg, pages)
     if kind in ("attn_mlp", "attn_moe"):
         if cfg.attn_kind == "mla":
             return attn_mod.init_mla_cache(cfg, batch, s_max)
@@ -164,9 +200,12 @@ def apply_block(
     mask_kind: str,
     sctx: ShardingCtx,
     enc_out: jax.Array | None = None,
+    page_table: jax.Array | None = None,
 ) -> tuple[BlockIO, dict[str, Any] | None]:
     x, aux = io
     st = _state_to_struct(kind, cfg, state_raw)
+    if page_table is not None and kind not in paged_kv_kinds(cfg):
+        page_table = None
     eps = cfg.norm_eps
     new_st = None
 
@@ -183,7 +222,7 @@ def apply_block(
                 p["attn"], cfg, h, mode=mode, positions=positions,
                 mask_kind=mask_kind, window=window,
                 prefix_len=cfg.prefix_len if cfg.prefix_lm else 0,
-                cache=st, cur_pos=cur_pos,
+                cache=st, cur_pos=cur_pos, page_table=page_table,
                 sctx=sctx,
             )
         x = x + a
@@ -261,16 +300,45 @@ def stack_schema(cfg: ModelConfig) -> dict[str, Any]:
     return sch
 
 
-def stack_state_schema(cfg: ModelConfig, batch: int, s_max: int) -> dict[str, Any]:
+def stack_state_schema(
+    cfg: ModelConfig, batch: int, s_max: int, pages=None
+) -> dict[str, Any]:
     sch: dict[str, Any] = {}
     if cfg.first_blocks:
         sch["first"] = {
-            f"b{i}": block_state_schema(cfg, k, batch, s_max)
+            f"b{i}": block_state_schema(cfg, k, batch, s_max, pages=pages)
             for i, k in enumerate(cfg.first_blocks)
         }
     n_groups = cfg.n_pattern_groups
     sch["groups"] = {
-        f"g{i}": stack_specs(block_state_schema(cfg, k, batch, s_max), n_groups)
+        f"g{i}": stack_specs(block_state_schema(cfg, k, batch, s_max, pages=pages), n_groups)
+        for i, k in enumerate(cfg.block_pattern)
+    }
+    return sch
+
+
+def _block_paged_caps(cfg: ModelConfig, kind: str, s_max: int) -> dict[str, Any] | None:
+    """Per-leaf logical token capacity: >0 for pool leaves, 0 for per-slot."""
+    if kind in paged_kv_kinds(cfg):
+        cap = cfg.window_size if kind == "local_attn" else s_max
+        return {"k": cap, "v": cap}
+    raw = block_state_schema(cfg, kind, 1, s_max)
+    return jax.tree.map(lambda _: 0, raw, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_paged_caps(cfg: ModelConfig, s_max: int) -> dict[str, Any]:
+    """A pytree congruent with ``stack_state_schema`` whose int leaves give
+    each leaf's logical capacity when paged (0 = per-slot contiguous).
+    Stacking adds a leading layer axis but not tree structure, so the
+    unstacked caps line up with stacked group states."""
+    sch: dict[str, Any] = {}
+    if cfg.first_blocks:
+        sch["first"] = {
+            f"b{i}": _block_paged_caps(cfg, k, s_max)
+            for i, k in enumerate(cfg.first_blocks)
+        }
+    sch["groups"] = {
+        f"g{i}": _block_paged_caps(cfg, k, s_max)
         for i, k in enumerate(cfg.block_pattern)
     }
     return sch
@@ -288,6 +356,7 @@ def apply_stack(
     mask_kind: str = "causal",
     sctx: ShardingCtx,
     enc_out: jax.Array | None = None,
+    page_table: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, dict[str, Any] | None]:
     """Run the whole layer stack. Returns (x, aux_loss, new_states)."""
     io = BlockIO(x=x, aux=jnp.zeros((), F32))
@@ -301,7 +370,7 @@ def apply_stack(
         io, new_st = apply_block(
             params["first"][key], cfg, kind, io, mode=mode, positions=positions,
             cur_pos=cur_pos, state_raw=st,
-            mask_kind=mask_kind, sctx=sctx, enc_out=enc_out,
+            mask_kind=mask_kind, sctx=sctx, enc_out=enc_out, page_table=page_table,
         )
         if want_states:
             new_states["first"][key] = new_st
@@ -317,6 +386,7 @@ def apply_stack(
                 g_params[key], cfg, kind, carry, mode=mode, positions=positions,
                 cur_pos=cur_pos, state_raw=st,
                 mask_kind=mask_kind, sctx=sctx, enc_out=enc_out,
+                page_table=page_table,
             )
             new_group_states[key] = new_st
         return carry, (new_group_states if want_states else None)

@@ -71,9 +71,11 @@ def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
     )
 
 
-def decode_state_schema(cfg: ModelConfig, batch: int, s_max: int) -> dict[str, Any]:
+def decode_state_schema(
+    cfg: ModelConfig, batch: int, s_max: int, pages=None
+) -> dict[str, Any]:
     return {
-        "layers": blk.stack_state_schema(cfg, batch, s_max),
+        "layers": blk.stack_state_schema(cfg, batch, s_max, pages=pages),
         "pos": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
     }
 
@@ -152,8 +154,17 @@ def prefill(
         mask_kind=_mask_kind(cfg), sctx=sctx, enc_out=enc_out,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # Bucketed prefill right-pads prompts to a shared length; the logits of
+    # record are then at batch["logit_pos"] (the true last position — a
+    # traced scalar, so every prompt length in a bucket shares one program),
+    # not at the padded tail.
+    logit_pos = batch.get("logit_pos")
+    if logit_pos is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(logit_pos), 1, axis=1)
     logits = logits_for_positions(
-        x[:, -1:, :], unembed_weight(params["embed"], cfg), cfg, sctx
+        x_last, unembed_weight(params["embed"], cfg), cfg, sctx
     )
     states = {"layers": states, "pos": jnp.asarray(S, jnp.int32)}
     return logits, states
@@ -170,8 +181,14 @@ def decode_step(
     """One decode step. ``states["pos"]`` is either a scalar (static batch:
     every sequence at the same position) or (B,) (continuous batching: each
     slot at its own position). The output pos mirrors the input structure, so
-    the jitted step keeps a stable pytree either way."""
+    the jitted step keeps a stable pytree either way.
+
+    When ``states`` carries ``"page_table"`` (paged serving), dense/windowed
+    KV layers treat their cache leaves as shared page pools and route reads
+    and writes through the table; it passes through to the output unchanged
+    (the scheduler owns its values)."""
     cur_pos = jnp.asarray(states["pos"])
+    page_table = states.get("page_table")
     x = embed_tokens(params["embed"], cfg, token, sctx)
     x = x * jnp.asarray(cfg.d_model**0.5, cdt(cfg))
     if cur_pos.ndim == 0:
@@ -183,7 +200,11 @@ def decode_step(
         params["stack"], cfg, x, mode="decode", positions=positions,
         cur_pos=cur_pos,
         states=states["layers"], mask_kind=_mask_kind(cfg), sctx=sctx,
+        page_table=page_table,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_for_positions(x, unembed_weight(params["embed"], cfg), cfg, sctx)
-    return logits, {"layers": new_states, "pos": cur_pos + 1}
+    out = {"layers": new_states, "pos": cur_pos + 1}
+    if page_table is not None:
+        out["page_table"] = page_table
+    return logits, out

@@ -1,9 +1,9 @@
 """Slot-cache surgery for serving.
 
-Two layers of state rewriting, both shape-driven so they work for every
-state kind in the model zoo (dense KV, windowed ring KV, MLA compressed,
-recurrent h/conv, cross-attention encoder KV) and for scan-stacked group
-states with a leading layer axis:
+Shape-driven state rewriting that works for every state kind in the model
+zoo (dense KV, windowed ring KV, MLA compressed, recurrent h/conv,
+cross-attention encoder KV) and for scan-stacked group states with a
+leading layer axis:
 
   * ``graft_states`` — move prefill caches (allocated at prompt length S)
     into serving-length caches (cache_len): dense caches left-align, window
@@ -13,9 +13,21 @@ states with a leading layer axis:
   * ``insert_slot`` — write a single-slot (batch=1) serving-length state
     into slot ``s`` of the batched scheduler state. Here the single
     differing axis is the batch axis; equal shapes mean n_slots == 1.
+  * ``graft_pages_leaf`` — the paged-serving counterpart of graft+insert
+    for one dense/windowed KV leaf: the prefill cache is laid out
+    page-by-page and scattered into the shared pool at this slot's
+    physical page ids (see serve/pages.py).
 
-Both preserve the destination dtype (bf16 caches stay bf16 even when the
-prefill ran in fp32).
+``prompt_len`` may be a traced scalar: bucketed prefill pads prompts to a
+shared length, so the *shapes* here are per-bucket while the true prompt
+length is a runtime value. Ring placement handles that with fixed-shape
+index arithmetic (invalid entries are routed to a junk row and sliced
+off); padded positions beyond ``prompt_len`` may land in the cache as
+garbage, which is safe everywhere a cache is read through positional
+validity masking plus the decode write-before-read invariant.
+
+All grafts preserve the destination dtype (bf16 caches stay bf16 even
+when the prefill ran in fp32).
 """
 from __future__ import annotations
 
@@ -25,7 +37,26 @@ import jax
 import jax.numpy as jnp
 
 
-def _graft_leaf(dst: jax.Array, src: jax.Array, prompt_len: int) -> jax.Array:
+def _ring_fill(
+    dm: jax.Array,  # (W, ...) destination, moveaxis'd
+    sm: jax.Array,  # (S, ...) source with S >= ring capacity
+    prompt_len: jax.Array | int,
+    cap: int,  # ring modulus (== W here; < L for paged layouts)
+) -> jax.Array:
+    """Place source positions ``prompt_len - cap .. prompt_len - 1`` at ring
+    slot ``p % cap``. Entries with p < 0 (padded prompts shorter than the
+    ring) are scattered into a junk row appended past the end."""
+    W = dm.shape[0]
+    p = prompt_len - cap + jnp.arange(cap)
+    gsrc = jnp.take(sm, jnp.clip(p, 0, sm.shape[0] - 1), axis=0)
+    slot = jnp.where(p >= 0, p % cap, W)
+    padded = jnp.concatenate([dm, jnp.zeros_like(dm[:1])], axis=0)
+    return padded.at[slot].set(gsrc.astype(dm.dtype))[:W]
+
+
+def _graft_leaf(
+    dst: jax.Array, src: jax.Array, prompt_len: jax.Array | int
+) -> jax.Array:
     d, s = jnp.asarray(dst), jnp.asarray(src)
     if d.shape == s.shape:
         return s.astype(d.dtype)
@@ -40,9 +71,7 @@ def _graft_leaf(dst: jax.Array, src: jax.Array, prompt_len: int) -> jax.Array:
     W = dm.shape[0]
     if sm.shape[0] >= W:
         # ring buffer: the last W prompt positions land at slot p % W
-        tail = sm[-W:]
-        pos = jnp.arange(prompt_len - W, prompt_len) % W
-        dm = dm.at[pos].set(tail.astype(dm.dtype))
+        dm = _ring_fill(dm, sm, prompt_len, W)
     else:
         # dense cache longer than the prompt: left-aligned
         dm = dm.at[: sm.shape[0]].set(sm.astype(dm.dtype))
@@ -50,16 +79,34 @@ def _graft_leaf(dst: jax.Array, src: jax.Array, prompt_len: int) -> jax.Array:
 
 
 def graft_states(
-    target_layers: Any, prefill_layers: Any, prompt_len: int
+    target_layers: Any, prefill_layers: Any, prompt_len: jax.Array | int
 ) -> Any:
     """Graft prefill-length layer states into serving-length layer states.
 
-    ``prompt_len`` must be a Python int (the ring placement is computed
-    statically), so jitted callers take it as a static argument.
+    ``prompt_len`` may be a Python int or a traced scalar (one compiled
+    program per prefill *shape*, shared by every true length in a bucket).
     """
     return jax.tree.map(
         lambda d, s: _graft_leaf(d, s, prompt_len), target_layers, prefill_layers
     )
+
+
+def insert_slot_leaf(
+    dst: jax.Array, src: jax.Array, slot: jax.Array | int
+) -> jax.Array:
+    """Insert one batch-1 serving-length leaf at batch index ``slot``."""
+    d, s = jnp.asarray(dst), jnp.asarray(src)
+    if d.shape == s.shape:  # n_slots == 1
+        return s.astype(d.dtype)
+    if d.ndim != s.ndim:
+        raise ValueError(f"cannot insert slot state {s.shape} -> {d.shape}")
+    diff = [i for i in range(d.ndim) if d.shape[i] != s.shape[i]]
+    if len(diff) != 1 or s.shape[diff[0]] != 1:
+        raise ValueError(f"cannot insert slot state {s.shape} -> {d.shape}")
+    ax = diff[0]  # the batch axis
+    start = [0] * d.ndim
+    start[ax] = slot
+    return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), tuple(start))
 
 
 def insert_slot(full_layers: Any, slot_layers: Any, slot: jax.Array | int) -> Any:
@@ -68,19 +115,47 @@ def insert_slot(full_layers: Any, slot_layers: Any, slot: jax.Array | int) -> An
     ``slot`` may be a traced scalar: admission re-uses one compiled program
     for every slot index.
     """
+    return jax.tree.map(
+        lambda d, s: insert_slot_leaf(d, s, slot), full_layers, slot_layers
+    )
 
-    def ins(dst: jax.Array, src: jax.Array) -> jax.Array:
-        d, s = jnp.asarray(dst), jnp.asarray(src)
-        if d.shape == s.shape:  # n_slots == 1
-            return s.astype(d.dtype)
-        if d.ndim != s.ndim:
-            raise ValueError(f"cannot insert slot state {s.shape} -> {d.shape}")
-        diff = [i for i in range(d.ndim) if d.shape[i] != s.shape[i]]
-        if len(diff) != 1 or s.shape[diff[0]] != 1:
-            raise ValueError(f"cannot insert slot state {s.shape} -> {d.shape}")
-        ax = diff[0]  # the batch axis
-        start = [0] * d.ndim
-        start[ax] = slot
-        return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), tuple(start))
 
-    return jax.tree.map(ins, full_layers, slot_layers)
+def graft_pages_leaf(
+    pool: jax.Array,  # (P+1, page, kv, hd) or (L, P+1, page, kv, hd) stacked
+    src: jax.Array,  # (1, S, kv, hd) or (L, 1, S, kv, hd) prefill cache
+    page_ids: jax.Array,  # (max_pages,) physical ids, trash-padded
+    prompt_len: jax.Array | int,
+    cap: int,  # logical token capacity (cache_len dense / window ring)
+    page_size: int,
+) -> jax.Array:
+    """Scatter one prefill KV leaf into the shared page pool.
+
+    The prefill cache is first laid out logically — left-aligned for dense
+    leaves, ring-folded modulo ``cap`` for windowed leaves — then reshaped
+    into pages and scattered at this slot's physical page ids. Entries of
+    ``page_ids`` beyond the pages this leaf spans must point at the trash
+    page (writing it is always harmless).
+    """
+    pool, src = jnp.asarray(pool), jnp.asarray(src)
+    if pool.ndim not in (4, 5):  # (P+1, page, kv, hd) + optional layer axis
+        raise ValueError(f"unexpected paged KV leaf rank: {pool.shape}")
+    lead = pool.ndim - 4
+    if lead:  # scan-stacked groups: map the leading layer axis
+        return jax.vmap(
+            lambda pl_, s_: graft_pages_leaf(
+                pl_, s_, page_ids, prompt_len, cap, page_size
+            )
+        )(pool, src)
+    s = src[0]  # (S, kv, hd)
+    S = s.shape[0]
+    n_lp = min(-(-cap // page_size), page_ids.shape[0])
+    L = n_lp * page_size
+    tail = s.shape[1:]
+    if S >= cap:
+        # ring-fold: positions prompt_len-cap..prompt_len-1 at slot p % cap
+        # (cap may be < L when the window doesn't divide the page size;
+        # slots >= cap stay zero and are masked by the window validity).
+        logical = _ring_fill(jnp.zeros((L, *tail), pool.dtype), s, prompt_len, cap)
+    else:
+        logical = jnp.zeros((L, *tail), pool.dtype).at[:S].set(s.astype(pool.dtype))
+    return pool.at[page_ids[:n_lp]].set(logical.reshape(n_lp, page_size, *tail))

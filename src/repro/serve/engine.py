@@ -32,6 +32,11 @@ class ServeConfig:
     temperature: float = 0.0  # 0 => greedy
     stop_token: int = -1  # -1 => never stop early
     seed: int = 0
+    # Scheduler pass-through: paged KV pool + bucketed prefill (the static
+    # reference path ignores these — it always runs contiguous rows).
+    paged: bool = True
+    page_size: int = 16
+    prefill_buckets: bool = True
 
 
 @dataclass
@@ -66,7 +71,10 @@ class Engine:
             self._schedulers[n_slots] = Scheduler(
                 self.cfg, self.params, self.sctx,
                 SchedulerConfig(
-                    n_slots=n_slots, cache_len=self.serve.cache_len, seed=self.serve.seed
+                    n_slots=n_slots, cache_len=self.serve.cache_len,
+                    seed=self.serve.seed, paged=self.serve.paged,
+                    page_size=self.serve.page_size,
+                    prefill_buckets=self.serve.prefill_buckets,
                 ),
             )
         return self._schedulers[n_slots]

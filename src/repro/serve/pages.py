@@ -1,0 +1,185 @@
+"""Paged KV block pool for serving.
+
+Instead of one contiguous ``cache_len`` KV row per slot, every paged
+attention layer stores its cache as a pool of fixed-size pages
+``(n_pages + 1, page_size, n_kv, head_dim)`` shared across all slots; a
+per-slot page table (fixed-shape ``(n_slots, max_pages)`` int32, values
+change but never the shape) maps a slot's logical page ``j`` — token
+positions ``[j * page_size, (j + 1) * page_size)`` after ring folding —
+to a physical page id. The same page id addresses page-sized storage in
+every paged layer's pool simultaneously (one table, many pools), so the
+table is allocated once per slot, not per layer.
+
+The extra physical page (index ``n_pages``) is the **trash page**: every
+unused page-table entry points at it. Retired slots keep riding the
+fixed-shape decode step with a frozen position, and with a shared pool
+their garbage writes could corrupt a new tenant — pointing their whole
+table row at the trash page confines those writes to storage nobody
+reads (positional validity masks it everywhere else).
+
+``PagePool`` is the host-side allocator. Admission **reserves** a
+request's worst-case page count (prompt + max_new_tokens, ring-folded)
+so that mid-decode growth can never fail — the OOM-backpressure path is
+purely at admission time: if the pool cannot cover the reservation the
+request stays queued (deferred, never a corrupted live page). Pages are
+physically allocated lazily: the prompt's pages at admit, one more
+whenever decode crosses a page boundary, all returned at retirement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import paged_kv_kinds
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclass(frozen=True)
+class PageLayout:
+    """Static geometry of a paged serving cache."""
+
+    page_size: int  # tokens per page
+    n_pages: int  # physical pages in the pool (excluding the trash page)
+    span: int  # logical token capacity a single slot can address
+
+    @property
+    def max_pages(self) -> int:
+        """Page-table width: logical pages per slot."""
+        return cdiv(self.span, self.page_size)
+
+    @property
+    def total_pages(self) -> int:
+        """Physical pool length including the trash page."""
+        return self.n_pages + 1
+
+    @property
+    def trash(self) -> int:
+        """Physical id of the trash page (see module docstring)."""
+        return self.n_pages
+
+    def pages_for_len(self, length: int) -> int:
+        """Pages covering logical positions written by ``length`` tokens
+        (ring folding caps the footprint at ``span``)."""
+        if length <= 0 or self.span == 0:
+            return 0
+        return cdiv(min(length, self.span), self.page_size)
+
+
+def model_page_span(cfg: ModelConfig, cache_len: int) -> int:
+    """Logical token capacity that needs page backing for ``cfg``.
+
+    Dense KV layers address ``cache_len`` logical slots; windowed layers
+    ring-fold into ``window_size`` slots (they reuse the leading
+    ``ceil(window / page)`` entries of the same table). Models with no
+    paged layer kind (pure recurrent, MLA, enc-dec) need zero pages and
+    run the per-slot contiguous layout unchanged.
+    """
+    kinds = paged_kv_kinds(cfg)
+    span = 0
+    if kinds & {"attn_mlp", "attn_moe"}:
+        span = cache_len
+    if "local_attn" in kinds:
+        span = max(span, cfg.window_size)
+    return span
+
+
+class PagePool:
+    """Host-side page allocator with worst-case reservations.
+
+    Invariants (property-tested in ``tests/test_serve_pages.py``):
+      * a physical page is held by at most one slot (no aliasing),
+      * ``len(free) + sum(allocated)`` is constant (no leaks),
+      * ``sum(reserved - allocated) <= len(free)`` — growth up to each
+        slot's reservation can never fail.
+    """
+
+    def __init__(self, layout: PageLayout):
+        self.layout = layout
+        self._free: list[int] = list(range(layout.n_pages - 1, -1, -1))
+        self._allocated: dict[int, list[int]] = {}  # slot -> page ids
+        self._reserved: dict[int, int] = {}  # slot -> reserved page count
+        self.peak_in_use = 0
+        self.peak_reserved = 0
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return sum(len(p) for p in self._allocated.values())
+
+    @property
+    def reserved(self) -> int:
+        return sum(self._reserved.values())
+
+    def available(self) -> int:
+        """Pages admissible to a *new* reservation: free pages minus the
+        backing still owed to existing reservations."""
+        owed = sum(
+            self._reserved[s] - len(self._allocated.get(s, ()))
+            for s in self._reserved
+        )
+        return len(self._free) - owed
+
+    def allocated(self, slot: int) -> list[int]:
+        return self._allocated.get(slot, [])
+
+    def can_reserve(self, n: int) -> bool:
+        return n <= self.available()
+
+    # -- lifecycle ----------------------------------------------------------
+    def reserve(self, slot: int, n: int) -> None:
+        if slot in self._reserved:
+            raise ValueError(f"slot {slot} already holds a reservation")
+        if not self.can_reserve(n):
+            raise RuntimeError(
+                f"pool overcommit: reserve({n}) with only {self.available()} "
+                f"available of {self.layout.n_pages}"
+            )
+        self._reserved[slot] = n
+        self._allocated[slot] = []
+        self.peak_reserved = max(self.peak_reserved, self.reserved)
+
+    def grow_to(self, slot: int, n_total: int) -> list[int]:
+        """Allocate pages until ``slot`` holds ``n_total``; returns the new
+        page ids. Never fails within the slot's reservation."""
+        held = self._allocated[slot]
+        if n_total > self._reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot}: grow to {n_total} exceeds reservation "
+                f"{self._reserved[slot]}"
+            )
+        new = []
+        while len(held) < n_total:
+            new.append(self._free.pop())
+            held.append(new[-1])
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return new
+
+    def reset_peaks(self) -> None:
+        """Restart peak tracking (e.g. after a warmup phase) from the
+        current occupancy."""
+        self.peak_in_use = self.in_use
+        self.peak_reserved = self.reserved
+
+    def release(self, slot: int) -> None:
+        """Free every page the slot holds and drop its reservation."""
+        for pid in self._allocated.pop(slot, []):
+            self._free.append(pid)
+        self._reserved.pop(slot, None)
+
+    def stats(self) -> dict[str, int]:
+        return {
+            "n_pages": self.layout.n_pages,
+            "page_size": self.layout.page_size,
+            "pages_in_use": self.in_use,
+            "pages_reserved": self.reserved,
+            "pages_free": self.n_free,
+            "peak_pages_in_use": self.peak_in_use,
+            "peak_pages_reserved": self.peak_reserved,
+        }

@@ -48,6 +48,7 @@ class RequestState:
     rid: int
     status: RequestStatus = RequestStatus.QUEUED
     slot: int | None = None
+    prompt_len: int = 0  # tokens + modality prefix, set at admission
     tokens: list[int] = field(default_factory=list)
     finish_reason: str | None = None  # "stop" | "length"
     prefill_logits: np.ndarray | None = None  # (1, 1, V) last-position logits

@@ -1,27 +1,48 @@
-"""Continuous-batching request scheduler.
+"""Continuous-batching request scheduler over a paged KV block pool.
 
 The scheduler owns ``n_slots`` persistent decode slots backed by one batched
-decode state (KV/ring/recurrent caches at ``cache_len``). Requests flow
-through an admission queue; each admitted request gets a free slot:
+decode state. Dense and windowed attention KV caches live in a shared
+**page pool** — ``n_pages`` fixed-size pages multiplexed across all slots
+through a per-slot page table (see serve/pages.py) — so a slot's cache
+footprint is its live tokens rounded up to pages, not a worst-case
+``cache_len`` row. MLA compressed caches, recurrent states, and enc-dec
+caches keep their per-slot layout behind the same interface; models with
+no paged layer kind run exactly the PR-1 contiguous path.
 
-  1. **prefill** — the request's prompt runs through the jitted prefill
-     (compiled per prompt length), producing prompt-length caches,
-  2. **graft** — those caches are grafted into a slot-shaped serving cache
-     and inserted into the batched state at the slot's batch row (one
-     compiled program per prompt length; slot index is traced),
-  3. **decode** — the slot rides the shared ``(n_slots, 1)`` decode step with
-     an active mask and per-slot position indices,
-  4. **retire** — on stop-token or length the slot is freed and immediately
-     backfilled from the queue at the next step.
+Requests flow through an admission queue; each admitted request gets a
+free slot **and** a page reservation:
 
-The decode hot path is shape-stable by construction: tokens are always
-``(n_slots, 1)``, the active mask ``(n_slots,)``, positions ``(n_slots,)``
-— requests joining or leaving only changes array *values*, so the step
-never recompiles after its single warmup trace (``decode_traces`` counts
-traces for tests/monitoring). Inactive slots keep decoding garbage tokens
-with a frozen position; that is safe because a slot's cache row is always
-rewritten (graft at admission, write-before-read during decode) before any
-of it becomes visible through the position mask.
+  1. **admit** — admission checks pool capacity for the request's
+     worst-case page count (prompt + max_new_tokens, ring-folded). If the
+     pool can't cover it the queue defers (OOM backpressure: the request
+     waits, live pages are never touched). Otherwise the prompt's pages
+     are allocated and the slot's page-table row is written.
+  2. **prefill** — the prompt runs through the jitted prefill. With
+     ``prefill_buckets`` (attention-only models) prompts are right-padded
+     to power-of-two buckets so prefill/admit compile once per bucket,
+     not once per distinct length; the true last-token logits are read at
+     a traced ``logit_pos`` and padded cache garbage is handled by
+     positional validity masking.
+  3. **graft** — prompt-length caches are rewritten page-by-page into the
+     pool (dense left-aligned, windowed ring-folded) and per-slot states
+     are inserted at the slot's batch row; one compiled program per
+     prefill *shape*, slot index and true prompt length traced.
+  4. **decode** — the slot rides the shared ``(n_slots, 1)`` decode step;
+     crossing a page boundary allocates the next page from its
+     reservation (never fails) and updates the table row.
+  5. **retire** — on stop-token or length the slot frees its pages back
+     to the pool, its table row is pointed at the trash page, and the
+     slot is backfilled from the queue at the next step.
+
+The decode hot path is shape-stable by construction: tokens ``(n_slots,
+1)``, active mask ``(n_slots,)``, positions ``(n_slots,)``, page table
+``(n_slots, max_pages)`` int32 — joins, leaves, and page growth only
+change array *values*, so the step never recompiles after its single
+warmup trace (``decode_traces`` counts traces for tests/monitoring;
+``prefill_traces``/``admit_traces`` count per-bucket compiles). Inactive
+slots keep decoding garbage with a frozen position; their writes land in
+the trash page (paged) or their own about-to-be-overwritten row
+(contiguous), so no live state is ever visible through the masks.
 """
 from __future__ import annotations
 
@@ -36,19 +57,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
 from repro.models import lm
-from repro.serve.cache import graft_states, insert_slot
+from repro.serve.cache import (
+    _graft_leaf,
+    graft_pages_leaf,
+    graft_states,
+    insert_slot,
+    insert_slot_leaf,
+)
+from repro.serve.pages import PageLayout, PagePool, cdiv, model_page_span
 from repro.serve.request import Request, RequestState, RequestStatus
-from repro.serve.step import init_decode_state
+from repro.serve.step import init_decode_state, init_paged_decode_state
 from repro.sharding.rules import ShardingCtx
+
+_RECURRENT_KINDS = {"rglru", "mlstm", "slstm"}
 
 
 @dataclass
 class SchedulerConfig:
     n_slots: int = 4  # concurrent sequences in the batched decode state
-    cache_len: int = 256  # per-slot cache slots (>= prompt + new tokens for dense)
+    cache_len: int = 256  # per-slot logical cache slots (>= prompt + new tokens for dense)
     seed: int = 0
     keep_finished: int = 1024  # finished RequestStates retained for result()
+    # Paged KV pool (dense/windowed attention caches). n_pages=None sizes the
+    # pool at capacity parity with the contiguous layout (n_slots full rows);
+    # shrink it to multiplex a smaller pool across mixed-size requests.
+    paged: bool = True
+    page_size: int = 16  # tokens per page
+    n_pages: int | None = None
+    # Pad prompts to power-of-two buckets so prefill/admit compile once per
+    # bucket (auto-disabled for recurrent models, whose states would absorb
+    # the pad tokens).
+    prefill_buckets: bool = True
+    min_bucket: int = 8
 
 
 class Scheduler:
@@ -61,12 +103,33 @@ class Scheduler:
         self.sched = sched
         n = sched.n_slots
 
-        state = init_decode_state(cfg, n, sched.cache_len)
-        state["pos"] = jnp.zeros((n,), jnp.int32)  # per-slot positions
+        span = model_page_span(cfg, sched.cache_len) if sched.paged else 0
+        self._paged = span > 0
+        if self._paged:
+            n_pages = (
+                sched.n_pages
+                if sched.n_pages is not None
+                else n * cdiv(span, sched.page_size)
+            )
+            self.pages: PageLayout | None = PageLayout(
+                page_size=sched.page_size, n_pages=n_pages, span=span
+            )
+            self.pool: PagePool | None = PagePool(self.pages)
+            state = init_paged_decode_state(cfg, n, sched.cache_len, self.pages)
+            self._pt = np.full((n, self.pages.max_pages), self.pages.trash, np.int32)
+            state["page_table"] = jnp.asarray(self._pt)
+        else:
+            self.pages = None
+            self.pool = None
+            state = init_decode_state(cfg, n, sched.cache_len)
+            state["pos"] = jnp.zeros((n,), jnp.int32)
         self._states: dict[str, Any] = state
         self._tokens = np.zeros((n, 1), np.int32)  # next input token per slot
         self._temps = np.zeros((n,), np.float32)
         self._active_mask = np.zeros((n,), bool)
+
+        kinds = set(cfg.block_pattern) | set(cfg.first_blocks)
+        self._bucketed = sched.prefill_buckets and not (kinds & _RECURRENT_KINDS)
 
         self._queue: deque[RequestState] = deque()
         self._active: dict[int, RequestState] = {}  # slot -> request
@@ -77,30 +140,64 @@ class Scheduler:
         self._key = jax.random.PRNGKey(sched.seed)
 
         self.decode_traces = 0  # jit trace count of the decode hot path
+        self.prefill_traces = 0  # one per prompt bucket
+        self.admit_traces = 0  # one per prompt bucket
         self.total_decode_steps = 0
+        self.deferred_admissions = 0  # pool-backpressure events
+        self.finished_total = 0  # cumulative, survives keep_finished eviction
+        self.generated_tokens_total = 0
         self.last_decode_logits: jax.Array | None = None
 
         def _decode_fn(params, states, token, active):
             # Python body runs only when jit (re)traces: counts compilations.
             self.decode_traces += 1
             logits, new_states = lm.decode_step(params, self.cfg, states, token, self.sctx)
-            # Freeze retired slots in place; their writes stay confined to one
-            # cache row that admission will overwrite.
+            # Freeze retired slots in place; their writes stay confined to the
+            # trash page (paged) or one cache row admission will overwrite.
             new_pos = jnp.where(active, new_states["pos"], states["pos"])
-            return logits, {"layers": new_states["layers"], "pos": new_pos}
+            out = {"layers": new_states["layers"], "pos": new_pos}
+            if "page_table" in new_states:
+                out["page_table"] = new_states["page_table"]
+            return logits, out
 
         self._decode = jax.jit(_decode_fn)
-        self._prefill = jax.jit(lambda p, b: lm.prefill(p, self.cfg, b, self.sctx))
 
-        def _admit_fn(layers, pos, prefill_layers, slot, prompt_len):
-            target = init_decode_state(self.cfg, 1, self.sched.cache_len)
-            slot_layers = graft_states(target["layers"], prefill_layers, prompt_len)
-            new_layers = insert_slot(layers, slot_layers, slot)
-            return new_layers, pos.at[slot].set(prompt_len)
+        def _prefill_fn(p, b):
+            self.prefill_traces += 1
+            return lm.prefill(p, self.cfg, b, self.sctx)
 
-        # prompt_len is static (ring placement is computed at trace time);
-        # slot is traced, so admission compiles once per prompt length.
-        self._admit_jit = jax.jit(_admit_fn, static_argnums=(4,))
+        self._prefill = jax.jit(_prefill_fn)
+
+        if self._paged:
+            caps = blk.stack_paged_caps(cfg, sched.cache_len)
+            page_size = self.pages.page_size
+
+            def _admit_fn(layers, pos, prefill_layers, slot, page_ids, prompt_len):
+                self.admit_traces += 1
+                target = init_decode_state(self.cfg, 1, self.sched.cache_len)["layers"]
+
+                def leaf(cap, full, tgt, src):
+                    if cap:  # shared-pool KV leaf: scatter pages
+                        return graft_pages_leaf(
+                            full, src, page_ids, prompt_len, cap, page_size
+                        )
+                    return insert_slot_leaf(full, _graft_leaf(tgt, src, prompt_len), slot)
+
+                new_layers = jax.tree.map(leaf, caps, layers, target, prefill_layers)
+                return new_layers, pos.at[slot].set(prompt_len)
+
+        else:
+
+            def _admit_fn(layers, pos, prefill_layers, slot, prompt_len):
+                self.admit_traces += 1
+                target = init_decode_state(self.cfg, 1, self.sched.cache_len)
+                slot_layers = graft_states(target["layers"], prefill_layers, prompt_len)
+                new_layers = insert_slot(layers, slot_layers, slot)
+                return new_layers, pos.at[slot].set(prompt_len)
+
+        # slot and prompt_len are traced, so admission compiles once per
+        # prefill *shape* — with bucketing, once per bucket.
+        self._admit_jit = jax.jit(_admit_fn)
 
         def _sample_fn(logits, temps, key):
             lg = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
@@ -133,7 +230,21 @@ class Scheduler:
         return len(self._active)
 
     def result(self, rid: int) -> RequestState:
-        return self._finished[rid]
+        rs = self._finished.get(rid)
+        if rs is not None:
+            return rs
+        in_flight = any(r.rid == rid for r in self._active.values()) or any(
+            r.rid == rid for r in self._queue
+        )
+        if in_flight:
+            raise KeyError(f"request {rid} is not finished yet")
+        if 0 <= rid < self._next_rid:
+            raise KeyError(
+                f"request {rid} finished but its result was evicted "
+                f"(keep_finished={self.sched.keep_finished}); raise "
+                "keep_finished or collect results as requests retire (run())"
+            )
+        raise KeyError(f"unknown request id {rid}")
 
     def run(self) -> list[RequestState]:
         """Drive steps until queue and slots drain; returns finished states
@@ -161,6 +272,9 @@ class Scheduler:
         self._admit_pending()
         if not self._active:
             return False
+        if self._paged:
+            self._grow_pages()
+            self._states["page_table"] = jnp.asarray(self._pt)
 
         self._key, sub = jax.random.split(self._key)
         logits, self._states = self._decode(
@@ -183,12 +297,32 @@ class Scheduler:
         return True
 
     # -- internals ----------------------------------------------------------
+    def _grow_pages(self) -> None:
+        """Allocate the page backing the position each active slot writes
+        this step. Reservations guarantee this never fails."""
+        for slot, rs in self._active.items():
+            write_pos = rs.prompt_len + rs.decode_steps
+            need = self.pages.pages_for_len(write_pos + 1)
+            held = len(self.pool.allocated(slot))
+            if need > held:
+                self._pt[slot, held:need] = self.pool.grow_to(slot, need)
+
+    def _bucket_len(self, token_len: int) -> int:
+        """Power-of-two padded token count (identity when bucketing is off)."""
+        if not self._bucketed:
+            return token_len
+        b = max(self.sched.min_bucket, 1)
+        while b < token_len:
+            b *= 2
+        # Dense prompts never exceed cache_len (asserted at admission), so
+        # buckets are capped there to keep the padded prompt in one row.
+        cap = self.sched.cache_len - (self.cfg.prefix_len or 0)
+        return min(b, max(cap, token_len))
+
     def _admit_pending(self) -> None:
         while self._free_slots and self._queue:
-            rs = self._queue.popleft()
+            rs = self._queue[0]
             req = rs.request
-            slot = heapq.heappop(self._free_slots)
-
             prompt_len = req.prompt.shape[0] + (self.cfg.prefix_len or 0)
             assert (
                 prompt_len + req.max_new_tokens <= self.sched.cache_len
@@ -198,20 +332,60 @@ class Scheduler:
                 f"cache_len {self.sched.cache_len} too small for "
                 f"{prompt_len}+{req.max_new_tokens}"
             )
+            page_ids_arr = None
+            if self._paged:
+                n_reserve = self.pages.pages_for_len(prompt_len + req.max_new_tokens)
+                if n_reserve > self.pages.n_pages:
+                    # Never admissible even into an empty pool: fail fast
+                    # instead of deferring forever (run() would spin).
+                    raise RuntimeError(
+                        f"request {rs.rid} needs {n_reserve} pages worst-case "
+                        f"({prompt_len}+{req.max_new_tokens} tokens @ "
+                        f"{self.pages.page_size}/page) but the pool has only "
+                        f"{self.pages.n_pages}; raise n_pages or lower "
+                        "max_new_tokens"
+                    )
+                if not self.pool.can_reserve(n_reserve):
+                    # OOM backpressure: not enough pool headroom for this
+                    # request's worst case — defer admission (FIFO order is
+                    # preserved; live pages are never reclaimed or aliased).
+                    self.deferred_admissions += 1
+                    break
+            self._queue.popleft()
+            slot = heapq.heappop(self._free_slots)
+            if self._paged:
+                self.pool.reserve(slot, n_reserve)
+                n_admit = self.pages.pages_for_len(prompt_len)
+                self._pt[slot, :] = self.pages.trash
+                self._pt[slot, :n_admit] = self.pool.grow_to(slot, n_admit)
+                page_ids_arr = jnp.asarray(self._pt[slot])
 
-            batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+            tok_len = req.prompt.shape[0]
+            pad_to = self._bucket_len(tok_len)
+            toks = np.asarray(req.prompt)
+            if pad_to != tok_len:
+                toks = np.concatenate([toks, np.zeros(pad_to - tok_len, np.int32)])
+            batch = {"tokens": jnp.asarray(toks)[None, :]}
             for k, v in req.extras.items():
                 batch[k] = jnp.asarray(v)
+            if self._bucketed:
+                batch["logit_pos"] = jnp.asarray(prompt_len - 1, jnp.int32)
             logits, pstates = self._prefill(self.params, batch)
 
-            layers, pos = self._admit_jit(
-                self._states["layers"],
-                self._states["pos"],
-                pstates["layers"],
-                jnp.asarray(slot, jnp.int32),
-                prompt_len,
-            )
-            self._states = {"layers": layers, "pos": pos}
+            plen_t = jnp.asarray(prompt_len, jnp.int32)
+            slot_t = jnp.asarray(slot, jnp.int32)
+            if self._paged:
+                layers, pos = self._admit_jit(
+                    self._states["layers"], self._states["pos"], pstates["layers"],
+                    slot_t, page_ids_arr, plen_t,
+                )
+            else:
+                layers, pos = self._admit_jit(
+                    self._states["layers"], self._states["pos"], pstates["layers"],
+                    slot_t, plen_t,
+                )
+            self._states["layers"] = layers
+            self._states["pos"] = pos
 
             now = time.perf_counter()
             self._key, sub = jax.random.split(self._key)
@@ -225,6 +399,7 @@ class Scheduler:
                 )[0]
             )
             rs.slot = slot
+            rs.prompt_len = prompt_len
             rs.status = RequestStatus.ACTIVE
             rs.tokens = [first]
             rs.prefill_logits = np.asarray(logits[:, -1:, :])
@@ -253,23 +428,65 @@ class Scheduler:
         self._tokens[slot, 0] = 0
         del self._active[slot]
         heapq.heappush(self._free_slots, slot)
+        if self._paged:
+            # Free pages and point the table row at the trash page so the
+            # retired slot's frozen-position garbage writes can never touch
+            # a future tenant of these pages.
+            self.pool.release(slot)
+            self._pt[slot, :] = self.pages.trash
         rs.status = RequestStatus.FINISHED
         rs.finish_reason = reason
         rs.t_finish = now
         self._finished[rs.rid] = rs
+        self.finished_total += 1
+        self.generated_tokens_total += len(rs.tokens)
         # Bound retention for long-running serving: evict the oldest finished
         # states (dict preserves insertion order) beyond keep_finished.
         while len(self._finished) > self.sched.keep_finished:
             self._finished.pop(next(iter(self._finished)))
 
     def stats(self) -> dict[str, Any]:
-        done = [r for r in self._finished.values()]
-        toks = sum(len(r.tokens) for r in done)
-        return {
-            "finished": len(done),
-            "generated_tokens": toks,
+        out = {
+            # Cumulative — monotone even after keep_finished eviction.
+            "finished": self.finished_total,
+            "generated_tokens": self.generated_tokens_total,
+            "retained": len(self._finished),
             "decode_steps": self.total_decode_steps,
             "decode_traces": self.decode_traces,
+            "prefill_traces": self.prefill_traces,
+            "admit_traces": self.admit_traces,
             "pending": self.pending,
             "active": self.num_active,
+            "deferred_admissions": self.deferred_admissions,
+        }
+        if self._paged:
+            out["pages"] = self.pool.stats()
+        return out
+
+    # -- capacity accounting -------------------------------------------------
+    def paged_cache_bytes(self) -> dict[str, int]:
+        """Actual (peak pages in use) vs contiguous-equivalent cache bytes
+        for the paged KV leaves. Zeros when the model has no paged layer."""
+        if not self._paged:
+            return {"bytes_per_page": 0, "peak_bytes": 0, "contiguous_bytes": 0}
+        # Bytes of one page summed across every paged leaf (a physical page
+        # id addresses page-sized storage in every paged layer at once).
+        per_page = 0
+        caps = blk.stack_paged_caps(self.cfg, self.sched.cache_len)
+        for cap, leafarr in zip(
+            jax.tree.leaves(caps), jax.tree.leaves(self._states["layers"])
+        ):
+            if not cap:
+                continue
+            shape = leafarr.shape
+            lead = len(shape) - 4  # stacked layer axis
+            n_layers = shape[0] if lead else 1
+            page_elems = int(np.prod(shape[lead + 1:]))  # page * kv * hd
+            per_page += n_layers * page_elems * jnp.dtype(leafarr.dtype).itemsize
+        peak = self.pool.peak_in_use * per_page
+        contiguous = self.sched.n_slots * self.pages.max_pages * per_page
+        return {
+            "bytes_per_page": int(per_page),
+            "peak_bytes": int(peak),
+            "contiguous_bytes": int(contiguous),
         }

@@ -42,6 +42,17 @@ def init_decode_state(
     return state
 
 
+def init_paged_decode_state(
+    cfg: ModelConfig, batch: int, s_max: int, pages
+) -> dict[str, Any]:
+    """Decode state whose dense/windowed KV leaves are shared page pools
+    (``pages``: a serve.pages.PageLayout); other state kinds stay per-slot."""
+    schema = lm.decode_state_schema(cfg, batch, s_max, pages=pages)
+    state = init_params(schema, jax.random.PRNGKey(0))
+    state["pos"] = jnp.zeros((batch,), jnp.int32)
+    return state
+
+
 def token_specs(shape: ShapeConfig, sctx: ShardingCtx) -> jax.ShapeDtypeStruct:
     B = shape.global_batch
     if sctx.mesh is None:

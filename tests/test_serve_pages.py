@@ -1,0 +1,404 @@
+"""Paged KV serving: PagePool alloc/free invariants (property tests),
+paged-vs-static greedy token identity across the model zoo's state
+families, pool-capacity admission backpressure, shape-stable decode under
+page growth, bucketed-prefill compile counts, and the paged decode kernel
+vs its XLA gather reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _compat import given, settings, st
+
+from repro.configs.registry import get_config
+from repro.models import lm
+from repro.models.schema import init_params
+from repro.serve.cache import graft_pages_leaf
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.pages import PageLayout, PagePool, model_page_span
+from repro.serve.request import Request
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.sharding.rules import ShardingCtx
+
+
+def _params_for(name):
+    cfg = get_config(name).reduced()
+    return cfg, init_params(lm.model_schema(cfg), jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=p).astype(np.int32) for p in lengths]
+
+
+# ==========================================================================
+# PagePool invariants
+# ==========================================================================
+class TestPagePoolProperties:
+    @settings(max_examples=30)
+    @given(
+        n_pages=st.integers(min_value=1, max_value=40),
+        page_size=st.integers(min_value=1, max_value=32),
+        seed=st.integers(min_value=0, max_value=10_000),
+    )
+    def test_random_admit_retire_no_alias_no_leak(self, n_pages, page_size, seed):
+        """Under random reserve/grow/release traffic: a page is never held
+        by two slots, reservations are never overcommitted, and releasing
+        everything returns the pool to fully free."""
+        layout = PageLayout(page_size=page_size, n_pages=n_pages, span=n_pages * page_size)
+        pool = PagePool(layout)
+        rng = np.random.default_rng(seed)
+        live: dict[int, int] = {}  # slot -> reserved count
+        next_slot = 0
+        for _ in range(200):
+            op = rng.integers(0, 3)
+            if op == 0:  # admit
+                want = int(rng.integers(1, max(n_pages // 2, 2)))
+                if pool.can_reserve(want):
+                    pool.reserve(next_slot, want)
+                    pool.grow_to(next_slot, int(rng.integers(0, want + 1)))
+                    live[next_slot] = want
+                    next_slot += 1
+            elif op == 1 and live:  # grow an existing slot within reservation
+                slot = int(rng.choice(list(live)))
+                pool.grow_to(slot, int(rng.integers(0, live[slot] + 1)))
+            elif op == 2 and live:  # retire
+                slot = int(rng.choice(list(live)))
+                pool.release(slot)
+                del live[slot]
+            # no-alias: every allocated page id is unique across slots
+            held = [p for s in live for p in pool.allocated(s)]
+            assert len(held) == len(set(held)), "page aliased across slots"
+            # no-leak: free + allocated partitions the pool exactly
+            assert pool.n_free + len(held) == n_pages
+            # reservations stay backed: growth can never fail
+            assert pool.available() >= 0
+        for slot in list(live):
+            pool.release(slot)
+        assert pool.n_free == n_pages and pool.in_use == 0
+
+    def test_overcommit_and_overgrow_rejected(self):
+        pool = PagePool(PageLayout(page_size=4, n_pages=4, span=16))
+        pool.reserve(0, 3)
+        assert not pool.can_reserve(2)  # only 1 page unbacked
+        with pytest.raises(RuntimeError):
+            pool.reserve(1, 2)
+        pool.reserve(1, 1)
+        with pytest.raises(RuntimeError):
+            pool.grow_to(1, 2)  # beyond its reservation
+        pool.release(0)
+        assert pool.can_reserve(3)
+
+    def test_pages_for_len_ring_folds(self):
+        layout = PageLayout(page_size=8, n_pages=16, span=32)  # e.g. window 32
+        assert layout.pages_for_len(0) == 0
+        assert layout.pages_for_len(1) == 1
+        assert layout.pages_for_len(8) == 1
+        assert layout.pages_for_len(9) == 2
+        assert layout.pages_for_len(32) == 4
+        assert layout.pages_for_len(500) == 4  # ring reuse, bounded set
+        assert layout.max_pages == 4 and layout.trash == 16
+
+
+# ==========================================================================
+# Token identity: paged scheduler vs static engine, across state families
+# ==========================================================================
+class TestPagedTokenIdentity:
+    @pytest.mark.parametrize(
+        "arch",
+        [
+            "llama3.2-3b",  # dense GQA
+            "recurrentgemma-2b",  # windowed ring KV + recurrent hybrid
+            "deepseek-v2-236b",  # MLA (per-slot path behind same interface)
+            "xlstm-1.3b",  # pure recurrent: zero pages
+            "llama4-scout-17b-a16e",  # MoE, scan-stacked groups
+        ],
+    )
+    def test_greedy_paged_matches_static(self, arch):
+        cfg, params = _params_for(arch)
+        eng = Engine(
+            cfg, params, ShardingCtx.null(),
+            ServeConfig(max_new_tokens=5, cache_len=64, page_size=8),
+        )
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(7), (3, 9), 0, cfg.vocab_size)
+        }
+        np.testing.assert_array_equal(
+            eng.generate(batch).tokens, eng.generate_static(batch).tokens
+        )
+
+    def test_paged_matches_contiguous_scheduler(self):
+        """Same requests through a paged and a contiguous scheduler produce
+        identical greedy tokens (the pool is an invisible layout change)."""
+        cfg, params = _params_for("llama3.2-3b")
+        prompts = _prompts(cfg, [5, 11, 7, 9], seed=2)
+        outs = []
+        for paged in (True, False):
+            sched = Scheduler(
+                cfg, params, ShardingCtx.null(),
+                SchedulerConfig(n_slots=2, cache_len=64, paged=paged, page_size=8),
+            )
+            for p in prompts:
+                sched.submit(Request(p, max_new_tokens=6))
+            outs.append([rs.tokens for rs in sched.run()])
+        assert outs[0] == outs[1]
+
+    def test_ring_window_prompt_longer_than_window_paged(self):
+        """Windowed arch, prompt > window: ring-folded pages match static."""
+        cfg, params = _params_for("recurrentgemma-2b")
+        assert cfg.window_size and cfg.window_size < 40
+        eng = Engine(
+            cfg, params, ShardingCtx.null(),
+            ServeConfig(max_new_tokens=4, cache_len=64, page_size=8),
+        )
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 40), 0, cfg.vocab_size)
+        }
+        np.testing.assert_array_equal(
+            eng.generate(batch).tokens, eng.generate_static(batch).tokens
+        )
+
+
+# ==========================================================================
+# Admission against pool capacity (OOM backpressure)
+# ==========================================================================
+class TestPoolBackpressure:
+    def test_small_pool_defers_admission_and_stays_correct(self):
+        """A pool too small for two worst-case requests serializes them:
+        free slots alone don't admit, results still match solo runs."""
+        cfg, params = _params_for("llama3.2-3b")
+        page = 8
+        # Each request worst-cases at ceil((9 + 8)/8) = 3 pages; pool of 4
+        # pages fits one at a time even though 2 slots are free.
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(n_slots=2, cache_len=64, page_size=page, n_pages=4),
+        )
+        prompts = _prompts(cfg, [9, 9], seed=3)
+        r0 = sched.submit(Request(prompts[0], max_new_tokens=8))
+        r1 = sched.submit(Request(prompts[1], max_new_tokens=8))
+        sched.step()
+        assert sched.num_active == 1 and sched.pending == 1, (
+            "second request must defer on pool capacity, not slot count"
+        )
+        assert sched.stats()["deferred_admissions"] > 0
+        sched.run()
+        solo = Engine(
+            cfg, params, ShardingCtx.null(),
+            ServeConfig(max_new_tokens=8, cache_len=64, page_size=page),
+        )
+        for rid, p in ((r0, prompts[0]), (r1, prompts[1])):
+            expect = solo.generate_static({"tokens": p[None, :]}).tokens[0].tolist()
+            assert sched.result(rid).tokens == expect
+
+    def test_never_admissible_request_fails_fast(self):
+        """A request whose worst case exceeds the whole pool must raise a
+        clear error instead of deferring forever (run() would spin)."""
+        cfg, params = _params_for("llama3.2-3b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(n_slots=1, cache_len=64, page_size=8, n_pages=2),
+        )
+        sched.submit(Request(_prompts(cfg, [20])[0], max_new_tokens=8))
+        with pytest.raises(RuntimeError, match="pool has only 2"):
+            sched.run()
+
+    def test_zero_page_models_skip_pool(self):
+        """Pure-recurrent models need no pages; the paged config degrades to
+        the per-slot path with no pool at all."""
+        cfg, params = _params_for("xlstm-1.3b")
+        assert model_page_span(cfg, 64) == 0
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(n_slots=2, cache_len=64, paged=True),
+        )
+        assert sched.pool is None
+        sched.submit(Request(_prompts(cfg, [6])[0], max_new_tokens=3))
+        [rs] = sched.run()
+        assert len(rs.tokens) == 3
+
+
+# ==========================================================================
+# Shape stability + compile counts
+# ==========================================================================
+class TestPagedNoRecompile:
+    def test_single_decode_trace_across_churn_and_page_growth(self):
+        """Joins, retirements, and page-table growth (decode crossing page
+        boundaries) must never retrace the decode step: the page table is a
+        fixed-shape int32 array whose values change."""
+        cfg, params = _params_for("llama3.2-3b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            # page_size 4: every request crosses several page boundaries
+            SchedulerConfig(n_slots=2, cache_len=64, page_size=4),
+        )
+        prompts = _prompts(cfg, [4, 11, 7, 5], seed=4)
+        sched.submit(Request(prompts[0], max_new_tokens=6))
+        sched.submit(Request(prompts[1], max_new_tokens=9))
+        for _ in range(3):
+            sched.step()
+        sched.submit(Request(prompts[2], max_new_tokens=7))
+        sched.submit(Request(prompts[3], max_new_tokens=3))
+        sched.run()
+        assert sched.stats()["finished"] == 4
+        assert sched.decode_traces == 1, (
+            f"decode step retraced {sched.decode_traces}x; joins/retires/"
+            "page-growth must only change array values"
+        )
+        # Growth actually happened: some slot ended holding > 1 page worth.
+        assert sched.pool.peak_in_use >= 3
+
+    def test_prefill_buckets_bound_compiles(self):
+        """Many distinct prompt lengths inside one power-of-two bucket must
+        share a single prefill and a single admit compilation."""
+        cfg, params = _params_for("llama3.2-3b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(n_slots=1, cache_len=64, min_bucket=16),
+        )
+        assert sched._bucketed
+        for p in _prompts(cfg, [9, 10, 11, 12, 13, 16], seed=5):  # all -> bucket 16
+            sched.submit(Request(p, max_new_tokens=2))
+        sched.run()
+        assert sched.prefill_traces == 1, sched.prefill_traces
+        assert sched.admit_traces == 1, sched.admit_traces
+        sched.submit(Request(_prompts(cfg, [17], seed=6)[0], max_new_tokens=2))
+        sched.run()  # next bucket: exactly one more of each
+        assert sched.prefill_traces == 2 and sched.admit_traces == 2
+
+    def test_buckets_disabled_for_recurrent_models(self):
+        """Recurrent states would absorb pad tokens; bucketing auto-disables
+        and prefill compiles per exact length (correctness over compiles)."""
+        cfg, params = _params_for("recurrentgemma-2b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(), SchedulerConfig(n_slots=1, cache_len=64)
+        )
+        assert not sched._bucketed
+
+
+# ==========================================================================
+# Scheduler stats & result retention (satellite)
+# ==========================================================================
+class TestStatsAndEviction:
+    def test_cumulative_stats_survive_eviction(self):
+        cfg, params = _params_for("llama3.2-3b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(n_slots=2, cache_len=64, keep_finished=2),
+        )
+        rids = [
+            sched.submit(Request(p, max_new_tokens=3))
+            for p in _prompts(cfg, [4, 5, 6, 7, 8], seed=7)
+        ]
+        results = sched.run()
+        st_ = sched.stats()
+        assert st_["finished"] == 5, "cumulative count must survive eviction"
+        assert st_["generated_tokens"] == sum(len(r.tokens) for r in results) == 15
+        assert st_["retained"] == 2
+        # Oldest results were evicted: clear error, not a bare KeyError.
+        with pytest.raises(KeyError, match="evicted \\(keep_finished=2\\)"):
+            sched.result(rids[0])
+        sched.result(rids[-1])  # newest still retained
+        with pytest.raises(KeyError, match="unknown request id"):
+            sched.result(99)
+
+    def test_result_of_inflight_request(self):
+        cfg, params = _params_for("llama3.2-3b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(), SchedulerConfig(n_slots=1, cache_len=64)
+        )
+        rid = sched.submit(Request(_prompts(cfg, [4])[0], max_new_tokens=8))
+        sched.step()
+        with pytest.raises(KeyError, match="not finished"):
+            sched.result(rid)
+        sched.run()
+        assert sched.result(rid).done
+
+
+# ==========================================================================
+# Paged graft + paged decode kernel vs reference
+# ==========================================================================
+class TestPagedGraftAndKernel:
+    def test_graft_pages_dense_left_align(self):
+        P1, page, S = 5, 4, 6
+        pool = jnp.zeros((P1, page, 2, 3), jnp.bfloat16)
+        src = jnp.arange(S * 2 * 3, dtype=jnp.float32).reshape(1, S, 2, 3) + 1.0
+        ids = jnp.asarray([2, 0, 4, 4], jnp.int32)  # 2 real pages, trash-padded
+        out = graft_pages_leaf(pool, src, ids, S, cap=16, page_size=page)
+        got = np.concatenate([np.asarray(out[2], np.float32), np.asarray(out[0], np.float32)])
+        np.testing.assert_array_equal(got[:S], np.asarray(src[0].astype(jnp.bfloat16), np.float32))
+        np.testing.assert_array_equal(got[S:], 0.0)
+
+    def test_graft_pages_ring_fold_with_traced_len(self):
+        """Windowed leaf, prompt > window: last W positions land at p % W,
+        and a traced prompt_len produces the same pages as a static one."""
+        W, page, S = 8, 4, 13
+        pool = jnp.zeros((4, page, 2, 1), jnp.float32)
+        src = jnp.arange(S * 2, dtype=jnp.float32).reshape(1, S, 2, 1)
+        ids = jnp.asarray([1, 2, 3, 3], jnp.int32)
+        static = graft_pages_leaf(pool, src, ids, S, cap=W, page_size=page)
+        traced = jax.jit(
+            lambda pl_, s_, n: graft_pages_leaf(pl_, s_, ids, n, cap=W, page_size=page)
+        )(pool, src, jnp.asarray(S, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(static), np.asarray(traced))
+        ring = np.concatenate([np.asarray(static[1]), np.asarray(static[2])])
+        for p in range(S - W, S):
+            np.testing.assert_array_equal(ring[p % W], np.asarray(src[0, p]))
+
+    @pytest.mark.parametrize("window", [0, 13, 16])
+    def test_paged_kernel_matches_gather_reference(self, window):
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(0)
+        B, KV, G, D, page, P, MP = 3, 2, 4, 16, 8, 10, 4
+        kp = jnp.asarray(rng.normal(size=(P + 1, page, KV, D)).astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=(P + 1, page, KV, D)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(B, 1, KV * G, D)).astype(np.float32))
+        pt = np.full((B, MP), P, np.int32)  # trash-padded tables
+        pt[0, :3] = [0, 1, 2]
+        pt[1, :2] = [3, 4]
+        pt[2, :4] = [5, 6, 7, 8]
+        cur = jnp.asarray([17, 9, 30], jnp.int32)
+        n_lp = MP if not window else -(-window // page)
+
+        o = ops.paged_decode_attention_op(
+            q, kp, vp, jnp.asarray(pt), cur, n_lp=n_lp, window=window
+        )
+
+        # XLA reference: materialise the gather, mask by analytic positions.
+        T = MP * page
+        kg = kp[jnp.asarray(pt)].reshape(B, T, KV, D)
+        vg = vp[jnp.asarray(pt)].reshape(B, T, KV, D)
+        kb = jnp.broadcast_to(kg[:, :, :, None, :], (B, T, KV, G, D)).reshape(B, T, KV * G, D)
+        vb = jnp.broadcast_to(vg[:, :, :, None, :], (B, T, KV, G, D)).reshape(B, T, KV * G, D)
+        idx = jnp.arange(T)
+        if window:
+            k_pos = cur[:, None] - ((cur[:, None] - idx[None, :]) % window)
+            k_pos = jnp.where(idx[None, :] < window, k_pos, -1)
+        else:
+            k_pos = jnp.broadcast_to(idx[None, :], (B, T))
+        s = jnp.einsum("bhd,bthd->bht", q.reshape(B, KV * G, D), kb) * (D ** -0.5)
+        valid = (k_pos <= cur[:, None]) & (k_pos >= 0)
+        if window:
+            valid = valid & (k_pos > cur[:, None] - window)
+        s = jnp.where(valid[:, None, :], s, -1e30)
+        ref = jnp.einsum("bht,bthe->bhe", jax.nn.softmax(s, -1), vb).reshape(B, 1, KV * G, D)
+        err = float(jnp.max(jnp.abs(o - ref)))
+        assert err < 2e-5, err
+
+    def test_pallas_backend_end_to_end_paged_decode(self):
+        """attn_backend=pallas routes paged decode through the kernel; greedy
+        tokens must match the XLA gather path."""
+        from dataclasses import replace
+
+        cfg, params = _params_for("llama3.2-3b")
+        toks = []
+        for backend in ("xla", "pallas"):
+            c = replace(cfg, attn_backend=backend)
+            sched = Scheduler(
+                c, params, ShardingCtx.null(),
+                SchedulerConfig(n_slots=2, cache_len=64, page_size=16),
+            )
+            for p in _prompts(cfg, [7, 12], seed=8):
+                sched.submit(Request(p, max_new_tokens=4))
+            toks.append([rs.tokens for rs in sched.run()])
+        assert toks[0] == toks[1]
