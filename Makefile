@@ -1,4 +1,4 @@
-.PHONY: test bench demo
+.PHONY: test bench bench-smoke demo
 
 # Tier-1 verify (ROADMAP.md): must stay green.
 test:
@@ -6,6 +6,10 @@ test:
 
 bench:
 	PYTHONPATH=src python benchmarks/run.py
+
+# B1-B5 at tiny sizes: the CI end-to-end exercise of the experiment layer.
+bench-smoke:
+	PYTHONPATH=src python benchmarks/run.py --smoke
 
 demo:
 	PYTHONPATH=src python examples/serve_demo.py

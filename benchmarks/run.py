@@ -2,23 +2,30 @@
 
 The Memento paper's claims (demo paper, no numeric tables) map to:
   B1  configuration-matrix expansion scales to large experiment sets
+      (including composed matrices: products, filters, derived params)
   B2  parallel execution beats sequential for embarrassingly-parallel tasks
   B3  result caching makes re-runs ~free
   B4  in-task checkpointing bounds lost work on interruption
   B5  failure isolation: one broken task does not poison a run
-plus framework-level benchmarks:
+plus framework-level benchmarks, which since the Experiment API v2 run
+*through* Memento via the ``repro.experiments`` adapters (so they exercise
+caching/streaming/retries end-to-end, not hand-rolled loops):
   B6  per-kernel interpret-mode microbenches (us_per_call vs jnp oracle)
-  B7  train-step wall time for a tiny model (CPU, smoke scale)
+  B7  train-sweep cell wall time for a tiny model (CPU, smoke scale)
   B8  dry-run roofline summary (from the cached sweep, if present)
   B9  continuous-batching serve throughput under Poisson arrivals
   B10 paged-KV serving: mixed prompt sizes multiplexed over a fixed page
       pool vs the contiguous per-slot baseline (tokens/s, p50/p95 latency,
-      peak cache bytes)
+      peak cache bytes) — one matrix, ``paged`` as an axis
 
 Prints ``name,us_per_call,derived`` CSV rows.
+
+``--smoke`` runs B1–B5 at tiny sizes (seconds, no model compiles) — the CI
+end-to-end exercise of the experiment layer.
 """
 from __future__ import annotations
 
+import argparse
 import statistics
 import time
 
@@ -38,10 +45,21 @@ def _row(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
-def bench_matrix_expansion() -> None:
+def _value(result):
+    """Unwrap a TaskResult, surfacing the captured failure instead of a
+    NoneType error on ``.value`` access."""
+    if not result.ok:
+        raise RuntimeError(
+            f"benchmark task failed: {result.summary()}\n{result.traceback_str or ''}"
+        )
+    return result.value
+
+
+def bench_matrix_expansion(smoke: bool = False) -> None:
     from repro.core import ConfigMatrix
 
-    for n_axes, width in ((4, 10), (5, 12)):
+    shapes = ((3, 6),) if smoke else ((4, 10), (5, 12))
+    for n_axes, width in shapes:
         m = ConfigMatrix.from_dict(
             {"parameters": {f"p{i}": list(range(width)) for i in range(n_axes)}}
         )
@@ -52,43 +70,61 @@ def bench_matrix_expansion() -> None:
             f"{total/ (us/1e6):.0f} tasks/s incl hashing",
         )
 
+    # Composed expansion: product of two matrices, a callable exclude, and a
+    # derived parameter — the v2 algebra on the same hot path.
+    w = 4 if smoke else 8
+    m1 = ConfigMatrix.from_dict({"parameters": {"a": list(range(w)), "b": list(range(w))}})
+    m2 = ConfigMatrix.from_dict({"parameters": {"c": list(range(w))}})
+    comp = (m1 * m2).where(lambda p: p["a"] != p["c"]).derive("ab", lambda p: p["a"] * p["b"])
+    n_tasks = len(comp.task_list())
+    us = _t(lambda: comp.task_list(), n=2)
+    _row(
+        f"B1_matrix_algebra_{n_tasks}_tasks", us,
+        f"(m1*m2).where(a!=c).derive(ab) -> {n_tasks}/{w**3} tasks",
+    )
 
-def bench_parallel_speedup() -> None:
-    from repro.core import ConfigMatrix, Memento, RunnerConfig
+
+def bench_parallel_speedup(smoke: bool = False) -> None:
+    from repro.core import Memento, RunnerConfig
+
+    delay = 0.02 if smoke else 0.05
+    n_tasks = 4 if smoke else 8
 
     def sleepy(ctx):
-        time.sleep(0.05)
+        time.sleep(ctx.settings["delay"])
         return ctx["i"]
 
-    matrix = {"parameters": {"i": list(range(8))}}
+    matrix = {"parameters": {"i": list(range(n_tasks))}, "settings": {"delay": delay}}
     seq = Memento(sleepy, runner_config=RunnerConfig(max_workers=1, enable_speculation=False))
-    par = Memento(sleepy, runner_config=RunnerConfig(max_workers=8, enable_speculation=False))
+    par = Memento(sleepy, runner_config=RunnerConfig(max_workers=n_tasks, enable_speculation=False))
     t_seq = _t(lambda: seq.run(matrix, cache=False), n=2, warmup=0)
     t_par = _t(lambda: par.run(matrix, cache=False), n=2, warmup=0)
-    _row("B2_sequential_8x50ms", t_seq)
-    _row("B2_parallel_8workers", t_par, f"speedup={t_seq/t_par:.2f}x")
+    _row(f"B2_sequential_{n_tasks}x{delay*1e3:.0f}ms", t_seq)
+    _row(f"B2_parallel_{n_tasks}workers", t_par, f"speedup={t_seq/t_par:.2f}x")
 
 
-def bench_cache_speedup(tmpdir="/tmp/repro_bench_cache") -> None:
+def bench_cache_speedup(tmpdir="/tmp/repro_bench_cache", smoke: bool = False) -> None:
     import shutil
 
     from repro.core import Memento
 
     shutil.rmtree(tmpdir, ignore_errors=True)
+    delay = 0.02 if smoke else 0.05
+    n_tasks = 4 if smoke else 6
 
     def work(ctx):
-        time.sleep(0.05)
+        time.sleep(ctx.settings["delay"])
         return ctx["i"] ** 2
 
     eng = Memento(work, workdir=tmpdir)
-    matrix = {"parameters": {"i": list(range(6))}}
+    matrix = {"parameters": {"i": list(range(n_tasks))}, "settings": {"delay": delay}}
     t_cold = _t(lambda: eng.run(matrix), n=1, warmup=0)
     t_warm = _t(lambda: eng.run(matrix), n=3, warmup=0)
-    _row("B3_cold_run_6x50ms", t_cold)
+    _row(f"B3_cold_run_{n_tasks}x{delay*1e3:.0f}ms", t_cold)
     _row("B3_cached_rerun", t_warm, f"speedup={t_cold/max(t_warm,1e-9):.1f}x")
 
 
-def bench_checkpoint_overhead(tmpdir="/tmp/repro_bench_ckpt") -> None:
+def bench_checkpoint_overhead(tmpdir="/tmp/repro_bench_ckpt", smoke: bool = False) -> None:
     import shutil
 
     import jax.numpy as jnp
@@ -96,15 +132,17 @@ def bench_checkpoint_overhead(tmpdir="/tmp/repro_bench_ckpt") -> None:
     from repro.ckpt.store import CheckpointStore
 
     shutil.rmtree(tmpdir, ignore_errors=True)
-    state = {"w": jnp.ones((512, 512)), "m": jnp.ones((512, 512)), "step": jnp.ones(())}
+    dim = 64 if smoke else 512
+    state = {"w": jnp.ones((dim, dim)), "m": jnp.ones((dim, dim)), "step": jnp.ones(())}
     store = CheckpointStore(tmpdir)
     us_sync = _t(lambda: store.save(1, state, blocking=True), n=3)
     def async_save():
         store.save(2, state, blocking=False)
     us_async = _t(async_save, n=3)
     store.wait()
-    _row("B4_ckpt_save_2MB_sync", us_sync)
-    _row("B4_ckpt_save_2MB_async_enqueue", us_async, f"hidden={us_sync/max(us_async,1):.1f}x")
+    mb = state["w"].nbytes * 2 / 1e6
+    _row(f"B4_ckpt_save_{mb:.1f}MB_sync", us_sync)
+    _row(f"B4_ckpt_save_{mb:.1f}MB_async_enqueue", us_async, f"hidden={us_sync/max(us_async,1):.1f}x")
 
 
 def bench_failure_isolation() -> None:
@@ -155,171 +193,102 @@ def bench_kernels() -> None:
          f"oracle={_t(lambda: jax.block_until_ready(rr(a, b))):.0f}us")
 
 
-def bench_train_step() -> None:
-    import jax
+def bench_train_sweep() -> None:
+    """B7: one training cell through Memento + experiments.train_sweep."""
+    import shutil
 
-    from repro.configs.base import ShapeConfig
-    from repro.configs.registry import get_config
-    from repro.sharding.rules import ShardingCtx
-    from repro.train.step import make_train_setup, make_train_step
-    from repro.data.pipeline import make_batch_fn
+    from repro.core import Memento, RunnerConfig
+    from repro.experiments import train_matrix, train_sweep
 
-    cfg = get_config("llama3.2-3b").reduced()
-    shape = ShapeConfig("bench", "train", seq_len=64, global_batch=4)
-    setup = make_train_setup(cfg, shape, ShardingCtx.null())
-    step = jax.jit(make_train_step(setup), donate_argnums=(0,))
-    holder = {"state": setup.init_state(jax.random.PRNGKey(0))}
-    batch = make_batch_fn(cfg, shape)(0)
-
-    def once():
-        # thread the (donated) state through iterations
-        s, m = step(holder["state"], batch)
-        holder["state"] = s
-        jax.block_until_ready(m["loss_mean"])
-
-    us = _t(once, n=3)
-    toks = shape.tokens
-    _row("B7_train_step_smoke_llama", us, f"{toks/(us/1e6):.0f} tok/s CPU smoke")
+    # Fresh checkpoint dir: a leftover final checkpoint would make the run
+    # resume at its last step and train nothing.
+    shutil.rmtree("/tmp/repro_bench_train", ignore_errors=True)
+    matrix = train_matrix(
+        ["llama3.2-3b"], lrs=[1e-3], steps=8, seq_len=64, global_batch=4,
+        ckpt_every=1000, log_every=4,
+        workdir="/tmp/repro_bench_train",
+    )
+    eng = Memento(
+        train_sweep, namespace="train",
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    t0 = time.perf_counter()
+    res = eng.run(matrix, cache=False)
+    us = (time.perf_counter() - t0) * 1e6
+    v = _value(res[0])
+    _row(
+        "B7_train_sweep_smoke_llama", us,
+        f"{v['tokens_per_s']:.0f} tok/s CPU smoke (incl compile), "
+        f"loss {v['loss_first']:.3f} -> {v['loss_last']:.3f}",
+    )
 
 
 def bench_serve_throughput() -> None:
     """B9: continuous-batching scheduler under Poisson arrivals with mixed
-    prompt/output lengths. Reports aggregate tokens/s and p50/p95 request
-    latency (submit -> last token)."""
-    import jax
-    import numpy as np
+    prompt lengths, driven through Memento + experiments.serve_sweep."""
+    from repro.core import Memento, RunnerConfig
+    from repro.experiments import serve_matrix, serve_sweep
 
-    from repro.configs.registry import get_config
-    from repro.models import lm
-    from repro.models.schema import init_params
-    from repro.serve.request import Request
-    from repro.serve.scheduler import Scheduler, SchedulerConfig
-    from repro.sharding.rules import ShardingCtx
-
-    cfg = get_config("llama3.2-3b").reduced()
-    params = init_params(lm.model_schema(cfg), jax.random.PRNGKey(0))
-    sched = Scheduler(
-        cfg, params, ShardingCtx.null(), SchedulerConfig(n_slots=4, cache_len=64)
+    matrix = serve_matrix(
+        ["llama3.2-3b"], backends=["xla"],
+        scheduler={"n_slots": [4]},
+        cache_len=64, n_requests=12, prompt_lens=(4, 8, 12),
+        max_new_tokens=8, arrival_rate_hz=20.0, warmup=True,
     )
-
-    rng = np.random.default_rng(0)
-    n_req = 12
-    arrivals = np.cumsum(rng.exponential(scale=0.05, size=n_req))  # Poisson process
-    prompt_lens = rng.choice([4, 8, 12], size=n_req)
-    out_lens = rng.choice([4, 8], size=n_req)
-    requests = [
-        Request(
-            rng.integers(0, cfg.vocab_size, size=int(p)).astype(np.int32),
-            max_new_tokens=int(o),
-        )
-        for p, o in zip(prompt_lens, out_lens)
-    ]
-
-    # Warm every prompt-length bucket (prefill/admit compile per length) and
-    # the decode step so the measured run sees steady-state latencies.
-    for p in sorted(set(int(x) for x in prompt_lens)):
-        sched.submit(Request(np.zeros(p, np.int32), max_new_tokens=2))
-    sched.run()
-
-    rids = []
-    t0 = time.perf_counter()
-    i = 0
-    while i < n_req or sched.pending or sched.num_active:
-        now = time.perf_counter() - t0
-        while i < n_req and arrivals[i] <= now:
-            rids.append(sched.submit(requests[i]))
-            i += 1
-        if not sched.step() and i < n_req:
-            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
-    wall = time.perf_counter() - t0
-
-    done = [sched.result(r) for r in rids]
-    toks = sum(len(r.tokens) for r in done)
-    lat = np.array([r.latency_s for r in done])
-    p50, p95 = np.percentile(lat, 50), np.percentile(lat, 95)
+    eng = Memento(
+        serve_sweep, namespace="serve",
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    res = eng.run(matrix, cache=False)
+    v = _value(res[0])
     _row(
         "B9_serve_poisson_12req_4slots",
-        wall * 1e6,
-        f"{toks / wall:.1f} tok/s p50={p50 * 1e3:.0f}ms p95={p95 * 1e3:.0f}ms "
-        f"decode_traces={sched.decode_traces}",
+        v["wall_s"] * 1e6,
+        f"{v['tokens_per_s']:.1f} tok/s p50={v['latency_p50_s']*1e3:.0f}ms "
+        f"p95={v['latency_p95_s']*1e3:.0f}ms decode_traces={v['decode_traces']}",
     )
 
 
 def bench_serve_paged() -> None:
     """B10: paged-KV serving memory under mixed 32..2048-token prompts.
 
-    Drives the scheduler twice over the same workload — paged pool vs
-    contiguous per-slot rows — and reports tokens/s, p50/p95 latency, and
-    peak cache bytes. The paged pool is sized at half the contiguous
-    capacity: short requests pack around the long ones, and peak bytes
-    track live tokens (pages in use), not n_slots x cache_len.
+    One Memento matrix with ``paged`` as an axis replays the same workload
+    through the page pool (sized at half the contiguous capacity) and the
+    contiguous per-slot baseline; short requests pack around the long ones,
+    and peak bytes track live pages, not n_slots x cache_len.
     """
-    import jax
-    import numpy as np
+    from repro.core import Memento, RunnerConfig
+    from repro.experiments import serve_matrix, serve_sweep
 
-    from repro.configs.registry import get_config
-    from repro.models import lm as _lm
-    from repro.models.schema import init_params
-    from repro.serve.request import Request
-    from repro.serve.scheduler import Scheduler, SchedulerConfig
-    from repro.sharding.rules import ShardingCtx
-
-    cfg = get_config("llama3.2-3b").reduced()
-    params = init_params(_lm.model_schema(cfg), jax.random.PRNGKey(0))
-    cache_len = 2176  # one 2048-token prompt + decode headroom
-    n_slots, page = 4, 64
-
-    rng = np.random.default_rng(0)
-    prompt_lens = [32, 64, 2048, 128, 32, 256, 512, 32]
-    requests = [
-        Request(
-            rng.integers(0, cfg.vocab_size, size=p).astype(np.int32),
-            max_new_tokens=8,
+    cache_len, n_slots, page = 2176, 4, 64
+    matrix = serve_matrix(
+        ["llama3.2-3b"], backends=["xla"],
+        scheduler={"paged": [False, True]},
+        cache_len=cache_len, n_slots=n_slots, page_size=page,
+        n_pages=(n_slots * cache_len) // (2 * page),
+        n_requests=8, prompt_lens=(32, 64, 2048, 128, 32, 256, 512, 32),
+        max_new_tokens=8, warmup=True,
+    )
+    eng = Memento(
+        serve_sweep, namespace="serve",
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    for r in eng.run(matrix, cache=False):
+        v = _value(r)
+        label = "paged" if v["paged"] else "contig"
+        extra = (
+            f"peak_cache_bytes={v['peak_cache_bytes']} "
+            f"(contiguous_equiv={v['contiguous_cache_bytes']}) "
+            f"deferred={v['deferred_admissions']} "
+            if v["paged"]
+            else f"cache_bytes={n_slots}x{cache_len} rows "
         )
-        for p in prompt_lens
-    ]
-
-    for label, kw in (
-        ("contig", dict(paged=False)),
-        # Half the contiguous pool: admission multiplexes pages across slots.
-        ("paged", dict(paged=True, page_size=page, n_pages=(n_slots * cache_len) // (2 * page))),
-    ):
-        sched = Scheduler(
-            cfg, params, ShardingCtx.null(),
-            SchedulerConfig(n_slots=n_slots, cache_len=cache_len, **kw),
-        )
-        # Warm compile per bucket so the measured run is steady-state.
-        for p in sorted({len(r.prompt) for r in requests}):
-            sched.submit(Request(np.zeros(p, np.int32), max_new_tokens=2))
-        sched.run()
-        # Peak/deferral counters must describe the measured run, not warmup.
-        if sched.pool is not None:
-            sched.pool.reset_peaks()
-        sched.deferred_admissions = 0
-
-        t0 = time.perf_counter()
-        rids = [sched.submit(r) for r in requests]
-        sched.run()
-        wall = time.perf_counter() - t0
-        done = [sched.result(r) for r in rids]
-        toks = sum(len(r.tokens) for r in done)
-        lat = np.array([r.latency_s for r in done])
-        p50, p95 = np.percentile(lat, 50), np.percentile(lat, 95)
-        cb = sched.paged_cache_bytes()
         _row(
             f"B10_serve_{label}_8req_{n_slots}slots",
-            wall * 1e6,
-            f"{toks / wall:.1f} tok/s p50={p50 * 1e3:.0f}ms p95={p95 * 1e3:.0f}ms "
-            + (
-                f"peak_cache_bytes={cb['peak_bytes']} "
-                f"(contiguous_equiv={cb['contiguous_bytes']}, "
-                f"pool={sched.pool.stats()['n_pages']}p x {page}tok) "
-                f"deferred={sched.stats()['deferred_admissions']} "
-                f"decode_traces={sched.decode_traces}"
-                if label == "paged"
-                else f"cache_bytes={n_slots}x{cache_len} rows "
-                f"decode_traces={sched.decode_traces}"
-            ),
+            v["wall_s"] * 1e6,
+            f"{v['tokens_per_s']:.1f} tok/s p50={v['latency_p50_s']*1e3:.0f}ms "
+            f"p95={v['latency_p95_s']*1e3:.0f}ms {extra}"
+            f"decode_traces={v['decode_traces']}",
         )
 
 
@@ -341,19 +310,26 @@ def bench_roofline_summary() -> None:
         )
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
-    bench_matrix_expansion()
-    bench_parallel_speedup()
-    bench_cache_speedup()
-    bench_checkpoint_overhead()
+    bench_matrix_expansion(smoke)
+    bench_parallel_speedup(smoke)
+    bench_cache_speedup(smoke=smoke)
+    bench_checkpoint_overhead(smoke=smoke)
     bench_failure_isolation()
+    if smoke:
+        return
     bench_kernels()
-    bench_train_step()
+    bench_train_sweep()
     bench_serve_throughput()
     bench_serve_paged()
     bench_roofline_summary()
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="B1-B5 only, tiny sizes (CI end-to-end exercise of the experiment layer)",
+    )
+    main(**vars(ap.parse_args()))

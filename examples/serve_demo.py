@@ -1,45 +1,46 @@
-"""Continuous-batching serving demo.
+"""Continuous-batching serving demo, driven through the Memento core.
 
-Drives the slot-based scheduler directly: requests with different prompt
-and output lengths are submitted while earlier ones are mid-decode, short
-requests retire early, and freed slots are backfilled from the queue — all
-on one fixed-shape jitted decode step (watch ``decode_traces`` stay at 1).
-Runs across three state families (dense GQA KV, hybrid RG-LRU + window
-ring buffer, xLSTM recurrent matrix state) through one API.
+A serving sweep is an experiment matrix like any other: three state
+families (dense GQA KV, hybrid RG-LRU + window ring buffer, xLSTM recurrent
+matrix state) crossed with scheduler settings, run through
+``repro.experiments.serve_sweep`` so the sweep inherits caching and
+streaming — re-run the demo and every row returns instantly from cache.
+Watch ``decode_traces`` stay at 1: requests join/leave mid-decode on one
+fixed-shape jitted step.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
-import jax
-import numpy as np
+import repro.core as memento
+from repro.experiments import serve_matrix, serve_sweep
 
-from repro.configs.registry import get_config
-from repro.models import lm
-from repro.models.schema import init_params
-from repro.serve.request import Request
-from repro.serve.scheduler import Scheduler, SchedulerConfig
-from repro.sharding.rules import ShardingCtx
+matrix = serve_matrix(
+    ["llama3.2-3b", "recurrentgemma-2b", "xlstm-1.3b"],
+    backends=["xla"],
+    scheduler={"n_slots": [2]},
+    cache_len=64,
+    n_requests=3,
+    prompt_lens=(12, 6, 9),
+    max_new_tokens=8,
+    warmup=False,
+)
 
-for arch in ("llama3.2-3b", "recurrentgemma-2b", "xlstm-1.3b"):
-    cfg = get_config(arch).reduced()
-    params = init_params(lm.model_schema(cfg), jax.random.PRNGKey(0))
-    sched = Scheduler(cfg, params, ShardingCtx.null(), SchedulerConfig(n_slots=2, cache_len=64))
+eng = memento.Memento(
+    serve_sweep,
+    memento.ConsoleNotificationProvider(verbose=False),
+    workdir=".memento-serve-demo",
+    namespace="serve",
+    runner_config=memento.RunnerConfig(max_workers=1, enable_speculation=False),
+)
 
-    rng = np.random.default_rng(1)
-    rids = [
-        sched.submit(Request(rng.integers(0, cfg.vocab_size, size=p).astype(np.int32), max_new_tokens=m))
-        for p, m in ((12, 4), (6, 8))
-    ]
-    for _ in range(3):  # two in flight...
-        sched.step()
-    rids.append(  # ...a third arrives mid-decode and backfills the first free slot
-        sched.submit(Request(rng.integers(0, cfg.vocab_size, size=9).astype(np.int32), max_new_tokens=5))
+for r in eng.stream(matrix):
+    if not r.ok:
+        print(r.summary())
+        continue
+    v = r.value
+    print(
+        f"{v['arch']:22s} [{r.status:6s}] {v['generated_tokens']} tokens "
+        f"@ {v['tokens_per_s']:.1f} tok/s  p50={v['latency_p50_s']*1e3:.0f}ms "
+        f"decode_traces={v['decode_traces']}"
     )
-    sched.run()
-
-    print(f"{arch:22s} {sched.stats()}")
-    for rid in rids:
-        rs = sched.result(rid)
-        print(
-            f"  req{rid} slot={rs.slot} prompt={len(rs.request.prompt):2d} "
-            f"-> {len(rs.tokens)} tokens ({rs.finish_reason}): {rs.tokens}"
-        )
+    for i, toks in enumerate(v["tokens"]):
+        print(f"  req{i} -> {len(toks)} tokens: {toks}")

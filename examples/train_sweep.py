@@ -6,37 +6,18 @@ deterministic synthetic pipeline; kill the process at any time and re-run —
 finished cells come from cache, the interrupted cell resumes from its last
 sharded checkpoint.
 
+The sweep runs through the v2 experiment API: the matrix is composed with
+the algebra (lr axis x int8 axis, a callable exclude for the known-divergent
+combo), the experiment function is the shared ``repro.experiments.train_sweep``
+adapter, and results stream in as each cell lands.
+
     PYTHONPATH=src python examples/train_sweep.py [--steps 200]
 """
 import argparse
 
 import repro.core as memento
-from repro.configs.base import ShapeConfig
-from repro.configs.registry import get_config
-from repro.data.pipeline import DataConfig
-from repro.sharding.rules import ShardingCtx
-from repro.train.loop import TrainRunConfig, train_run
-from repro.train.optimizer import AdamWConfig, Schedule
-
-
-def train_task(ctx: memento.Context):
-    cfg = get_config(ctx["arch"]).reduced()
-    shape = ShapeConfig("sweep", "train", seq_len=64, global_batch=8)
-    run = TrainRunConfig(
-        steps=ctx.settings["steps"],
-        ckpt_every=50,
-        log_every=20,
-        ckpt_dir=f"{ctx.settings['workdir']}/ckpt-{ctx.key[:10]}",
-        opt=AdamWConfig(
-            schedule=Schedule(base_lr=ctx["lr"], warmup_steps=20, total_steps=ctx.settings["steps"]),
-            int8_moments=ctx["int8_opt"],
-        ),
-        data=DataConfig(seed=0, vocab_size=cfg.vocab_size, noise=0.05),
-    )
-    res = train_run(cfg, shape, ShardingCtx.null(), run, ctx=ctx)
-    return {"lr": ctx["lr"], "int8": ctx["int8_opt"],
-            "loss_first": res["loss_first"], "loss_last": res["loss_last"]}
-
+from repro.core import ConfigMatrix
+from repro.experiments import train_sweep
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -44,26 +25,39 @@ if __name__ == "__main__":
     ap.add_argument("--workdir", default=".memento-train-sweep")
     args = ap.parse_args()
 
-    matrix = {
-        "parameters": {
-            "arch": ["llama3.2-3b"],
-            "lr": [1e-3, 3e-3, 1e-2],
-            "int8_opt": [False, True],
-        },
-        "settings": {"steps": args.steps, "workdir": args.workdir},
-        "exclude": [{"lr": 1e-2, "int8_opt": True}],  # known-divergent combo
-    }
+    lr_axis = ConfigMatrix.from_dict(
+        {
+            "parameters": {"arch": ["llama3.2-3b"], "lr": [1e-3, 3e-3, 1e-2]},
+            "settings": {"steps": args.steps, "workdir": args.workdir,
+                         "ckpt_every": 50, "log_every": 20},
+        }
+    )
+    int8_axis = ConfigMatrix.from_dict({"parameters": {"int8_opt": [False, True]}})
+    # Product over disjoint axes, minus the known-divergent combo.
+    matrix = (lr_axis * int8_axis).where(
+        lambda p: not (p["lr"] == 1e-2 and p["int8_opt"])
+    )
+
     eng = memento.Memento(
-        train_task,
+        train_sweep,
         memento.ConsoleNotificationProvider(),
         workdir=args.workdir,
+        namespace="train",
         runner_config=memento.RunnerConfig(max_workers=1, retries=1, enable_speculation=False),
     )
-    results = eng.run(matrix)
-    print("\nlr sweep results (loss first -> last):")
-    for r in sorted(results.ok, key=lambda r: (r.value["int8"], r.value["lr"])):
-        v = r.value
-        print(f"  lr={v['lr']:<8g} int8={str(v['int8']):5s} "
-              f"{v['loss_first']:.3f} -> {v['loss_last']:.3f}  [{r.status}]")
-    if results.failed:
-        print(f"{len(results.failed)} failed tasks (fix + re-run resumes from cache).")
+    print(f"{len(matrix.task_list())} cells; streaming results as they land:")
+    results = []
+    for r in eng.stream(matrix):
+        results.append(r)
+        if r.ok:
+            v = r.value
+            print(f"  lr={v['lr']:<8g} int8={str(v['int8']):5s} "
+                  f"{v['loss_first']:.3f} -> {v['loss_last']:.3f}  [{r.status}]")
+        else:
+            print(f"  {r.summary()}")
+
+    rs = memento.ResultSet(results)
+    print("\nfinal loss pivot (lr x int8):")
+    print(rs.pivot("lr", "int8_opt", lambda r: r.value["loss_last"]))
+    if rs.failed:
+        print(f"{len(rs.failed)} failed tasks (fix + re-run resumes from cache).")

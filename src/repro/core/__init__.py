@@ -22,7 +22,16 @@ from .exceptions import (
 )
 from .filequeue import FileQueue, QueueStats, drain
 from .hashing import canonicalize, qualified_name, stable_hash, task_key
-from .matrix import ConfigMatrix, TaskSpec
+from .matrix import (
+    ChainMatrix,
+    ConfigMatrix,
+    DerivedMatrix,
+    MatrixBase,
+    ProductMatrix,
+    TaskSpec,
+    WhereMatrix,
+    as_matrix,
+)
 from .memento import Memento
 from .notifications import (
     CallbackNotificationProvider,
@@ -35,4 +44,4 @@ from .notifications import (
     WebhookNotificationProvider,
 )
 from .runner import Runner, RunnerConfig
-from .task import Context, ResultSet, TaskCheckpointStore, TaskResult
+from .task import Context, Pivot, ResultSet, TaskCheckpointStore, TaskResult

@@ -122,8 +122,24 @@ def stable_hash(value: Any) -> str:
     return hashlib.sha256(blob).hexdigest()
 
 
-def task_key(params: dict[str, Any]) -> str:
-    """The identity of a task = hash of its full parameter assignment."""
+def task_key(
+    params: dict[str, Any],
+    settings: dict[str, Any] | None = None,
+    namespace: str | None = None,
+) -> str:
+    """The identity of a task.
+
+    Hashes the full parameter assignment *and* the matrix settings (two
+    matrices with identical params but different settings are different
+    experiments — they must never serve each other's cached results), plus
+    an optional experiment namespace so unrelated experiment functions can
+    share a workdir without key collisions.
+    """
     if not isinstance(params, dict):
         raise HashingError("task parameters must be a dict")
-    return stable_hash(params)
+    if settings is not None and not isinstance(settings, dict):
+        raise HashingError("task settings must be a dict")
+    ident: dict[str, Any] = {"params": params, "settings": settings or {}}
+    if namespace:
+        ident["namespace"] = str(namespace)
+    return stable_hash(ident)

@@ -1,4 +1,5 @@
-"""The configuration matrix — the core of the paper.
+"""The configuration matrix — the core of the paper — plus a compositional
+algebra for building large experiment sets out of small ones.
 
 ``ConfigMatrix`` takes the exact schema from the paper:
 
@@ -13,7 +14,17 @@ combination that matches an ``exclude`` entry (an exclude entry matches when
 *all* of its key/value pairs match the combination — it may mention any
 subset of the parameter names, which is the "lookup table" semantics in the
 paper). Each surviving combination becomes a :class:`TaskSpec` with a stable
-content hash (see :mod:`repro.core.hashing`).
+content hash (see :mod:`repro.core.hashing`) over its params *and* settings.
+
+Matrices compose instead of being written as one giant dict:
+
+    m1 + m2               # chain/union — concatenated, de-duplicated by task key
+    m1 * m2               # cartesian product over disjoint parameter axes
+    m.where(pred)         # callable exclude: keep assignments where pred(params)
+    m.derive(name, fn)    # computed parameter name=fn(params), hashed into the key
+
+Composites are lazy (nothing expands until ``tasks()``/``task_list()``) and
+every operator accepts either another matrix or a paper-schema dict.
 """
 from __future__ import annotations
 
@@ -78,9 +89,94 @@ def _matches_exclude(combo: Mapping[str, Any], rule: Mapping[str, Any]) -> bool:
     return True
 
 
+def as_matrix(obj: "MatrixBase | Mapping[str, Any]") -> "MatrixBase":
+    """Coerce a paper-schema dict (or pass through a matrix) for composition."""
+    if isinstance(obj, MatrixBase):
+        return obj
+    if isinstance(obj, Mapping):
+        return ConfigMatrix.from_dict(obj)
+    raise ConfigMatrixError(
+        f"expected a ConfigMatrix (or paper-schema dict), got {type(obj).__qualname__}"
+    )
+
+
+class MatrixBase:
+    """Shared algebra + expansion for leaf and composite matrices.
+
+    Subclasses implement :meth:`assignments`, yielding ``(params, settings)``
+    pairs; everything else (operators, task expansion, de-dup, sharding) is
+    generic. Expansion is lazy — composites hold references, not task lists.
+    """
+
+    # -- expansion (subclass contract) -----------------------------------
+    def assignments(self) -> Iterator[tuple[dict[str, Any], dict[str, Any]]]:
+        raise NotImplementedError  # pragma: no cover - interface
+
+    @property
+    def axis_names(self) -> list[str]:
+        raise NotImplementedError  # pragma: no cover - interface
+
+    # -- algebra -----------------------------------------------------------
+    def __add__(self, other: "MatrixBase | Mapping[str, Any]") -> "ChainMatrix":
+        return ChainMatrix(self, as_matrix(other))
+
+    def __mul__(self, other: "MatrixBase | Mapping[str, Any]") -> "ProductMatrix":
+        return ProductMatrix(self, as_matrix(other))
+
+    def where(self, predicate: Callable[[dict[str, Any]], bool]) -> "WhereMatrix":
+        """Keep only assignments for which ``predicate(params)`` is truthy —
+        the callable complement of the paper's dict ``exclude`` rules."""
+        return WhereMatrix(self, predicate)
+
+    def derive(self, name: str, fn: Callable[[dict[str, Any]], Any]) -> "DerivedMatrix":
+        """Add a computed parameter ``name = fn(params)`` to every assignment.
+
+        The derived value is part of the task's parameter dict and therefore
+        of its cache key — deriving with a different function re-runs."""
+        return DerivedMatrix(self, name, fn)
+
+    # -- task expansion ----------------------------------------------------
+    def tasks(self, namespace: str | None = None) -> Iterator[TaskSpec]:
+        """Expand to TaskSpecs, de-duplicated by task key (first wins)."""
+        seen: set[str] = set()
+        index = 0
+        for params, settings in self.assignments():
+            key = task_key(params, settings, namespace)
+            if key in seen:
+                continue
+            seen.add(key)
+            yield TaskSpec(
+                index=index, params=dict(params), settings=dict(settings), key=key
+            )
+            index += 1
+
+    def task_list(self, namespace: str | None = None) -> list[TaskSpec]:
+        out = list(self.tasks(namespace))
+        if not out:
+            raise ConfigMatrixError(
+                "configuration matrix expands to zero tasks (everything excluded?)"
+            )
+        return out
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.tasks())
+
+    # -- filtering (useful for partial re-runs / sharded launchers) ------------
+    def subset(self, predicate: Callable[[dict[str, Any]], bool]) -> list[TaskSpec]:
+        return [t for t in self.tasks() if predicate(t.params)]
+
+    def shard(self, shard_index: int, num_shards: int) -> list[TaskSpec]:
+        """Deterministic round-robin split of the task list across launchers."""
+        if not (0 <= shard_index < num_shards):
+            raise ConfigMatrixError(
+                f"shard_index {shard_index} out of range for {num_shards} shards"
+            )
+        return [t for t in self.tasks() if t.index % num_shards == shard_index]
+
+
 @dataclass
-class ConfigMatrix:
-    """Validated configuration matrix with lazy task expansion."""
+class ConfigMatrix(MatrixBase):
+    """Validated leaf configuration matrix (the paper schema)."""
 
     parameters: dict[str, list[Any]]
     settings: dict[str, Any] = field(default_factory=dict)
@@ -141,7 +237,8 @@ class ConfigMatrix:
         return n
 
     def __len__(self) -> int:
-        return sum(1 for _ in self.tasks())
+        # Faster than the generic path: leaf combinations need no hashing.
+        return sum(1 for _ in self.combinations())
 
     # -- expansion ------------------------------------------------------------
     def combinations(self) -> Iterator[dict[str, Any]]:
@@ -152,31 +249,124 @@ class ConfigMatrix:
                 continue
             yield assignment
 
-    def tasks(self) -> Iterator[TaskSpec]:
-        for i, assignment in enumerate(self.combinations()):
-            yield TaskSpec(
-                index=i,
-                params=assignment,
-                settings=dict(self.settings),
-                key=task_key(assignment),
-            )
+    def assignments(self) -> Iterator[tuple[dict[str, Any], dict[str, Any]]]:
+        for combo in self.combinations():
+            yield combo, self.settings
 
-    def task_list(self) -> list[TaskSpec]:
-        out = list(self.tasks())
-        if not out:
+
+class ChainMatrix(MatrixBase):
+    """Union/concatenation: every part's tasks in order, de-duped by key."""
+
+    def __init__(self, *parts: MatrixBase):
+        flat: list[MatrixBase] = []
+        for p in parts:
+            if isinstance(p, ChainMatrix):
+                flat.extend(p.parts)  # keep chains shallow: (a+b)+c == a+b+c
+            else:
+                flat.append(p)
+        self.parts = flat
+
+    @property
+    def axis_names(self) -> list[str]:
+        names: dict[str, None] = {}
+        for p in self.parts:
+            for n in p.axis_names:
+                names.setdefault(n)
+        return list(names)
+
+    def assignments(self) -> Iterator[tuple[dict[str, Any], dict[str, Any]]]:
+        for p in self.parts:
+            yield from p.assignments()
+
+
+class ProductMatrix(MatrixBase):
+    """Cartesian product over *disjoint* parameter axes.
+
+    Settings merge; a key present on both sides with different values is an
+    error (silently preferring one side would change task identities)."""
+
+    def __init__(self, left: MatrixBase, right: MatrixBase):
+        overlap = set(left.axis_names) & set(right.axis_names)
+        if overlap:
             raise ConfigMatrixError(
-                "configuration matrix expands to zero tasks (everything excluded?)"
+                f"matrix product requires disjoint parameter axes; "
+                f"both sides define {sorted(overlap)}"
             )
-        return out
+        self.left = left
+        self.right = right
 
-    # -- filtering (useful for partial re-runs / sharded launchers) ------------
-    def subset(self, predicate: Callable[[dict[str, Any]], bool]) -> list[TaskSpec]:
-        return [t for t in self.tasks() if predicate(t.params)]
+    @property
+    def axis_names(self) -> list[str]:
+        return list(self.left.axis_names) + list(self.right.axis_names)
 
-    def shard(self, shard_index: int, num_shards: int) -> list[TaskSpec]:
-        """Deterministic round-robin split of the task list across launchers."""
-        if not (0 <= shard_index < num_shards):
+    @staticmethod
+    def _merge_settings(a: dict[str, Any], b: dict[str, Any]) -> dict[str, Any]:
+        merged = dict(a)
+        for k, v in b.items():
+            if k in merged:
+                try:
+                    same = merged[k] == v
+                except Exception:
+                    same = merged[k] is v
+                if not same:
+                    raise ConfigMatrixError(
+                        f"conflicting setting {k!r} in matrix product: "
+                        f"{merged[k]!r} vs {v!r}"
+                    )
+            merged[k] = v
+        return merged
+
+    def assignments(self) -> Iterator[tuple[dict[str, Any], dict[str, Any]]]:
+        for lp, ls in self.left.assignments():
+            for rp, rs in self.right.assignments():
+                yield {**lp, **rp}, self._merge_settings(ls, rs)
+
+
+class WhereMatrix(MatrixBase):
+    """Callable filter: keeps assignments where ``predicate(params)``."""
+
+    def __init__(self, base: MatrixBase, predicate: Callable[[dict[str, Any]], bool]):
+        if not callable(predicate):
+            raise ConfigMatrixError("where() takes a callable predicate over params")
+        self.base = base
+        self.predicate = predicate
+
+    @property
+    def axis_names(self) -> list[str]:
+        return self.base.axis_names
+
+    def assignments(self) -> Iterator[tuple[dict[str, Any], dict[str, Any]]]:
+        for params, settings in self.base.assignments():
+            if self.predicate(params):
+                yield params, settings
+
+
+class DerivedMatrix(MatrixBase):
+    """Adds a computed parameter ``name = fn(params)`` to every assignment."""
+
+    def __init__(
+        self, base: MatrixBase, name: str, fn: Callable[[dict[str, Any]], Any]
+    ):
+        if not isinstance(name, str) or not name:
+            raise ConfigMatrixError("derived parameter name must be a non-empty str")
+        if not callable(fn):
+            raise ConfigMatrixError("derive() takes a callable over params")
+        if name in base.axis_names:
             raise ConfigMatrixError(
-                f"shard_index {shard_index} out of range for {num_shards} shards"
+                f"derived parameter {name!r} collides with an existing axis"
             )
-        return [t for t in self.tasks() if t.index % num_shards == shard_index]
+        self.base = base
+        self.name = name
+        self.fn = fn
+
+    @property
+    def axis_names(self) -> list[str]:
+        return list(self.base.axis_names) + [self.name]
+
+    def assignments(self) -> Iterator[tuple[dict[str, Any], dict[str, Any]]]:
+        for params, settings in self.base.assignments():
+            if self.name in params:
+                raise ConfigMatrixError(
+                    f"derived parameter {self.name!r} already present in assignment"
+                )
+            yield {**params, self.name: self.fn(params)}, settings

@@ -6,16 +6,21 @@
     results = memento.Memento(exp_func, notif).run(config_matrix)
 
 matches the snippet in the paper (section 3) verbatim modulo module name.
+
+Beyond the paper, ``Memento.stream()`` yields each task's result the moment
+it is known (cache hits first), and ``run()`` is a thin blocking collector
+over the same stream — both accept paper-schema dicts or composed matrices
+(see :mod:`repro.core.matrix`).
 """
 from __future__ import annotations
 
 import time
 from pathlib import Path
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Iterator, Mapping
 
 from .cache import BaseCache, FsCache, MemoryCache, NullCache
 from .filequeue import FileQueue, drain
-from .matrix import ConfigMatrix, TaskSpec
+from .matrix import ConfigMatrix, MatrixBase, TaskSpec, as_matrix
 from .notifications import ConsoleNotificationProvider, NotificationProvider
 from .runner import Runner, RunnerConfig
 from .task import Context, ResultSet, TaskCheckpointStore, TaskResult
@@ -34,6 +39,10 @@ class Memento:
     workdir:
         root for the result cache + task checkpoints. ``None`` -> in-memory
         cache, checkpointing disabled (pure-functional quick runs).
+    namespace:
+        optional experiment namespace folded into every task key, so two
+        different experiment functions can share one workdir/cache without
+        serving each other's results.
     """
 
     def __init__(
@@ -43,11 +52,13 @@ class Memento:
         workdir: str | Path | None = None,
         runner_config: RunnerConfig | None = None,
         cache: BaseCache | None = None,
+        namespace: str | None = None,
     ):
         self.exp_func = exp_func
         self.provider = notification_provider or ConsoleNotificationProvider(verbose=False)
         self.workdir = Path(workdir) if workdir is not None else None
         self.runner_config = runner_config or RunnerConfig()
+        self.namespace = namespace
         if cache is not None:
             self.cache = cache
         elif self.workdir is not None:
@@ -56,29 +67,52 @@ class Memento:
             self.cache = MemoryCache()
         self._ckpt_root = str(self.workdir / "task_ckpts") if self.workdir else None
 
+    def _specs(self, config_matrix: Mapping[str, Any] | MatrixBase) -> list[TaskSpec]:
+        return as_matrix(config_matrix).task_list(namespace=self.namespace)
+
     # -- paper API ------------------------------------------------------------
     def run(
         self,
-        config_matrix: Mapping[str, Any] | ConfigMatrix,
+        config_matrix: Mapping[str, Any] | MatrixBase,
         dry_run: bool = False,
         force: bool = False,
         cache: bool = True,
     ) -> ResultSet:
-        matrix = (
-            config_matrix
-            if isinstance(config_matrix, ConfigMatrix)
-            else ConfigMatrix.from_dict(config_matrix)
-        )
-        specs = matrix.task_list()
+        """Execute the matrix and block until every task has a result."""
+        specs = self._specs(config_matrix)
         if dry_run:
             # Paper semantics: report what *would* run, execute nothing.
             for spec in specs:
-                self.provider.notify_dry(spec) if hasattr(
-                    self.provider, "notify_dry"
-                ) else None
+                try:
+                    self.provider.task_dry(spec)
+                except Exception:
+                    pass  # providers must never take the run down
             return ResultSet(
                 [TaskResult(spec=s, status="skipped", value=None) for s in specs]
             )
+        return ResultSet(
+            self._stream_specs(specs, force=force, cache=cache)
+        ).materialize()
+
+    # -- streaming API ---------------------------------------------------------
+    def stream(
+        self,
+        config_matrix: Mapping[str, Any] | MatrixBase,
+        force: bool = False,
+        cache: bool = True,
+    ) -> Iterator[TaskResult]:
+        """Yield each task's final result as soon as it completes.
+
+        Cached results arrive first (before any execution starts), then live
+        results in completion order — consume incrementally to analyse or
+        plot a sweep while its stragglers are still running. Wrap in
+        ``ResultSet`` for ordered, lazy assembly.
+        """
+        return self._stream_specs(self._specs(config_matrix), force=force, cache=cache)
+
+    def _stream_specs(
+        self, specs: list[TaskSpec], force: bool, cache: bool
+    ) -> Iterator[TaskResult]:
         runner = Runner(
             self.exp_func,
             cache=self.cache if cache else NullCache(),
@@ -86,12 +120,12 @@ class Memento:
             config=self.runner_config,
             checkpoint_root=self._ckpt_root,
         )
-        return ResultSet(runner.run(specs, force=force))
+        return runner.stream(specs, force=force)
 
     # -- cluster API ------------------------------------------------------------
     def run_distributed(
         self,
-        config_matrix: Mapping[str, Any] | ConfigMatrix,
+        config_matrix: Mapping[str, Any] | MatrixBase,
         queue_dir: str | Path,
         lease_s: float = 120.0,
         publish: bool = True,
@@ -103,12 +137,7 @@ class Memento:
         the shared FsCache so *all* hosts can assemble the full ResultSet at
         the end. Survives host death: expired leases are re-claimed.
         """
-        matrix = (
-            config_matrix
-            if isinstance(config_matrix, ConfigMatrix)
-            else ConfigMatrix.from_dict(config_matrix)
-        )
-        specs = matrix.task_list()
+        specs = self._specs(config_matrix)
         by_key = {s.key: s for s in specs}
         queue = FileQueue(queue_dir, lease_s=lease_s)
         if publish:

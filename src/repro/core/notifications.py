@@ -35,6 +35,20 @@ class NotificationProvider:
         raise NotImplementedError
 
     # Paper-compatible sugar -------------------------------------------------
+    def task_dry(self, spec: Any) -> None:
+        """Dry-run report for one task (paper: report what *would* run).
+
+        Default implementation routes through :meth:`notify` as a
+        ``task_dry`` event, so every provider gets dry-run output for free;
+        override for richer formatting."""
+        self.notify(
+            Event(
+                kind="task_dry",
+                message=f"would run {spec.describe()}",
+                payload={"key": spec.key, "params": spec.params},
+            )
+        )
+
     def task_finished(self, result: TaskResult) -> None:
         self.notify(
             Event(

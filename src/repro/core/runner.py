@@ -1,10 +1,16 @@
-"""Parallel task runner: retries, hard timeouts, straggler speculation.
+"""Parallel task runner: streaming results, retries, hard timeouts,
+straggler speculation.
 
 Thread mode is the default — the heavy tasks in this framework (XLA
 lower/compile, filesystem IO, JAX dispatch) all release the GIL, so threads
 give real parallelism while sharing the in-process device state. Process mode
 exists for python-bound workloads (requires the experiment function and task
 parameters to be picklable / module-level).
+
+``stream()`` is the primary entry: a generator that yields each task's final
+``TaskResult`` the moment it is known — cache hits first, then live results
+in completion order. ``run()`` is a thin collector over it that restores
+matrix order.
 
 Fault model (beyond the paper, needed at cluster scale):
   * a task raising       -> captured traceback, retried up to the budget
@@ -17,6 +23,12 @@ Fault model (beyond the paper, needed at cluster scale):
                             caches + versioned checkpoints)
   * the whole host dying -> handled one level up by the file-queue runner
                             (lease expiry) and by task checkpoints
+
+Attempt accounting is per *task*, not per submission: every submission
+(primary, retry, or speculative duplicate) is one attempt, and a task is
+finalised as failed once ``retries + 1`` attempts have failed — a failed
+primary whose speculative twin also fails consumes two entries of the
+budget, not one. All finalisation decisions happen under one lock.
 """
 from __future__ import annotations
 
@@ -26,7 +38,7 @@ import statistics
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Iterator, Sequence
 
 from .cache import BaseCache, NullCache
 from .matrix import TaskSpec
@@ -57,12 +69,20 @@ class RunnerConfig:
 @dataclass
 class _Attempt:
     spec: TaskSpec
-    number: int  # 1-based attempt number
+    number: int  # 1-based attempt number (per task, across twins/retries)
     future: cf.Future
     started: float
     speculative: bool = False
     last_beat: float = field(default_factory=time.time)
     abandoned: bool = False
+    seen: bool = False  # harvested by the supervision loop
+    finished: float = 0.0  # stamped by a done-callback, not at harvest time
+
+    @property
+    def wall_s(self) -> float:
+        # Harvest may lag completion when a stream consumer is slow; the
+        # done-callback stamp keeps task timings honest regardless.
+        return (self.finished or time.time()) - self.started
 
 
 def _run_task(
@@ -112,61 +132,107 @@ class Runner:
         except Exception:
             pass  # providers must never take the run down
 
-    # -- main entry -----------------------------------------------------------
+    def _notify_finished(self, res: TaskResult) -> None:
+        if self.provider is None:
+            return
+        try:
+            self.provider.task_finished(res)
+        except Exception:
+            pass
+
+    # -- main entries ---------------------------------------------------------
     def run(self, specs: Sequence[TaskSpec], force: bool = False) -> list[TaskResult]:
+        """Blocking collector over :meth:`stream`, restoring spec order."""
+        results = {r.spec.key: r for r in self.stream(specs, force=force)}
+        ordered: list[TaskResult] = []
+        seen: set[str] = set()
+        for s in specs:
+            if s.key in results and s.key not in seen:
+                seen.add(s.key)
+                ordered.append(results[s.key])
+        return ordered
+
+    def stream(
+        self, specs: Sequence[TaskSpec], force: bool = False
+    ) -> Iterator[TaskResult]:
+        """Yield each task's final TaskResult as soon as it is known.
+
+        Cache hits are yielded immediately (before any execution starts);
+        live results follow in completion order. Duplicate keys in ``specs``
+        are collapsed to the first occurrence.
+
+        The supervision loop (timeouts, retries, speculation) runs between
+        yields, so it is paced by the consumer: task *timings* stay honest
+        (completion is stamped by a done-callback), but a consumer that
+        blocks for a long time between results delays timeout/retry
+        enforcement — do heavy per-result work elsewhere, or collect with
+        :meth:`run`.
+        """
         cfg = self.config
         t_run0 = time.time()
-        results: dict[str, TaskResult] = {}
-        self._notify("run_started", f"{len(specs)} tasks, {cfg.resolved_workers()} workers")
+        self.stats = {}
+        self._notify(
+            "run_started", f"{len(specs)} tasks, {cfg.resolved_workers()} workers"
+        )
 
-        # 1) serve from cache
+        n_ok = n_failed = n_cached = 0
         to_run: list[TaskSpec] = []
+        seen_keys: set[str] = set()
         for spec in specs:
+            if spec.key in seen_keys:
+                continue
+            seen_keys.add(spec.key)
             entry = None if force else self.cache.get(spec.key)
             if entry is not None:
-                results[spec.key] = TaskResult(
+                n_ok += 1
+                n_cached += 1
+                yield TaskResult(
                     spec=spec, status="cached", value=entry.value, wall_s=0.0
                 )
             else:
                 to_run.append(spec)
 
-        if to_run:
-            if cfg.mode == "process":
-                self._run_processes(to_run, results)
-            else:
-                self._run_threads(to_run, results)
-
-        ordered = [results[s.key] for s in specs if s.key in results]
-        n_ok = sum(1 for r in ordered if r.ok)
-        n_failed = len(ordered) - n_ok
-        wall = time.time() - t_run0
-        self.stats = {
-            "tasks": len(specs),
-            "ok": n_ok,
-            "failed": n_failed,
-            "cached": sum(1 for r in ordered if r.status == "cached"),
-            "wall_s": wall,
-            "speculative_launched": self.stats.get("speculative_launched", 0),
-        }
-        self._notify(
-            "run_finished",
-            f"{n_ok} ok / {n_failed} failed in {wall:.1f}s",
-            **{k: v for k, v in self.stats.items() if k != "tasks"},
+        live = (
+            self._stream_processes(to_run)
+            if cfg.mode == "process"
+            else self._stream_threads(to_run)
         )
-        return ordered
+        try:
+            for res in live:
+                if res.ok:
+                    n_ok += 1
+                else:
+                    n_failed += 1
+                yield res
+        finally:
+            live.close()
+            wall = time.time() - t_run0
+            self.stats = {
+                "tasks": len(seen_keys),
+                "ok": n_ok,
+                "failed": n_failed,
+                "cached": n_cached,
+                "wall_s": wall,
+                "speculative_launched": self.stats.get("speculative_launched", 0),
+            }
+            self._notify(
+                "run_finished",
+                f"{n_ok} ok / {n_failed} failed in {wall:.1f}s",
+                **{k: v for k, v in self.stats.items() if k != "tasks"},
+            )
 
     # -- thread mode (full feature set) ---------------------------------------
-    def _run_threads(
-        self, specs: Sequence[TaskSpec], results: dict[str, TaskResult]
-    ) -> None:
+    def _stream_threads(self, specs: Sequence[TaskSpec]) -> Iterator[TaskResult]:
+        if not specs:
+            return
         cfg = self.config
         n_spec_launched = 0
-        failures_left = {s.key: cfg.retries for s in specs}
-        pending: list[TaskSpec] = list(specs)
-        retry_at: list[tuple[float, TaskSpec, int]] = []  # (when, spec, next_attempt_no)
+        attempts_failed = {s.key: 0 for s in specs}  # failed attempts per task
+        retry_at: list[tuple[float, TaskSpec]] = []
         attempts: dict[str, list[_Attempt]] = {}
         done_keys: set[str] = set()
         completed_durations: list[float] = []
+        fresh: list[TaskResult] = []  # finalised since the last yield round
         lock = threading.Lock()
 
         def make_beat(holder: _Attempt) -> Callable[[], None]:
@@ -178,7 +244,8 @@ class Runner:
         pool = cf.ThreadPoolExecutor(max_workers=cfg.resolved_workers())
         try:
 
-            def submit(spec: TaskSpec, number: int, speculative: bool = False) -> None:
+            def submit(spec: TaskSpec, speculative: bool = False) -> None:
+                number = len(attempts.get(spec.key, [])) + 1
                 holder = _Attempt(
                     spec=spec,
                     number=number,
@@ -195,6 +262,9 @@ class Runner:
                     make_beat(holder),
                     None,
                 )
+                holder.future.add_done_callback(
+                    lambda _f, h=holder: setattr(h, "finished", time.time())
+                )
                 attempts.setdefault(spec.key, []).append(holder)
                 self._notify(
                     "task_started",
@@ -203,27 +273,26 @@ class Runner:
                     attempt=number,
                 )
 
-            for spec in pending:
-                submit(spec, 1)
-            pending.clear()
+            for spec in specs:
+                submit(spec)
 
             def record_success(att: _Attempt, value: Any) -> None:
                 with lock:
                     if att.spec.key in done_keys:
                         return
                     done_keys.add(att.spec.key)
-                wall = time.time() - att.started
+                wall = att.wall_s
                 completed_durations.append(wall)
                 res = TaskResult(
                     spec=att.spec,
                     status="ok",
                     value=value,
-                    attempts=att.number,
+                    attempts=len(attempts.get(att.spec.key, [])) or att.number,
                     started_unix=att.started,
                     wall_s=wall,
                     speculative=att.speculative,
                 )
-                results[att.spec.key] = res
+                fresh.append(res)
                 try:
                     self.cache.put(
                         att.spec.key,
@@ -239,63 +308,64 @@ class Runner:
                     )
                 except Exception as e:
                     self._notify("cache_error", f"{att.spec.key[:12]}: {e}")
-                if self.provider is not None:
-                    try:
-                        self.provider.task_finished(res)
-                    except Exception:
-                        pass
+                self._notify_finished(res)
 
             def record_failure(att: _Attempt, exc: BaseException | None, status: str) -> None:
-                """Handle a failed/timed-out attempt: retry or finalise."""
+                """Handle a failed/timed-out attempt: retry or finalise.
+
+                The whole decision — duplicate-completion check, per-task
+                attempt accounting, retry-vs-finalise — happens under the
+                lock so concurrent completions can neither double-finalise
+                nor under-count failed attempts.
+                """
                 key = att.spec.key
                 with lock:
                     if key in done_keys:
                         return
-                live_twins = [
-                    a
-                    for a in attempts.get(key, [])
-                    if a is not att and not a.future.done() and not a.abandoned
-                ]
-                if live_twins:
-                    return  # a speculative duplicate is still running; let it finish
-                if failures_left[key] > 0:
-                    failures_left[key] -= 1
-                    next_no = att.number + 1
-                    self._notify(
-                        "task_retry",
-                        f"{att.spec.describe()} attempt {att.number} {status}; retrying",
-                        key=key,
-                        attempt=next_no,
-                    )
-                    retry_at.append((time.time() + self.config.retry_backoff_s, att.spec, next_no))
-                    return
-                with lock:
+                    attempts_failed[key] += 1
+                    live_twins = [
+                        a
+                        for a in attempts.get(key, [])
+                        if a is not att and not a.future.done() and not a.abandoned
+                    ]
+                    if live_twins:
+                        # A duplicate attempt is still running and may yet
+                        # succeed; its completion drives the next decision.
+                        # This attempt's failure stays counted above.
+                        return
+                    if attempts_failed[key] <= cfg.retries:
+                        self._notify(
+                            "task_retry",
+                            f"{att.spec.describe()} attempt {att.number} {status}; retrying",
+                            key=key,
+                            attempt=att.number + 1,
+                        )
+                        retry_at.append((time.time() + cfg.retry_backoff_s, att.spec))
+                        return
                     done_keys.add(key)
+                total_attempts = len(attempts.get(key, [])) or att.number
                 if exc is not None:
-                    res = TaskResult.from_exception(att.spec, exc, att.number, att.started)
+                    res = TaskResult.from_exception(att.spec, exc, total_attempts, att.started)
                 else:
                     res = TaskResult(
                         spec=att.spec,
                         status=status,
-                        error=f"attempt exceeded {self.config.task_timeout_s}s",
-                        attempts=att.number,
+                        error=f"attempt exceeded {cfg.task_timeout_s}s",
+                        attempts=total_attempts,
                         started_unix=att.started,
-                        wall_s=time.time() - att.started,
+                        wall_s=att.wall_s,
                     )
-                results[key] = res
-                if self.provider is not None:
-                    try:
-                        self.provider.task_finished(res)
-                    except Exception:
-                        pass
+                fresh.append(res)
+                self._notify_finished(res)
 
             # -- supervision loop ---------------------------------------------
+            failed_seen = False
             while True:
                 with lock:
                     n_done = len(done_keys)
                 if n_done == len(specs):
                     break
-                if cfg.fail_fast and any(not r.ok for r in results.values()):
+                if cfg.fail_fast and failed_seen:
                     break
 
                 now = time.time()
@@ -303,9 +373,9 @@ class Runner:
                 due = [r for r in retry_at if r[0] <= now]
                 for item in due:
                     retry_at.remove(item)
-                    _, spec, number = item
+                    _, spec = item
                     if spec.key not in done_keys:
-                        submit(spec, number)
+                        submit(spec)
 
                 live: list[_Attempt] = [
                     a
@@ -328,42 +398,17 @@ class Runner:
                             )
                             record_failure(att, None, "timeout")
 
-                # straggler speculation
-                if (
-                    cfg.enable_speculation
-                    and len(completed_durations) >= 3
-                    and n_spec_launched < cfg.max_speculative
-                ):
-                    median = statistics.median(completed_durations)
-                    threshold = max(cfg.straggler_min_s, cfg.straggler_factor * median)
-                    for att in live:
-                        if att.speculative or att.spec.key in done_keys:
-                            continue
-                        twins = attempts.get(att.spec.key, [])
-                        if sum(1 for a in twins if not a.future.done()) > 1:
-                            continue  # already speculated
-                        if now - att.started > threshold:
-                            n_spec_launched += 1
-                            self.stats["speculative_launched"] = n_spec_launched
-                            self._notify(
-                                "straggler_respawned",
-                                f"{att.spec.describe()} running {now - att.started:.1f}s "
-                                f"(median {median:.1f}s); launching duplicate",
-                                key=att.spec.key,
-                            )
-                            submit(att.spec, att.number, speculative=True)
-                            if n_spec_launched >= cfg.max_speculative:
-                                break
-
-                # harvest finished futures
+                # harvest finished futures BEFORE deciding to speculate, so a
+                # just-failed twin is accounted for and not treated as "this
+                # task has no duplicate yet".
                 finished = [
                     a
                     for atts in attempts.values()
                     for a in atts
-                    if a.future.done() and not a.abandoned and not getattr(a, "_seen", False)
+                    if a.future.done() and not a.abandoned and not a.seen
                 ]
                 for att in finished:
-                    att._seen = True  # type: ignore[attr-defined]
+                    att.seen = True
                     if att.future.cancelled():
                         continue
                     exc = att.future.exception()
@@ -377,8 +422,51 @@ class Runner:
                         )
                         record_failure(att, exc, "failed")
 
-                if not finished and not due:
+                # straggler speculation
+                if (
+                    cfg.enable_speculation
+                    and len(completed_durations) >= 3
+                    and n_spec_launched < cfg.max_speculative
+                ):
+                    median = statistics.median(completed_durations)
+                    threshold = max(cfg.straggler_min_s, cfg.straggler_factor * median)
+                    for att in live:
+                        if att.speculative or att.spec.key in done_keys:
+                            continue
+                        if attempts_failed[att.spec.key] > 0:
+                            # Speculation is for stragglers, not flaky tasks:
+                            # once an attempt has *failed*, further duplicates
+                            # would just burn the retry budget.
+                            continue
+                        twins = attempts.get(att.spec.key, [])
+                        if sum(1 for a in twins if not a.future.done()) > 1:
+                            continue  # already speculated
+                        if now - att.started > threshold:
+                            n_spec_launched += 1
+                            self.stats["speculative_launched"] = n_spec_launched
+                            self._notify(
+                                "straggler_respawned",
+                                f"{att.spec.describe()} running {now - att.started:.1f}s "
+                                f"(median {median:.1f}s); launching duplicate",
+                                key=att.spec.key,
+                            )
+                            submit(att.spec, speculative=True)
+                            if n_spec_launched >= cfg.max_speculative:
+                                break
+
+                # stream out everything finalised this round
+                if fresh:
+                    for res in fresh:
+                        if not res.ok:
+                            failed_seen = True
+                        yield res
+                    fresh.clear()
+                elif not finished and not due:
                     time.sleep(cfg.poll_interval_s)
+
+            for res in fresh:
+                yield res
+            fresh.clear()
 
             # drop any still-running abandoned attempts on the floor: cancel
             # what never started and do NOT wait for hung threads (they are
@@ -391,9 +479,9 @@ class Runner:
             pool.shutdown(wait=False, cancel_futures=True)
 
     # -- process mode (no speculation/heartbeat; picklable funcs only) --------
-    def _run_processes(
-        self, specs: Sequence[TaskSpec], results: dict[str, TaskResult]
-    ) -> None:
+    def _stream_processes(self, specs: Sequence[TaskSpec]) -> Iterator[TaskResult]:
+        if not specs:
+            return
         cfg = self.config
         with cf.ProcessPoolExecutor(max_workers=cfg.resolved_workers()) as pool:
             fut_to_spec: dict[cf.Future, tuple[TaskSpec, float, int]] = {}
@@ -408,6 +496,7 @@ class Runner:
                 for fut in done:
                     spec, started, number = fut_to_spec.pop(fut)
                     exc = fut.exception()
+                    res: TaskResult | None = None
                     if exc is None:
                         value = fut.result()
                         res = TaskResult(
@@ -418,7 +507,6 @@ class Runner:
                             started_unix=started,
                             wall_s=time.time() - started,
                         )
-                        results[spec.key] = res
                         try:
                             self.cache.put(spec.key, value, manifest={"wall_s": res.wall_s})
                         except Exception:
@@ -430,11 +518,7 @@ class Runner:
                         )
                         fut_to_spec[nf] = (spec, time.time(), number + 1)
                     else:
-                        results[spec.key] = TaskResult.from_exception(
-                            spec, exc, number, started
-                        )
-                    if self.provider is not None and spec.key in results:
-                        try:
-                            self.provider.task_finished(results[spec.key])
-                        except Exception:
-                            pass
+                        res = TaskResult.from_exception(spec, exc, number, started)
+                    if res is not None:
+                        self._notify_finished(res)
+                        yield res

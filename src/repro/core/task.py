@@ -190,46 +190,186 @@ class TaskResult:
         return base
 
 
-class ResultSet:
-    """Ordered collection of task results with paper-style conveniences."""
+class _TaskList(list):
+    """A list of TaskResults that is also callable.
 
-    def __init__(self, results: list[TaskResult]):
-        self._results = sorted(results, key=lambda r: r.spec.index)
+    ``ResultSet.ok`` predates the v2 API as a property; v2 documents
+    ``results.ok()`` / ``results.failed()``. Returning a callable list keeps
+    both spellings working on the same attribute.
+    """
+
+    def __call__(self) -> "_TaskList":
+        return self
+
+
+@dataclass
+class Pivot:
+    """A 2-D view over two parameter axes (analysis without pandas)."""
+
+    row_axis: str
+    col_axis: str
+    rows: list[Any]
+    cols: list[Any]
+    cells: list[list[Any]]  # cells[i][j], None where no task landed
+
+    def __str__(self) -> str:
+        def s(v: Any) -> str:
+            if isinstance(v, float):
+                return f"{v:.4g}"
+            return getattr(v, "__name__", None) or str(v)
+
+        header = [f"{self.row_axis}\\{self.col_axis}"] + [s(c) for c in self.cols]
+        body = [[s(r)] + [s(c) if c is not None else "-" for c in row]
+                for r, row in zip(self.rows, self.cells)]
+        widths = [max(len(line[i]) for line in [header] + body) for i in range(len(header))]
+        fmt = lambda line: "  ".join(c.rjust(w) for c, w in zip(line, widths))
+        return "\n".join([fmt(header)] + [fmt(line) for line in body])
+
+
+class ResultSet:
+    """Ordered collection of task results with paper-style conveniences.
+
+    Assembly is lazy: constructed from any iterable (e.g. the live stream of
+    a running ``Memento.stream``), the underlying iterator is only drained on
+    first access, so building a ResultSet over a stream costs nothing until
+    the results are actually needed.
+    """
+
+    def __init__(self, results: "list[TaskResult] | Any"):
+        self._results: list[TaskResult] = []
+        self._pending = iter(results)
+
+    def _assemble(self) -> list[TaskResult]:
+        if self._pending is not None:
+            self._results.extend(self._pending)
+            self._pending = None
+            self._results.sort(key=lambda r: r.spec.index)
+        return self._results
+
+    def materialize(self) -> "ResultSet":
+        """Drain the underlying stream now (blocks until the run finishes)."""
+        self._assemble()
+        return self
 
     def __iter__(self):
-        return iter(self._results)
+        return iter(self._assemble())
 
     def __len__(self) -> int:
-        return len(self._results)
+        return len(self._assemble())
 
     def __getitem__(self, i: int) -> TaskResult:
-        return self._results[i]
+        return self._assemble()[i]
 
     @property
-    def ok(self) -> list[TaskResult]:
-        return [r for r in self._results if r.ok]
+    def ok(self) -> _TaskList:
+        """Successful results — usable as a list (``results.ok``) or called
+        (``results.ok()``)."""
+        return _TaskList(r for r in self._assemble() if r.ok)
 
     @property
-    def failed(self) -> list[TaskResult]:
-        return [r for r in self._results if not r.ok]
+    def failed(self) -> _TaskList:
+        return _TaskList(r for r in self._assemble() if not r.ok)
 
     @property
     def values(self) -> list[Any]:
-        return [r.value for r in self._results if r.ok]
+        return [r.value for r in self._assemble() if r.ok]
 
     def value_by_params(self, **params: Any) -> Any:
-        for r in self._results:
+        for r in self._assemble():
             if all(r.spec.params.get(k) == v for k, v in params.items()):
                 if not r.ok:
                     raise LookupError(f"matching task {r.spec.key[:12]} failed: {r.error}")
                 return r.value
         raise LookupError(f"no task matches {params}")
 
+    # -- analysis -----------------------------------------------------------
+    def pivot(
+        self,
+        rows: str,
+        cols: str,
+        value_fn: Callable[[TaskResult], Any] | None = None,
+    ) -> Pivot:
+        """Pivot successful results over two parameter axes.
+
+        ``value_fn`` maps a TaskResult to the cell value (default:
+        ``r.value``). When several tasks land in one cell (other axes vary),
+        the last by task index wins — narrow first with a composable matrix
+        or ``value_fn``.
+        """
+        value_fn = value_fn or (lambda r: r.value)
+        row_labels: list[Any] = []
+        col_labels: list[Any] = []
+        cells: dict[tuple[int, int], Any] = {}
+
+        def _index(labels: list[Any], v: Any) -> int:
+            for i, existing in enumerate(labels):
+                if existing is v or existing == v:
+                    return i
+            labels.append(v)
+            return len(labels) - 1
+
+        for r in self._assemble():
+            if not r.ok:
+                continue
+            p = r.spec.params
+            if rows not in p or cols not in p:
+                continue
+            cells[_index(row_labels, p[rows]), _index(col_labels, p[cols])] = value_fn(r)
+        grid = [
+            [cells.get((i, j)) for j in range(len(col_labels))]
+            for i in range(len(row_labels))
+        ]
+        return Pivot(row_axis=rows, col_axis=cols, rows=row_labels, cols=col_labels,
+                     cells=grid)
+
+    def to_csv(self, path: str | os.PathLike[str] | None = None) -> str:
+        """Flatten to CSV: one row per task (param columns + status/timing +
+        value columns). Mapping values become one column per key; returns the
+        CSV text and optionally writes it to ``path``."""
+        import csv
+        import io
+
+        results = self._assemble()
+        param_cols: dict[str, None] = {}
+        value_cols: dict[str, None] = {}
+        scalar_value = False
+        for r in results:
+            for k in r.spec.params:
+                param_cols.setdefault(k)
+            if r.ok and isinstance(r.value, dict):
+                for k in r.value:
+                    value_cols.setdefault(k)
+            elif r.ok and r.value is not None:
+                scalar_value = True
+        vcols = list(value_cols) + (["value"] if scalar_value or not value_cols else [])
+        header = list(param_cols) + ["status", "attempts", "wall_s"] + vcols
+
+        def cell(v: Any) -> Any:
+            return getattr(v, "__name__", None) or v
+
+        buf = io.StringIO()
+        w = csv.writer(buf, lineterminator="\n")
+        w.writerow(header)
+        for r in results:
+            row = [cell(r.spec.params.get(k, "")) for k in param_cols]
+            row += [r.status, r.attempts, f"{r.wall_s:.4f}"]
+            for k in vcols:
+                if k == "value":
+                    row.append(cell(r.value) if r.ok and not isinstance(r.value, dict) else "")
+                else:
+                    row.append(cell(r.value.get(k, "")) if r.ok and isinstance(r.value, dict) else "")
+            w.writerow(row)
+        text = buf.getvalue()
+        if path is not None:
+            Path(path).write_text(text)
+        return text
+
     def summary(self) -> str:
+        results = self._assemble()
         n_ok = len(self.ok)
-        n_cached = sum(1 for r in self._results if r.status == "cached")
+        n_cached = sum(1 for r in results if r.status == "cached")
         lines = [
-            f"{len(self._results)} tasks: {n_ok} ok ({n_cached} from cache), "
+            f"{len(results)} tasks: {n_ok} ok ({n_cached} from cache), "
             f"{len(self.failed)} failed"
         ]
         lines.extend(r.summary() for r in self.failed)

@@ -1,0 +1,22 @@
+"""repro.experiments — workload adapters that run the jax_pallas stack
+*through* the Memento core.
+
+The serving and training subsystems are real experiment workloads: a sweep
+over (model config x attn_backend x scheduler/pool settings) is a config
+matrix, and running it through ``Memento`` buys caching, retries, streaming
+results, and resume for free instead of hand-rolled loops.
+
+    import repro.core as memento
+    from repro.experiments import serve_sweep, serve_matrix
+
+    results = memento.Memento(serve_sweep, workdir="sweeps", namespace="serve") \
+        .run(serve_matrix(["llama3.2-3b"], backends=["xla", "pallas"]))
+
+``serve_sweep`` / ``train_sweep`` are module-level experiment functions
+(process-mode safe); ``serve_matrix`` / ``train_matrix`` build the matching
+``ConfigMatrix`` — compose further with ``+``/``*``/``where``/``derive``.
+"""
+from .serve import serve_matrix, serve_sweep
+from .train import train_matrix, train_sweep
+
+__all__ = ["serve_sweep", "serve_matrix", "train_sweep", "train_matrix"]

@@ -1,0 +1,164 @@
+"""Serving sweeps as Memento experiment functions.
+
+One task = one scheduler configuration driven over a deterministic synthetic
+workload (optionally Poisson-timed), returning throughput/latency/memory
+metrics as a plain dict — picklable, cacheable, and comparable across the
+matrix. Every knob is read from the task's params first, then its settings,
+then a default, so any knob can be swept as a matrix axis or fixed for the
+whole sweep.
+
+Axes/settings understood by :func:`serve_sweep`:
+
+  arch (required)        registry name, e.g. "llama3.2-3b"
+  attn_backend           "xla" | "pallas" (default: the config's own)
+  n_slots, cache_len     scheduler shape (defaults 4, 128)
+  paged, page_size,      page-pool knobs (defaults True, 16, capacity parity)
+  n_pages, prefill_buckets
+  n_requests             workload size (default 8)
+  prompt_lens            cycled prompt lengths (default (4, 8, 12))
+  max_new_tokens         per-request decode budget (default 8)
+  temperature            0 => greedy (default)
+  arrival_rate_hz        Poisson arrival rate; 0/absent => offline batch
+  reduced                use the smoke-scale config copy (default True)
+  warmup                 pre-compile per prompt bucket before timing (default True)
+  seed                   workload RNG seed (default 0)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Any
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.task import Context
+from repro.serve.request import Request
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.sharding.rules import ShardingCtx
+
+
+def _opt(ctx: Context, name: str, default: Any) -> Any:
+    """Param if swept, else setting, else default."""
+    try:
+        return ctx[name]
+    except KeyError:
+        return default
+
+
+def serve_matrix(
+    archs,
+    backends=("xla",),
+    scheduler: dict[str, Any] | None = None,
+    **workload: Any,
+):
+    """Build the (arch x attn_backend x scheduler-knob) ConfigMatrix.
+
+    ``scheduler`` maps extra axis names to value lists (e.g.
+    ``{"paged": [True, False]}``); ``workload`` keys become matrix settings.
+    The result is a plain ConfigMatrix — compose with ``+``/``*``/``where``.
+    """
+    from repro.core.matrix import ConfigMatrix
+
+    params: dict[str, Any] = {"arch": list(archs), "attn_backend": list(backends)}
+    for name, values in (scheduler or {}).items():
+        params[name] = list(values)
+    return ConfigMatrix.from_dict({"parameters": params, "settings": dict(workload)})
+
+
+def serve_sweep(ctx: Context) -> dict[str, Any]:
+    """Experiment function: drive one serving configuration, return metrics."""
+    arch = ctx["arch"]
+    cfg = get_config(arch)
+    if _opt(ctx, "reduced", True):
+        cfg = cfg.reduced()
+    backend = _opt(ctx, "attn_backend", cfg.attn_backend)
+    cfg = replace(cfg, attn_backend=backend)
+
+    from repro.models import lm
+    from repro.models.schema import init_params
+
+    import jax
+
+    params = init_params(lm.model_schema(cfg), jax.random.PRNGKey(_opt(ctx, "seed", 0)))
+    sched_cfg = SchedulerConfig(
+        n_slots=int(_opt(ctx, "n_slots", 4)),
+        cache_len=int(_opt(ctx, "cache_len", 128)),
+        paged=bool(_opt(ctx, "paged", True)),
+        page_size=int(_opt(ctx, "page_size", 16)),
+        n_pages=_opt(ctx, "n_pages", None),
+        prefill_buckets=bool(_opt(ctx, "prefill_buckets", True)),
+        seed=int(_opt(ctx, "seed", 0)),
+    )
+    sched = Scheduler(cfg, params, ShardingCtx.null(), sched_cfg)
+
+    rng = np.random.default_rng(int(_opt(ctx, "seed", 0)))
+    n_req = int(_opt(ctx, "n_requests", 8))
+    prompt_lens = [int(p) for p in _opt(ctx, "prompt_lens", (4, 8, 12))]
+    max_new = int(_opt(ctx, "max_new_tokens", 8))
+    temperature = float(_opt(ctx, "temperature", 0.0))
+    lens = [prompt_lens[i % len(prompt_lens)] for i in range(n_req)]
+    requests = [
+        Request(
+            rng.integers(0, cfg.vocab_size, size=p).astype(np.int32),
+            max_new_tokens=max_new,
+            temperature=temperature,
+        )
+        for p in lens
+    ]
+
+    if _opt(ctx, "warmup", True):
+        # Compile every prompt-length bucket + the decode step outside the
+        # timed window so the measured run sees steady-state latencies.
+        for p in sorted(set(lens)):
+            sched.submit(Request(np.zeros(p, np.int32), max_new_tokens=2))
+        sched.run()
+        if sched.pool is not None:
+            sched.pool.reset_peaks()
+        sched.deferred_admissions = 0
+
+    rate = float(_opt(ctx, "arrival_rate_hz", 0.0) or 0.0)
+    steps_before = sched.total_decode_steps  # scope decode_steps past warmup
+    t0 = time.perf_counter()
+    if rate > 0.0:
+        arrivals = np.cumsum(rng.exponential(scale=1.0 / rate, size=n_req))
+        rids, i = [], 0
+        while i < n_req or sched.pending or sched.num_active:
+            ctx.heartbeat()
+            now = time.perf_counter() - t0
+            while i < n_req and arrivals[i] <= now:
+                rids.append(sched.submit(requests[i]))
+                i += 1
+            if not sched.step() and i < n_req:
+                time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+    else:
+        rids = [sched.submit(r) for r in requests]
+        while sched.pending or sched.num_active:
+            ctx.heartbeat()
+            sched.step()
+    wall = time.perf_counter() - t0
+
+    done = [sched.result(r) for r in rids]
+    toks = sum(len(rs.tokens) for rs in done)
+    lat = np.array([rs.latency_s for rs in done])
+    ttft = np.array([rs.ttft_s for rs in done])
+    cache_bytes = sched.paged_cache_bytes()
+    return {
+        "arch": arch,
+        "attn_backend": backend,
+        "n_requests": n_req,
+        "generated_tokens": toks,
+        "tokens_per_s": toks / wall if wall > 0 else float("inf"),
+        "wall_s": wall,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p95_s": float(np.percentile(lat, 95)),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "decode_steps": sched.total_decode_steps - steps_before,
+        "decode_traces": sched.decode_traces,
+        "prefill_traces": sched.prefill_traces,
+        "deferred_admissions": sched.stats()["deferred_admissions"],
+        "peak_cache_bytes": cache_bytes["peak_bytes"],
+        "contiguous_cache_bytes": cache_bytes["contiguous_bytes"],
+        "paged": sched_cfg.paged,
+        "tokens": [rs.tokens for rs in done],
+    }

@@ -1,0 +1,101 @@
+"""Training sweeps as Memento experiment functions.
+
+One task = one (arch, lr, optimizer-variant) training run through
+``train/loop.py`` — the loop heartbeats the task, checkpoints sharded state
+under a key-stable directory, and resumes from the last complete step when a
+killed sweep is re-run. The returned metrics dict is what lands in the
+Memento result cache.
+
+Axes/settings understood by :func:`train_sweep`:
+
+  arch (required)        registry name
+  lr                     peak learning rate (default 1e-3)
+  int8_opt               int8 optimizer moments (default False)
+  steps                  training steps (default 50)
+  seq_len, global_batch  shape (defaults 64, 8)
+  warmup_steps           LR warmup (default min(20, steps // 4))
+  ckpt_every, log_every  loop cadence (defaults 50, 20)
+  workdir                checkpoint root; per-task subdir is keyed by the
+                         task hash (default ".memento-train-sweep")
+  reduced                use the smoke-scale config copy (default True)
+  data_seed, noise       synthetic pipeline knobs (defaults 0, 0.05)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config
+from repro.core.task import Context
+from repro.data.pipeline import DataConfig
+from repro.sharding.rules import ShardingCtx
+from repro.train.loop import TrainRunConfig, train_run
+from repro.train.optimizer import AdamWConfig, Schedule
+
+from .serve import _opt
+
+
+def train_matrix(archs, lrs, int8=(False,), **settings: Any):
+    """Build the (arch x lr x int8_opt) ConfigMatrix; ``settings`` become
+    matrix settings. Compose with ``+``/``*``/``where``/``derive``."""
+    from repro.core.matrix import ConfigMatrix
+
+    return ConfigMatrix.from_dict(
+        {
+            "parameters": {
+                "arch": list(archs),
+                "lr": list(lrs),
+                "int8_opt": list(int8),
+            },
+            "settings": dict(settings),
+        }
+    )
+
+
+def train_sweep(ctx: Context) -> dict[str, Any]:
+    """Experiment function: run (or resume) one training cell, return metrics."""
+    arch = ctx["arch"]
+    cfg = get_config(arch)
+    if _opt(ctx, "reduced", True):
+        cfg = cfg.reduced()
+    steps = int(_opt(ctx, "steps", 50))
+    shape = ShapeConfig(
+        "sweep",
+        "train",
+        seq_len=int(_opt(ctx, "seq_len", 64)),
+        global_batch=int(_opt(ctx, "global_batch", 8)),
+    )
+    lr = float(_opt(ctx, "lr", 1e-3))
+    int8_opt = bool(_opt(ctx, "int8_opt", False))
+    workdir = str(_opt(ctx, "workdir", ".memento-train-sweep"))
+    run = TrainRunConfig(
+        steps=steps,
+        ckpt_every=int(_opt(ctx, "ckpt_every", 50)),
+        log_every=int(_opt(ctx, "log_every", 20)),
+        ckpt_dir=f"{workdir}/ckpt-{ctx.key[:10]}",
+        opt=AdamWConfig(
+            schedule=Schedule(
+                base_lr=lr,
+                warmup_steps=int(_opt(ctx, "warmup_steps", min(20, max(1, steps // 4)))),
+                total_steps=steps,
+            ),
+            int8_moments=int8_opt,
+        ),
+        data=DataConfig(
+            seed=int(_opt(ctx, "data_seed", 0)),
+            vocab_size=cfg.vocab_size,
+            noise=float(_opt(ctx, "noise", 0.05)),
+        ),
+    )
+    res = train_run(cfg, shape, ShardingCtx.null(), run, ctx=ctx)
+    return {
+        "arch": arch,
+        "lr": lr,
+        "int8": int8_opt,
+        "steps": steps,
+        "tokens_per_step": shape.tokens,
+        "wall_s": res["wall_s"],
+        "tokens_per_s": shape.tokens * steps / res["wall_s"] if res["wall_s"] else 0.0,
+        "loss_first": res["loss_first"],
+        "loss_last": res["loss_last"],
+    }

@@ -93,6 +93,6 @@ def train_run(
         "loss_first": history[0]["loss"] if history else None,
         "loss_last": history[-1]["loss"] if history else None,
     }
-    if ctx is not None:
+    if ctx is not None and ctx.checkpoints is not None:
         ctx.checkpoint({"summary": result})
     return result

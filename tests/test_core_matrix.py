@@ -122,6 +122,160 @@ class TestExpansion:
         assert len(list(m.combinations())) == len(expected)
 
 
+class TestAlgebra:
+    """The v2 compositional matrix API: + * where derive."""
+
+    def _keys(self, m):
+        return [t.key for t in m.tasks()]
+
+    def test_chain_concatenates_and_dedups(self):
+        m1 = ConfigMatrix.from_dict({"parameters": {"a": [1, 2]}})
+        m2 = ConfigMatrix.from_dict({"parameters": {"a": [2, 3]}})
+        chained = m1 + m2
+        params = [t.params for t in chained.tasks()]
+        assert params == [{"a": 1}, {"a": 2}, {"a": 3}]  # a=2 de-duped by key
+        assert len(m1 + m1) == len(m1)
+
+    def test_chain_accepts_paper_dicts_and_flattens(self):
+        m1 = ConfigMatrix.from_dict({"parameters": {"a": [1]}})
+        c = m1 + {"parameters": {"a": [2]}} + {"parameters": {"a": [3]}}
+        assert [t.params["a"] for t in c.tasks()] == [1, 2, 3]
+        assert len(c.parts) == 3  # flattened, not nested chains
+
+    def test_chain_keeps_distinct_settings_distinct(self):
+        # Identical params under different settings are different tasks.
+        m1 = ConfigMatrix.from_dict({"parameters": {"a": [1]}, "settings": {"s": 1}})
+        m2 = ConfigMatrix.from_dict({"parameters": {"a": [1]}, "settings": {"s": 2}})
+        assert len(m1 + m2) == 2
+
+    def test_product_matches_single_matrix(self):
+        m1 = ConfigMatrix.from_dict({"parameters": {"a": [1, 2], "b": ["x", "y"]}})
+        m2 = ConfigMatrix.from_dict({"parameters": {"c": [True, False]}})
+        combined = ConfigMatrix.from_dict(
+            {"parameters": {"a": [1, 2], "b": ["x", "y"], "c": [True, False]}}
+        )
+        assert set(self._keys(m1 * m2)) == set(self._keys(combined))
+
+    def test_product_rejects_overlapping_axes(self):
+        m1 = ConfigMatrix.from_dict({"parameters": {"a": [1]}})
+        with pytest.raises(ConfigMatrixError):
+            m1 * {"parameters": {"a": [2]}}
+
+    def test_product_merges_settings_and_rejects_conflicts(self):
+        m1 = ConfigMatrix.from_dict({"parameters": {"a": [1]}, "settings": {"s": 1}})
+        m2 = ConfigMatrix.from_dict({"parameters": {"b": [2]}, "settings": {"t": 2}})
+        (task,) = (m1 * m2).tasks()
+        assert task.settings == {"s": 1, "t": 2}
+        bad = ConfigMatrix.from_dict({"parameters": {"c": [3]}, "settings": {"s": 9}})
+        with pytest.raises(ConfigMatrixError):
+            list((m1 * bad).tasks())
+
+    def test_where_equivalent_to_dict_exclude(self):
+        base = {"parameters": {"a": [1, 2, 3], "b": ["x", "y"]}}
+        excluded = ConfigMatrix.from_dict({**base, "exclude": [{"a": 2}]})
+        filtered = ConfigMatrix.from_dict(base).where(lambda p: p["a"] != 2)
+        assert self._keys(filtered) == self._keys(excluded)
+
+    def test_derive_adds_param_and_changes_key(self):
+        m = ConfigMatrix.from_dict({"parameters": {"a": [1, 2]}})
+        d = m.derive("a_sq", lambda p: p["a"] ** 2)
+        tasks = list(d.tasks())
+        assert [t.params for t in tasks] == [{"a": 1, "a_sq": 1}, {"a": 2, "a_sq": 4}]
+        assert set(self._keys(d)).isdisjoint(self._keys(m))
+        assert d.axis_names == ["a", "a_sq"]
+        # Deriving with a different function produces different identities.
+        d2 = m.derive("a_sq", lambda p: p["a"] ** 3)
+        assert self._keys(d)[1] != self._keys(d2)[1]
+
+    def test_derive_rejects_axis_collision(self):
+        m = ConfigMatrix.from_dict({"parameters": {"a": [1]}})
+        with pytest.raises(ConfigMatrixError):
+            m.derive("a", lambda p: 0)
+
+    def test_operators_compose(self):
+        m = (
+            ConfigMatrix.from_dict({"parameters": {"a": [1, 2, 3]}})
+            * {"parameters": {"b": [10, 20]}}
+        ).where(lambda p: p["a"] != 2).derive("ab", lambda p: p["a"] * p["b"])
+        tasks = m.task_list()
+        assert len(tasks) == 4
+        assert all(t.params["ab"] == t.params["a"] * t.params["b"] for t in tasks)
+        assert [t.index for t in tasks] == [0, 1, 2, 3]
+
+    def test_key_stability_across_constructions(self):
+        build = lambda: (
+            ConfigMatrix.from_dict(
+                {"parameters": {"a": [1, 2]}, "settings": {"s": 5}}
+            )
+            * {"parameters": {"b": ["x"]}}
+        ).derive("twice", _twice)
+        assert self._keys(build()) == self._keys(build())
+
+    @given(
+        width_a=st.integers(min_value=1, max_value=4),
+        width_b=st.integers(min_value=1, max_value=4),
+        cut=st.integers(min_value=0, max_value=3),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_product_then_where_counts(self, width_a, width_b, cut):
+        m1 = ConfigMatrix.from_dict({"parameters": {"a": list(range(width_a))}})
+        m2 = ConfigMatrix.from_dict({"parameters": {"b": list(range(width_b))}})
+        prod = m1 * m2
+        assert len(prod) == width_a * width_b
+        kept = prod.where(lambda p: p["a"] != cut)
+        expected = (width_a - (1 if cut < width_a else 0)) * width_b
+        if expected == 0:
+            with pytest.raises(ConfigMatrixError):
+                kept.task_list()
+        else:
+            assert len(kept.task_list()) == expected
+            # where() must agree with the paper's dict exclude.
+            dict_form = ConfigMatrix.from_dict(
+                {
+                    "parameters": {"a": list(range(width_a)), "b": list(range(width_b))},
+                    "exclude": [{"a": cut}] if cut < width_a else [],
+                }
+            )
+            assert {t.key for t in kept.tasks()} == {t.key for t in dict_form.tasks()}
+
+    @given(
+        values=st.lists(st.integers(min_value=0, max_value=6), min_size=1, max_size=8),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_chain_self_union_idempotent(self, values):
+        m = ConfigMatrix.from_dict({"parameters": {"a": values}})
+        expect = len(set(values))
+        assert len(m + m) == expect
+        assert len((m + m) + m) == expect
+
+
+def _twice(p):
+    return p["a"] * 2
+
+
+class TestSettingsInKey:
+    """Satellite: settings (and namespace) are part of task identity."""
+
+    def test_same_params_different_settings_different_key(self):
+        m1 = ConfigMatrix.from_dict({"parameters": {"a": [1]}, "settings": {"s": 1}})
+        m2 = ConfigMatrix.from_dict({"parameters": {"a": [1]}, "settings": {"s": 2}})
+        (t1,), (t2,) = m1.task_list(), m2.task_list()
+        assert t1.params == t2.params
+        assert t1.key != t2.key
+
+    def test_namespace_changes_key(self):
+        m = ConfigMatrix.from_dict({"parameters": {"a": [1]}})
+        (plain,) = m.task_list()
+        (ns,) = m.task_list(namespace="serve")
+        assert plain.key != ns.key
+        assert m.task_list(namespace="serve")[0].key == ns.key
+
+    def test_task_key_function_folds_settings(self):
+        assert task_key({"a": 1}) == task_key({"a": 1}, settings={})
+        assert task_key({"a": 1}) != task_key({"a": 1}, settings={"s": 1})
+        assert task_key({"a": 1}, namespace="x") != task_key({"a": 1}, namespace="y")
+
+
 class TestHashing:
     def test_dict_order_invariance(self):
         assert stable_hash({"a": 1, "b": 2}) == stable_hash({"b": 2, "a": 1})

@@ -1,0 +1,263 @@
+"""Experiment API v2: streaming execution, lazy ResultSet, dry-run provider,
+per-task attempt accounting."""
+import time
+
+import pytest
+
+from repro.core import (
+    ConfigMatrix,
+    Context,
+    FsCache,
+    Memento,
+    MemoryCache,
+    RecordingProvider,
+    ResultSet,
+    Runner,
+    RunnerConfig,
+    TaskResult,
+)
+
+
+def _matrix(n=6):
+    return ConfigMatrix.from_dict({"parameters": {"i": list(range(n))}})
+
+
+def square(ctx: Context):
+    return ctx["i"] ** 2
+
+
+def one_slow(ctx: Context):
+    time.sleep(1.5 if ctx["i"] == 0 else 0.01)
+    return ctx["i"]
+
+
+class TestStreaming:
+    def test_results_arrive_before_slowest_finishes(self):
+        """The defining property of stream(): fast tasks land while the
+        straggler is still running."""
+        eng = Memento(
+            one_slow,
+            runner_config=RunnerConfig(max_workers=4, enable_speculation=False),
+        )
+        t0 = time.time()
+        arrivals = []
+        for r in eng.stream(_matrix(4)):
+            arrivals.append((r.spec.params["i"], time.time() - t0))
+        by_i = dict(arrivals)
+        assert set(by_i) == {0, 1, 2, 3}
+        # The three fast tasks streamed out well before the 1.5s straggler.
+        fast = [t for i, t in arrivals if i != 0]
+        assert max(fast) < 1.0
+        assert by_i[0] >= 1.0
+        # And the slow task arrived last.
+        assert arrivals[-1][0] == 0
+
+    def test_cached_results_stream_first(self, tmp_path):
+        eng = Memento(one_slow, workdir=tmp_path)
+        # Prime the cache with everything but the slow task.
+        eng.run(ConfigMatrix.from_dict({"parameters": {"i": [1, 2, 3]}}))
+        order = [r.status for r in eng.stream(_matrix(4))]
+        assert order == ["cached", "cached", "cached", "ok"]
+
+    def test_run_is_collector_over_stream(self):
+        res = Memento(square).run(_matrix(5))
+        assert isinstance(res, ResultSet)
+        assert res.values == [i * i for i in range(5)]
+
+    def test_runner_stream_collapses_duplicate_keys(self):
+        specs = _matrix(3).task_list()
+        r = Runner(square, config=RunnerConfig(max_workers=2, enable_speculation=False))
+        results = list(r.stream(specs + specs))
+        assert len(results) == 3
+
+    def test_stats_populated_after_stream(self):
+        r = Runner(square, config=RunnerConfig(max_workers=2, enable_speculation=False))
+        list(r.stream(_matrix(4).task_list()))
+        assert r.stats["ok"] == 4 and r.stats["failed"] == 0
+
+
+class TestResultSetV2:
+    def _results(self):
+        return Memento(square).run(_matrix(4))
+
+    def test_ok_failed_both_spellings(self):
+        def mixed(ctx):
+            if ctx["i"] == 1:
+                raise ValueError("boom")
+            return ctx["i"]
+
+        res = Memento(
+            mixed, runner_config=RunnerConfig(max_workers=2, retries=0, enable_speculation=False)
+        ).run(_matrix(3))
+        assert len(res.ok) == 2 and len(res.ok()) == 2  # property and call
+        assert len(res.failed) == 1 and len(res.failed()) == 1
+        assert res.ok() == res.ok
+
+    def test_lazy_assembly_from_stream(self):
+        eng = Memento(square)
+        consumed = []
+
+        def tracking():
+            for r in eng.stream(_matrix(3)):
+                consumed.append(r)
+                yield r
+
+        rs = ResultSet(tracking())
+        assert consumed == []  # nothing drained yet
+        assert len(rs) == 3  # first access assembles
+        assert len(consumed) == 3
+
+    def test_pivot(self):
+        def cell(ctx):
+            return ctx["a"] * 10 + ctx["b"]
+
+        res = Memento(cell).run(
+            {"parameters": {"a": [1, 2], "b": [3, 4]}, "exclude": [{"a": 2, "b": 4}]}
+        )
+        p = res.pivot("a", "b")
+        assert p.rows == [1, 2] and p.cols == [3, 4]
+        assert p.cells == [[13, 14], [23, None]]
+        assert "a\\b" in str(p)
+
+    def test_pivot_value_fn(self):
+        res = self._results()
+        p = res.pivot("i", "i", value_fn=lambda r: r.wall_s >= 0)
+        assert all(p.cells[i][i] for i in range(4))
+
+    def test_to_csv_scalar_and_dict_values(self, tmp_path):
+        res = self._results()
+        text = res.to_csv(tmp_path / "out.csv")
+        lines = text.strip().splitlines()
+        assert lines[0] == "i,status,attempts,wall_s,value"
+        assert len(lines) == 5
+        assert (tmp_path / "out.csv").read_text() == text
+
+        def dicty(ctx):
+            return {"loss": ctx["i"] / 2, "acc": 1.0}
+
+        text = Memento(dicty).run(_matrix(2)).to_csv()
+        header = text.splitlines()[0]
+        assert header == "i,status,attempts,wall_s,loss,acc"
+
+
+class TestDryRun:
+    def test_dry_run_routes_through_task_dry(self):
+        hits = []
+
+        def f(ctx):
+            hits.append(1)
+
+        prov = RecordingProvider()
+        res = Memento(f, prov).run(_matrix(3), dry_run=True)
+        assert hits == []
+        assert all(r.status == "skipped" for r in res)
+        dry = [e for e in prov.events if e.kind == "task_dry"]
+        assert len(dry) == 3
+        assert all("would run" in e.message for e in dry)
+        assert all(e.payload["key"] for e in dry)
+
+
+_attempt_log: dict[str, list[float]] = {}
+
+
+def _always_fails_slow_first(ctx: Context):
+    """First attempt is the straggler; every attempt fails."""
+    log = _attempt_log.setdefault(ctx.key, [])
+    log.append(time.time())
+    time.sleep(1.2 if len(log) == 1 else 0.3)
+    raise RuntimeError(f"attempt {len(log)} fails")
+
+
+def _fast(ctx: Context):
+    return ctx["i"]
+
+
+class TestAttemptAccounting:
+    def test_speculative_twin_failure_counts_against_budget(self):
+        """A failed primary whose speculative twin also fails consumes TWO
+        attempts of the budget (retries=1 => 2 total), so no third attempt
+        is launched."""
+        _attempt_log.clear()
+
+        def func(ctx: Context):
+            if ctx["i"] == 0:
+                return _always_fails_slow_first(ctx)
+            return _fast(ctx)
+
+        r = Runner(
+            func,
+            config=RunnerConfig(
+                max_workers=4,
+                retries=1,
+                enable_speculation=True,
+                straggler_min_s=0.25,
+                straggler_factor=2.0,
+                poll_interval_s=0.02,
+            ),
+        )
+        results = r.run(_matrix(4).task_list())
+        by_i = {res.spec.params["i"]: res for res in results}
+        assert by_i[0].status == "failed"
+        assert by_i[0].attempts == 2
+        (executions,) = _attempt_log.values()
+        assert len(executions) == 2  # primary + speculative twin, no retry
+        assert all(by_i[i].ok for i in (1, 2, 3))
+
+    def test_plain_retries_still_exhaust_budget(self):
+        calls = []
+
+        def fails(ctx: Context):
+            calls.append(1)
+            raise RuntimeError("nope")
+
+        r = Runner(
+            fails,
+            config=RunnerConfig(max_workers=2, retries=2, enable_speculation=False,
+                                retry_backoff_s=0.01),
+        )
+        results = r.run(_matrix(1).task_list())
+        assert results[0].status == "failed"
+        assert results[0].attempts == 3
+        assert len(calls) == 3
+
+
+class TestCacheIdentity:
+    """Satellite: settings + namespace are part of the cache identity."""
+
+    def test_settings_do_not_cross_hit_cache(self, tmp_path):
+        calls = []
+
+        def work(ctx: Context):
+            calls.append(ctx.settings["mode"])
+            return ctx["i"] * (2 if ctx.settings["mode"] == "double" else 1)
+
+        cache = FsCache(tmp_path / "cache")
+        m_plain = ConfigMatrix.from_dict(
+            {"parameters": {"i": [1, 2]}, "settings": {"mode": "plain"}}
+        )
+        m_double = ConfigMatrix.from_dict(
+            {"parameters": {"i": [1, 2]}, "settings": {"mode": "double"}}
+        )
+        eng = Memento(work, cache=cache,
+                      runner_config=RunnerConfig(max_workers=1, enable_speculation=False))
+        assert eng.run(m_plain).values == [1, 2]
+        assert eng.run(m_double).values == [2, 4]  # NOT served from plain's cache
+        assert calls == ["plain", "plain", "double", "double"]
+        assert eng.run(m_double).values == [2, 4]
+        assert len(calls) == 4  # second double run is all cache hits
+
+    def test_namespace_partitions_shared_cache(self, tmp_path):
+        def exp_a(ctx: Context):
+            return "a"
+
+        def exp_b(ctx: Context):
+            return "b"
+
+        cache = FsCache(tmp_path / "cache")
+        m = {"parameters": {"i": [1]}}
+        ra = Memento(exp_a, cache=cache, namespace="exp-a").run(m)
+        rb = Memento(exp_b, cache=cache, namespace="exp-b").run(m)
+        assert ra.values == ["a"] and rb.values == ["b"]
+        # Same namespace => cache hit; different => isolated.
+        assert Memento(exp_b, cache=cache, namespace="exp-a").run(m)[0].status == "cached"
+        assert Memento(exp_b, cache=cache, namespace="exp-a").run(m).values == ["a"]
