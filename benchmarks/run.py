@@ -17,11 +17,15 @@ caching/streaming/retries end-to-end, not hand-rolled loops):
   B10 paged-KV serving: mixed prompt sizes multiplexed over a fixed page
       pool vs the contiguous per-slot baseline (tokens/s, p50/p95 latency,
       peak cache bytes) — one matrix, ``paged`` as an axis
+  B11 chunked prefill: mixed 32–4096-token prompts with the unified
+      token-budget step on vs off — p50/p95 *inter-token* latency for
+      in-flight decodes at equal throughput, ``chunk_budget`` as an axis
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-``--smoke`` runs B1–B5 at tiny sizes (seconds, no model compiles) — the CI
-end-to-end exercise of the experiment layer.
+``--smoke`` runs B1–B5 at tiny sizes (seconds, no model compiles) plus
+tiny B9/B10/B11 serve rows (one smoke-scale model compile) — the CI
+end-to-end exercise of the experiment *and* serving layers.
 """
 from __future__ import annotations
 
@@ -292,6 +296,97 @@ def bench_serve_paged() -> None:
         )
 
 
+def bench_serve_chunked(smoke: bool = False) -> None:
+    """B11: chunked prefill vs whole-prompt prefill on a mixed-size prompt
+    workload.
+
+    One Memento matrix with ``chunk_budget`` as the axis replays the same
+    Poisson-timed arrival trace — long prompts land *while short requests
+    are mid-decode*, so each whole-prompt admission stalls every in-flight
+    decode on the chunking-off row — and reports the p50/p95 *inter-token*
+    latency streaming clients feel, at comparable throughput. Greedy token
+    identity between the two rows is checked here too — the unified step
+    is a scheduling change, not a sampling change.
+    """
+    from repro.core import Memento, RunnerConfig
+    from repro.experiments import serve_matrix, serve_sweep
+
+    if smoke:
+        cache_len, page, prompts, budget = 64, 8, (8, 40, 12, 33), 16
+        rate = 0.0
+    else:
+        cache_len, page, budget, rate = 4224, 64, 256, 6.0
+        prompts = (32, 32, 64, 4096, 32, 64, 2048, 32, 128, 32)
+    matrix = serve_matrix(
+        ["llama3.2-3b"], backends=["xla"],
+        scheduler={"chunk_budget": [0, budget]},
+        cache_len=cache_len, n_slots=4, page_size=page,
+        n_requests=len(prompts), prompt_lens=prompts,
+        max_new_tokens=8 if not smoke else 16,
+        arrival_rate_hz=rate, warmup=True,
+    )
+    eng = Memento(
+        serve_sweep, namespace="serve",
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    tokens = {}
+    for r in eng.run(matrix, cache=False):
+        v = _value(r)
+        label = f"chunked_{v['chunk_budget']}" if v["chunk_budget"] else "chunking_off"
+        tokens[label] = v["tokens"]
+        _row(
+            f"B11_serve_{label}_{len(prompts)}req",
+            v["wall_s"] * 1e6,
+            f"{v['tokens_per_s']:.1f} tok/s itl_p50={v['itl_p50_s']*1e3:.0f}ms "
+            f"itl_p95={v['itl_p95_s']*1e3:.0f}ms chunk_steps={v['chunk_steps']} "
+            f"chunk_traces={v['chunk_traces']} decode_traces={v['decode_traces']}",
+        )
+    vals = list(tokens.values())
+    if len(vals) == 2 and vals[0] != vals[1]:
+        _row("B11_token_identity", 0.0, "MISMATCH between chunked and off")
+
+
+def bench_serve_smoke() -> None:
+    """Tiny B9/B10/B11 rows for CI: one smoke-scale model, second-scale
+    workloads, still through Memento + serve_sweep end-to-end."""
+    from repro.core import Memento, RunnerConfig
+    from repro.experiments import serve_matrix, serve_sweep
+
+    matrix = (
+        serve_matrix(
+            ["llama3.2-3b"], backends=["xla"],
+            scheduler={"paged": [False, True]},
+            cache_len=64, n_slots=2, n_requests=4, prompt_lens=(4, 9, 17, 6),
+            max_new_tokens=4, warmup=False,
+        )
+        + serve_matrix(
+            ["llama3.2-3b"], backends=["xla"],
+            scheduler={"chunk_budget": [16]},
+            cache_len=64, n_slots=2, page_size=8, n_requests=3,
+            prompt_lens=(40, 8, 21), max_new_tokens=4, warmup=False,
+        )
+    )
+    eng = Memento(
+        serve_sweep, namespace="serve",
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    for r in eng.run(matrix, cache=False):
+        v = _value(r)
+        if v.get("chunk_budget"):
+            label = "B11_smoke_chunked"
+            extra = f"chunk_steps={v['chunk_steps']} chunk_traces={v['chunk_traces']}"
+        elif v["paged"]:
+            label = "B10_smoke_paged"
+            extra = f"peak_cache_bytes={v['peak_cache_bytes']}"
+        else:
+            label = "B9_smoke_contig"
+            extra = f"p95={v['latency_p95_s']*1e3:.0f}ms"
+        _row(
+            label, v["wall_s"] * 1e6,
+            f"{v['tokens_per_s']:.1f} tok/s decode_traces={v['decode_traces']} {extra}",
+        )
+
+
 def bench_roofline_summary() -> None:
     try:
         from repro.launch.report import load_results
@@ -318,11 +413,13 @@ def main(smoke: bool = False) -> None:
     bench_checkpoint_overhead(smoke=smoke)
     bench_failure_isolation()
     if smoke:
+        bench_serve_smoke()
         return
     bench_kernels()
     bench_train_sweep()
     bench_serve_throughput()
     bench_serve_paged()
+    bench_serve_chunked()
     bench_roofline_summary()
 
 

@@ -29,6 +29,7 @@ from .matrix import (
     MatrixBase,
     ProductMatrix,
     TaskSpec,
+    TaskViewMatrix,
     WhereMatrix,
     as_matrix,
 )
@@ -40,6 +41,7 @@ from .notifications import (
     FileNotificationProvider,
     MultiProvider,
     NotificationProvider,
+    ProgressNotificationProvider,
     RecordingProvider,
     WebhookNotificationProvider,
 )

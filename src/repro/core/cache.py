@@ -34,6 +34,13 @@ class CacheEntry:
     manifest: dict[str, Any]
 
 
+def param_repr(value: Any) -> str:
+    """Canonical string form of one task-parameter value as recorded in
+    cache manifests — shared by the writers (runner) and readers
+    (``Memento.invalidate``) so partial-params matching round-trips."""
+    return getattr(value, "__name__", None) or str(value)
+
+
 class BaseCache:
     def get(self, key: str) -> CacheEntry | None:  # pragma: no cover - interface
         raise NotImplementedError
@@ -46,6 +53,17 @@ class BaseCache:
 
     def invalidate(self, key: str) -> None:  # pragma: no cover - interface
         raise NotImplementedError
+
+    def keys(self) -> Iterator[str]:
+        """Iterate stored task keys (for sweep-level invalidation). Caches
+        that cannot enumerate return nothing."""
+        return iter(())
+
+    def manifest(self, key: str) -> dict[str, Any] | None:
+        """Manifest-only read (no payload deserialisation where the backend
+        allows it) — the matching side of sweep-level invalidation."""
+        entry = self.get(key)
+        return entry.manifest if entry is not None else None
 
 
 class NullCache(BaseCache):
@@ -79,6 +97,10 @@ class MemoryCache(BaseCache):
     def invalidate(self, key: str) -> None:
         with self._lock:
             self._store.pop(key, None)
+
+    def keys(self) -> Iterator[str]:
+        with self._lock:
+            return iter(list(self._store.keys()))
 
     def __len__(self) -> int:
         with self._lock:
@@ -152,6 +174,18 @@ class FsCache(BaseCache):
             self._quarantine(key)
             return None
         return CacheEntry(key=key, value=value, manifest=manifest)
+
+    def manifest(self, key: str) -> dict[str, Any] | None:
+        """Read only manifest.json — invalidation scans stay O(entries),
+        never unpickling payloads."""
+        man_path = self._dir(key) / MANIFEST
+        try:
+            return json.loads(man_path.read_text())
+        except FileNotFoundError:
+            return None
+        except Exception:
+            self._quarantine(key)
+            return None
 
     def _quarantine(self, key: str) -> None:
         entry_dir = self._dir(key)

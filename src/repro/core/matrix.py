@@ -161,17 +161,28 @@ class MatrixBase:
     def __len__(self) -> int:
         return sum(1 for _ in self.tasks())
 
-    # -- filtering (useful for partial re-runs / sharded launchers) ------------
-    def subset(self, predicate: Callable[[dict[str, Any]], bool]) -> list[TaskSpec]:
-        return [t for t in self.tasks() if predicate(t.params)]
+    def __iter__(self) -> Iterator[TaskSpec]:
+        """Iterate expanded TaskSpecs — so views returned by ``shard()`` /
+        ``subset()`` keep behaving like the task lists they used to be."""
+        return self.tasks()
 
-    def shard(self, shard_index: int, num_shards: int) -> list[TaskSpec]:
-        """Deterministic round-robin split of the task list across launchers."""
+    # -- filtering (useful for partial re-runs / sharded launchers) ------------
+    def subset(self, predicate: Callable[[dict[str, Any]], bool]) -> "TaskViewMatrix":
+        """Lazy task-level filter. The result is a matrix: chain it with
+        ``+``/``*``/``.where()``/``.derive()``, or iterate / ``.tasks()``
+        for the (index-preserving) TaskSpec view."""
+        return TaskViewMatrix(self, lambda t: predicate(t.params))
+
+    def shard(self, shard_index: int, num_shards: int) -> "TaskViewMatrix":
+        """Deterministic round-robin split of the task list across launchers.
+
+        Returns a lazy matrix view (composable like any other); task
+        indices and keys are those of the base matrix."""
         if not (0 <= shard_index < num_shards):
             raise ConfigMatrixError(
                 f"shard_index {shard_index} out of range for {num_shards} shards"
             )
-        return [t for t in self.tasks() if t.index % num_shards == shard_index]
+        return TaskViewMatrix(self, lambda t: t.index % num_shards == shard_index)
 
 
 @dataclass
@@ -252,6 +263,36 @@ class ConfigMatrix(MatrixBase):
     def assignments(self) -> Iterator[tuple[dict[str, Any], dict[str, Any]]]:
         for combo in self.combinations():
             yield combo, self.settings
+
+
+class TaskViewMatrix(MatrixBase):
+    """Lazy task-level view of a base matrix (``shard()`` / ``subset()``).
+
+    Filtering happens on expanded :class:`TaskSpec`s (the only place shard
+    indices exist), but the view is still a :class:`MatrixBase`: it chains
+    with ``+``, crosses with ``*``, and filters further with ``where()`` —
+    composition re-expands through :meth:`assignments`, while direct
+    iteration / :meth:`tasks` preserves the base matrix's task indices and
+    keys (so a shard's tasks keep the identity they'd have in the full
+    run)."""
+
+    def __init__(self, base: MatrixBase, keep: Callable[[TaskSpec], bool]):
+        self.base = base
+        self.keep = keep
+
+    @property
+    def axis_names(self) -> list[str]:
+        return self.base.axis_names
+
+    def tasks(self, namespace: str | None = None) -> Iterator[TaskSpec]:
+        for t in self.base.tasks(namespace):
+            if self.keep(t):
+                yield t
+
+    def assignments(self) -> Iterator[tuple[dict[str, Any], dict[str, Any]]]:
+        for t in self.base.tasks():
+            if self.keep(t):
+                yield t.params, t.settings
 
 
 class ChainMatrix(MatrixBase):

@@ -119,8 +119,42 @@ class Memento:
             provider=self.provider,
             config=self.runner_config,
             checkpoint_root=self._ckpt_root,
+            manifest_extra={"namespace": self.namespace},
         )
         return runner.stream(specs, force=force)
+
+    # -- cache maintenance ------------------------------------------------------
+    def invalidate(self, **partial_params: Any) -> int:
+        """Delete every cached result whose task assignment matches the
+        partial params dict — per-axis invalidation, e.g.
+        ``eng.invalidate(arch="llama3.2-3b")`` drops that model's whole
+        sweep column while every other cached cell survives.
+
+        Matching is against the param reprs recorded in each entry's
+        manifest (every key in ``partial_params`` must be present and
+        equal), and is namespace-aware: only entries written under this
+        Memento's namespace are touched. Returns the number of entries
+        removed. With no arguments, every entry of this namespace goes.
+        """
+        from .cache import param_repr
+
+        want = {k: param_repr(v) for k, v in partial_params.items()}
+        ns = str(self.namespace) if self.namespace else None
+        n = 0
+        for key in list(self.cache.keys()):
+            man = self.cache.manifest(key)
+            if man is None:
+                continue
+            man_ns = man.get("namespace") or None
+            if man_ns != ns:
+                continue
+            params = man.get("params")
+            if params is None:
+                continue  # entry predates param manifests; leave it alone
+            if all(params.get(k) == v for k, v in want.items()):
+                self.cache.invalidate(key)
+                n += 1
+        return n
 
     # -- cluster API ------------------------------------------------------------
     def run_distributed(
@@ -153,7 +187,17 @@ class Memento:
             ctx = Context(spec=spec, checkpoints=ckpts, _heartbeat=beat)
             t0 = time.time()
             value = self.exp_func(ctx)
-            self.cache.put(spec.key, value, manifest={"wall_s": time.time() - t0})
+            from .cache import param_repr
+
+            self.cache.put(
+                spec.key,
+                value,
+                manifest={
+                    "params": {k: param_repr(v) for k, v in spec.params.items()},
+                    "namespace": self.namespace,
+                    "wall_s": time.time() - t0,
+                },
+            )
             return value
 
         def on_result(key: str, status: str, value: Any) -> None:

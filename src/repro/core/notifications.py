@@ -137,6 +137,100 @@ class WebhookNotificationProvider(NotificationProvider):
         )
 
 
+class ProgressNotificationProvider(NotificationProvider):
+    """Live sweep progress in completion order (minimal console version).
+
+    Feed it from ``Memento.stream()``::
+
+        prov = ProgressNotificationProvider(total=len(matrix))
+        for result in prov.track(eng.stream(matrix)):
+            ...   # consume incrementally; progress lines render as a side
+                  # effect: "[memento] 12/40 done (3 cached, 1 failed) ETA 42s"
+
+    or pass it as the Memento's ``notification_provider`` — it derives the
+    same counts from ``task_finished``/``task_failed`` events (cache hits
+    are only visible on the stream path, since hits bypass execution).
+    The ETA extrapolates the observed live-completion rate over the
+    remaining tasks; cached results are instant and excluded from the rate.
+    """
+
+    def __init__(
+        self,
+        total: int | None = None,
+        stream: TextIO | None = None,
+        min_interval_s: float = 0.0,
+    ):
+        self.total = total
+        self.stream = stream or sys.stderr
+        self.min_interval_s = min_interval_s
+        self.done = 0  # ok + failed + cached
+        self.failed = 0
+        self.cached = 0
+        self._t0: float | None = None
+        self._t_last_print = 0.0
+        self._lock = threading.Lock()
+
+    # -- stream path --------------------------------------------------------
+    def track(self, results: Any) -> Any:
+        """Wrap a ``Memento.stream()`` iterator: yields every result through
+        unchanged while updating (and printing) progress."""
+        for result in results:
+            self.update(result)
+            yield result
+
+    def update(self, result: TaskResult) -> None:
+        with self._lock:
+            if self._t0 is None:
+                self._t0 = time.time()
+            self.done += 1
+            if result.status == "cached":
+                self.cached += 1
+            elif not result.ok:
+                self.failed += 1
+            self._render()
+
+    # -- event path (Memento notification_provider) -------------------------
+    def notify(self, event: Event) -> None:
+        with self._lock:
+            if event.kind == "run_started":
+                self._t0 = time.time()
+                return
+            if event.kind not in ("task_finished", "task_failed"):
+                return
+            if self._t0 is None:
+                self._t0 = time.time()
+            self.done += 1
+            if event.kind == "task_failed":
+                self.failed += 1
+            self._render()
+
+    # -- rendering ----------------------------------------------------------
+    def eta_s(self) -> float | None:
+        """Seconds to drain the remaining tasks at the live completion rate."""
+        live_done = self.done - self.cached
+        if self.total is None or self._t0 is None or live_done <= 0:
+            return None
+        remaining = max(self.total - self.done, 0)
+        rate = live_done / max(time.time() - self._t0, 1e-9)
+        return remaining / rate if rate > 0 else None
+
+    def _render(self) -> None:
+        now = time.time()
+        if self.min_interval_s and now - self._t_last_print < self.min_interval_s:
+            return
+        self._t_last_print = now
+        total = f"/{self.total}" if self.total is not None else ""
+        extras = []
+        if self.cached:
+            extras.append(f"{self.cached} cached")
+        if self.failed:
+            extras.append(f"{self.failed} failed")
+        detail = f" ({', '.join(extras)})" if extras else ""
+        eta = self.eta_s()
+        eta_s = f" ETA {eta:.0f}s" if eta is not None else ""
+        print(f"[memento] {self.done}{total} done{detail}{eta_s}", file=self.stream)
+
+
 class MultiProvider(NotificationProvider):
     """Fan out to several providers; swallow (but count) their failures."""
 

@@ -40,7 +40,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator, Sequence
 
-from .cache import BaseCache, NullCache
+from .cache import BaseCache, NullCache, param_repr
 from .matrix import TaskSpec
 from .notifications import Event, NotificationProvider
 from .task import Context, TaskCheckpointStore, TaskResult
@@ -114,6 +114,7 @@ class Runner:
         provider: NotificationProvider | None = None,
         config: RunnerConfig | None = None,
         checkpoint_root: str | None = None,
+        manifest_extra: dict[str, Any] | None = None,
     ):
         self.func = func
         # NOT `cache or NullCache()`: an empty FsCache is len()==0 == falsy.
@@ -121,7 +122,17 @@ class Runner:
         self.provider = provider
         self.config = config or RunnerConfig()
         self.checkpoint_root = checkpoint_root
+        # Folded into every cache manifest (e.g. the Memento namespace, so
+        # per-axis invalidation can respect namespace partitions).
+        self.manifest_extra = dict(manifest_extra or {})
         self.stats: dict[str, Any] = {}
+
+    def _manifest(self, spec: TaskSpec, **extra: Any) -> dict[str, Any]:
+        return {
+            "params": {k: param_repr(v) for k, v in spec.params.items()},
+            **self.manifest_extra,
+            **extra,
+        }
 
     # -- notifications ------------------------------------------------------
     def _notify(self, kind: str, message: str, **payload: Any) -> None:
@@ -297,14 +308,9 @@ class Runner:
                     self.cache.put(
                         att.spec.key,
                         value,
-                        manifest={
-                            "params": {
-                                k: getattr(v, "__name__", None) or str(v)
-                                for k, v in att.spec.params.items()
-                            },
-                            "wall_s": wall,
-                            "attempts": att.number,
-                        },
+                        manifest=self._manifest(
+                            att.spec, wall_s=wall, attempts=att.number
+                        ),
                     )
                 except Exception as e:
                     self._notify("cache_error", f"{att.spec.key[:12]}: {e}")
@@ -508,7 +514,10 @@ class Runner:
                             wall_s=time.time() - started,
                         )
                         try:
-                            self.cache.put(spec.key, value, manifest={"wall_s": res.wall_s})
+                            self.cache.put(
+                                spec.key, value,
+                                manifest=self._manifest(spec, wall_s=res.wall_s),
+                            )
                         except Exception:
                             pass
                     elif failures_left[spec.key] > 0:

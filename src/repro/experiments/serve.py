@@ -14,6 +14,12 @@ Axes/settings understood by :func:`serve_sweep`:
   n_slots, cache_len     scheduler shape (defaults 4, 128)
   paged, page_size,      page-pool knobs (defaults True, 16, capacity parity)
   n_pages, prefill_buckets
+  chunk_budget           unified token-budget step: per-step tokens shared by
+                         decode rows + a prefill chunk (None/0 -> whole-prompt
+                         prefill at admission)
+  min_chunk              smallest chunk bucket (default 16)
+  preemption             "off" | "swap" | "recompute" (reservation-free
+                         admission + LRU page reclaim; needs chunk_budget)
   n_requests             workload size (default 8)
   prompt_lens            cycled prompt lengths (default (4, 8, 12))
   max_new_tokens         per-request decode budget (default 8)
@@ -81,6 +87,7 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     import jax
 
     params = init_params(lm.model_schema(cfg), jax.random.PRNGKey(_opt(ctx, "seed", 0)))
+    chunk_budget = _opt(ctx, "chunk_budget", None) or None
     sched_cfg = SchedulerConfig(
         n_slots=int(_opt(ctx, "n_slots", 4)),
         cache_len=int(_opt(ctx, "cache_len", 128)),
@@ -88,6 +95,9 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         page_size=int(_opt(ctx, "page_size", 16)),
         n_pages=_opt(ctx, "n_pages", None),
         prefill_buckets=bool(_opt(ctx, "prefill_buckets", True)),
+        chunk_budget=None if chunk_budget is None else int(chunk_budget),
+        min_chunk=int(_opt(ctx, "min_chunk", 16)),
+        preemption=str(_opt(ctx, "preemption", "off")),
         seed=int(_opt(ctx, "seed", 0)),
     )
     sched = Scheduler(cfg, params, ShardingCtx.null(), sched_cfg)
@@ -118,7 +128,11 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         sched.deferred_admissions = 0
 
     rate = float(_opt(ctx, "arrival_rate_hz", 0.0) or 0.0)
-    steps_before = sched.total_decode_steps  # scope decode_steps past warmup
+    # Scope work counters past warmup (trace counters stay cumulative:
+    # warmup exists precisely to absorb the compiles).
+    steps_before = sched.total_decode_steps
+    chunks_before = sched.total_chunk_steps
+    preempts_before = sched.preemptions_total
     t0 = time.perf_counter()
     if rate > 0.0:
         arrivals = np.cumsum(rng.exponential(scale=1.0 / rate, size=n_req))
@@ -142,6 +156,12 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     toks = sum(len(rs.tokens) for rs in done)
     lat = np.array([rs.latency_s for rs in done])
     ttft = np.array([rs.ttft_s for rs in done])
+    # Inter-token latency across all in-flight decodes: the gap a streaming
+    # client sees between consecutive tokens. Un-chunked long prefills of
+    # *other* requests stall every in-flight decode and surface here as p95
+    # spikes; the unified token-budget step is measured by this number.
+    itl = [gap for rs in done for gap in rs.inter_token_s()]
+    itl_a = np.array(itl) if itl else np.zeros(1)
     cache_bytes = sched.paged_cache_bytes()
     return {
         "arch": arch,
@@ -153,12 +173,19 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         "latency_p50_s": float(np.percentile(lat, 50)),
         "latency_p95_s": float(np.percentile(lat, 95)),
         "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "itl_p50_s": float(np.percentile(itl_a, 50)),
+        "itl_p95_s": float(np.percentile(itl_a, 95)),
         "decode_steps": sched.total_decode_steps - steps_before,
+        "chunk_steps": sched.total_chunk_steps - chunks_before,
         "decode_traces": sched.decode_traces,
         "prefill_traces": sched.prefill_traces,
+        "chunk_traces": sched.chunk_traces,
         "deferred_admissions": sched.stats()["deferred_admissions"],
+        "preemptions": sched.preemptions_total - preempts_before,
         "peak_cache_bytes": cache_bytes["peak_bytes"],
         "contiguous_cache_bytes": cache_bytes["contiguous_bytes"],
         "paged": sched_cfg.paged,
+        "chunk_budget": sched_cfg.chunk_budget,
+        "preemption": sched_cfg.preemption,
         "tokens": [rs.tokens for rs in done],
     }

@@ -168,6 +168,108 @@ def _paged_decode_kernel(
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_chunk_kernel(
+    pt_ref, start_ref,  # scalar prefetch: (B, MP) page table, (B,) chunk starts
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, sm_scale, page, n_lp, G,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)  # logical page (innermost: sequential accumulation)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(F32)  # (C*G, D): query row r = c*G + g
+    k = k_ref[0, :, 0, :].astype(F32)  # (page, D)
+    v = v_ref[0, :, 0, :].astype(F32)
+    start = start_ref[b]
+    CG = q.shape[0]
+
+    # Dense chunked prefill: logical slot s holds position s; query row r is
+    # chunk token c = r // G at absolute position start + c. Trash-backed
+    # table entries and the chunk's own padded tail sit at k_pos > q_pos and
+    # mask out — the kernel needs no extra validity inputs.
+    k_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (CG, page), 1)
+    q_pos = start + jax.lax.broadcasted_iota(jnp.int32, (CG, page), 0) // G
+    valid = k_pos <= q_pos  # (CG, page)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32) * sm_scale
+    s = jnp.where(valid, s, NEG_INF)  # (CG, page)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(j == n_lp - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_chunk_attention(
+    q: jax.Array,  # (B, KV, C*G, D) chunk queries, row r = c*G + g
+    k_pool: jax.Array,  # (P+1, page, KV, D) shared pool incl. trash page
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32
+    start: jax.Array,  # (B,) int32: tokens cached before the chunk
+    *, n_lp: int, group: int, sm_scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Chunked-prefill flash attention over page-table-gathered KV blocks.
+
+    The dense-layer companion of :func:`paged_decode_attention` for C > 1
+    query tokens: the chunk's K/V are scattered into the pool *before* the
+    call, then every chunk token attends to the already-paged prefix plus
+    its chunk predecessors through the same scalar-prefetched page table —
+    per-(token, slot) causal validity is computed in-kernel from the page
+    index and the chunk start, so the kernel never materialises a gathered
+    cache copy or a mask input.
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    B, KV, CG, D = q.shape
+    page = k_pool.shape[1]
+    sm = sm_scale if sm_scale is not None else D ** -0.5
+    assert n_lp <= page_table.shape[1], (n_lp, page_table.shape)
+    assert CG % group == 0, (CG, group)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_lp),
+        in_specs=[
+            pl.BlockSpec((1, 1, CG, D), lambda b, h, j, pt, st: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D), lambda b, h, j, pt, st: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D), lambda b, h, j, pt, st: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, CG, D), lambda b, h, j, pt, st: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((CG, D), F32),
+            pltpu.VMEM((CG,), F32),
+            pltpu.VMEM((CG,), F32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_chunk_kernel, sm_scale=sm, page=page, n_lp=n_lp, G=group
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, CG, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), start.astype(jnp.int32), q, k_pool, v_pool)
+
+
 def paged_decode_attention(
     q: jax.Array,  # (B, KV, G, D)
     k_pool: jax.Array,  # (P+1, page, KV, D) shared pool incl. trash page

@@ -123,6 +123,28 @@ def paged_decode_attention_op(
     return o.reshape(B, 1, H, D)
 
 
+def paged_chunk_attention_op(
+    q: jax.Array,  # (B, C, H, D) chunk queries
+    k_pool: jax.Array,  # (P+1, page, KV, D) shared page pool (chunk K/V written)
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32
+    start: jax.Array,  # (B,) int32: tokens cached before the chunk
+    *, n_lp: int,
+) -> jax.Array:
+    """Model-layout chunked-prefill attention over the paged KV (dense
+    layers). The chunk's own K/V must already be scattered into the pool."""
+    B, C, H, D = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    # Row order c*G + g per kv-head: (B, C, KV, G, D) -> (B, KV, C*G, D).
+    qf = q.reshape(B, C, KV, G, D).transpose(0, 2, 1, 3, 4).reshape(B, KV, C * G, D)
+    o = _dec.paged_chunk_attention(
+        qf, k_pool, v_pool, page_table, start, n_lp=n_lp, group=G,
+        interpret=default_interpret(),
+    )
+    return o.reshape(B, KV, C, G, D).transpose(0, 2, 1, 3, 4).reshape(B, C, H, D)
+
+
 # ==========================================================================
 # Recurrences
 # ==========================================================================

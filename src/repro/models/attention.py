@@ -199,6 +199,43 @@ def _sdpa_chunked(
     return out
 
 
+def _sdpa_span(
+    q: jax.Array,  # (B, C, H, D) query span (C == 1 for decode)
+    k: jax.Array,  # (B, T, KV, D)
+    v: jax.Array,  # (B, T, KV, Dv)
+    k_pos: jax.Array,  # (B, T) absolute positions held in each row's cache slots
+    q_pos: jax.Array,  # (B, C) absolute positions of the query tokens
+    cfg: ModelConfig,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Masked attention of a query span against position-tagged cache slots.
+
+    Validity is purely positional — ``k_pos`` entries of -1 (never-written
+    ring slots, padded chunk tails) and entries beyond each query's causal
+    horizon are masked, so the same routine serves single-token decode and
+    multi-token chunked prefill over dense, windowed, and paged layouts.
+    """
+    B, C, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    Dv = v.shape[-1]
+    sc = scale if scale is not None else D ** -0.5
+    if G > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, KV, G, D)).reshape(B, T, H, D)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (B, T, KV, G, Dv)).reshape(B, T, H, Dv)
+    s = jnp.einsum("bchd,bthd->bhct", q, k, preferred_element_type=F32) * sc
+    kp = k_pos[:, None, :]  # (B, 1, T)
+    qp = q_pos[:, :, None]  # (B, C, 1)
+    valid = (kp <= qp) & (kp >= 0)
+    if window:
+        valid = valid & (kp > qp - window)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhct,bthe->bche", p.astype(cdt(cfg)), v, preferred_element_type=F32)
+    return o.astype(cdt(cfg))  # (B, C, H, Dv)
+
+
 def _sdpa_decode(
     q: jax.Array,  # (B, 1, H, D)
     k: jax.Array,  # (B, T, KV, D)
@@ -209,24 +246,118 @@ def _sdpa_decode(
     window: int = 0,
     scale: float | None = None,
 ) -> jax.Array:
-    B, _, H, D = q.shape
-    T, KV = k.shape[1], k.shape[2]
-    G = H // KV
-    Dv = v.shape[-1]
-    sc = scale if scale is not None else D ** -0.5
-    if G > 1:
-        k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, KV, G, D)).reshape(B, T, H, D)
-        v = jnp.broadcast_to(v[:, :, :, None, :], (B, T, KV, G, Dv)).reshape(B, T, H, Dv)
-    qh = q.reshape(B, H, D)
-    s = jnp.einsum("bhd,bthd->bht", qh, k, preferred_element_type=F32) * sc
-    cp = cur_pos[:, None]  # (B, 1)
-    valid = (k_pos <= cp) & (k_pos >= 0)
+    return _sdpa_span(q, k, v, k_pos, cur_pos[:, None], cfg, window=window, scale=scale)
+
+
+# ==========================================================================
+# Chunked-prefill cache streaming (one slot, C tokens per program)
+# ==========================================================================
+def _chunk_attend(
+    q: jax.Array,  # (1, C, H, D)
+    k: jax.Array,  # (1, C, KV, D) chunk keys (rope applied)
+    v: jax.Array,  # (1, C, KV, Dv)
+    cache: KVCache,
+    cfg: ModelConfig,
+    sctx: ShardingCtx,
+    *,
+    qpos: jax.Array,  # (C,) absolute positions of the chunk tokens
+    valid_tok: jax.Array,  # (C,) True for real (non-padded) tokens
+    start: jax.Array,  # scalar: tokens already cached before this chunk
+    chunk_len: jax.Array,  # scalar: number of real tokens in the chunk
+    window: int,
+    page_table: jax.Array | None,  # (1, max_pages) when the leaf is paged
+) -> tuple[jax.Array, KVCache]:
+    dt = cdt(cfg)
+    B, C = q.shape[0], q.shape[1]
+    q_pos_b = jnp.broadcast_to(qpos[None, :], (B, C))
+
+    if page_table is not None:
+        page = cache.k.shape[1]
+        max_pages = page_table.shape[1]
+        trash = cache.k.shape[0] - 1
+        if window:
+            n_lp = min(-(-window // page), max_pages)
+            # Read the pre-write ring plus the chunk keys side by side.
+            sel = page_table[:, :n_lp]
+            T = n_lp * page
+            kold = cache.k[sel].reshape(B, T, *cache.k.shape[2:]).astype(dt)
+            vold = cache.v[sel].reshape(B, T, *cache.v.shape[2:]).astype(dt)
+            k_pos_old = _ring_positions(T, window, start - 1)
+            k_pos_c = jnp.where(valid_tok, qpos, -1)
+            kk = jnp.concatenate([kold, k.astype(dt)], axis=1)
+            vv = jnp.concatenate([vold, v.astype(dt)], axis=1)
+            k_pos = jnp.concatenate([k_pos_old, k_pos_c])[None, :]
+            out = _sdpa_span(q, kk, vv, k_pos, q_pos_b, cfg, window=window)
+            # Ring write: only the last min(window, chunk_len) real tokens
+            # survive; everything else (pads, ring-evicted early tokens)
+            # goes to the trash page so no live page is ever aliased.
+            keep = valid_tok & (qpos >= start + chunk_len - window)
+            lslot = qpos % window
+            pid = jnp.where(keep, page_table[0, lslot // page], trash)
+            off = lslot % page
+            ck = cache.k.at[pid, off].set(k[0].astype(cache.k.dtype))
+            cv = cache.v.at[pid, off].set(v[0].astype(cache.v.dtype))
+        else:
+            # Dense: scatter the chunk into its pages first (pads -> trash),
+            # then attend over the whole table — stale or trash-backed slots
+            # fall out of the positional mask automatically.
+            pid = jnp.where(valid_tok, page_table[0, qpos // page], trash)
+            off = qpos % page
+            ck = cache.k.at[pid, off].set(k[0].astype(cache.k.dtype))
+            cv = cache.v.at[pid, off].set(v[0].astype(cache.v.dtype))
+            if cfg.attn_backend == "pallas":
+                from repro.kernels import ops as _kops
+
+                out = _kops.paged_chunk_attention_op(
+                    q, ck, cv, page_table, jnp.broadcast_to(start, (B,)),
+                    n_lp=max_pages,
+                ).astype(dt)
+            else:
+                sel = page_table  # (B, max_pages)
+                T = max_pages * page
+                kg = ck[sel].reshape(B, T, *ck.shape[2:]).astype(dt)
+                vg = cv[sel].reshape(B, T, *cv.shape[2:]).astype(dt)
+                k_pos = jnp.broadcast_to(
+                    jnp.arange(T, dtype=jnp.int32)[None, :], (B, T)
+                )
+                out = _sdpa_span(q, kg, vg, k_pos, q_pos_b, cfg)
+        ck = constrain(ck, (None, None, "kv_heads", "head_dim"), sctx)
+        cv = constrain(cv, (None, None, "kv_heads", "head_dim"), sctx)
+        return out, KVCache(ck, cv)
+
+    # Contiguous per-slot row.
+    T = cache.k.shape[1]
     if window:
-        valid = valid & (k_pos > cp - window)
-    s = jnp.where(valid[:, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bht,bthe->bhe", p.astype(cdt(cfg)), v, preferred_element_type=F32)
-    return o.reshape(B, 1, H, Dv).astype(cdt(cfg))
+        k_pos_old = _ring_positions(T, T, start - 1)[None, :]
+        k_pos_c = jnp.where(valid_tok, qpos, -1)[None, :]
+        kk = jnp.concatenate([cache.k.astype(dt), k.astype(dt)], axis=1)
+        vv = jnp.concatenate([cache.v.astype(dt), v.astype(dt)], axis=1)
+        k_pos = jnp.concatenate([k_pos_old, k_pos_c], axis=1)
+        out = _sdpa_span(q, kk, vv, k_pos, q_pos_b, cfg, window=window)
+        keep = valid_tok & (qpos >= start + chunk_len - T)
+        wslot = jnp.where(keep, qpos % T, T)  # T is out of bounds -> dropped
+        ck = cache.k.at[0, wslot].set(k[0].astype(cache.k.dtype), mode="drop")
+        cv = cache.v.at[0, wslot].set(v[0].astype(cache.v.dtype), mode="drop")
+        seq_axis = "window"
+    else:
+        wslot = jnp.where(valid_tok, qpos, T)  # out of bounds -> dropped
+        ck = cache.k.at[0, wslot].set(k[0].astype(cache.k.dtype), mode="drop")
+        cv = cache.v.at[0, wslot].set(v[0].astype(cache.v.dtype), mode="drop")
+        k_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :], (B, T))
+        out = _sdpa_span(q, ck.astype(dt), cv.astype(dt), k_pos, q_pos_b, cfg)
+        seq_axis = "kv_seq"
+    ck = constrain(ck, ("batch", seq_axis, "kv_heads", "head_dim"), sctx)
+    cv = constrain(cv, ("batch", seq_axis, "kv_heads", "head_dim"), sctx)
+    return out, KVCache(ck, cv)
+
+
+def _ring_positions(T: int, window: int, cur: jax.Array) -> jax.Array:
+    """Absolute position held by each of T ring slots after ``cur + 1``
+    tokens: slot i holds the latest p <= cur with p % window == i; negative
+    (never written) and out-of-ring slots report -1."""
+    idx = jnp.arange(T, dtype=jnp.int32)
+    pos = cur - ((cur - idx) % window)
+    return jnp.where((idx < window) & (pos >= 0), pos, -1)
 
 
 # ==========================================================================
@@ -253,15 +384,16 @@ def gqa_attention(
     cfg: ModelConfig,
     x: jax.Array,  # (B, S, d)
     *,
-    mode: str,  # train | prefill | decode
+    mode: str,  # train | prefill | chunk | decode
     positions: jax.Array,  # (S,) absolute positions of x's tokens
     mask_kind: str = "causal",
     window: int = 0,
     prefix_len: int = 0,
     cache: KVCache | None = None,
-    cur_pos: jax.Array | None = None,  # scalar, decode only
+    cur_pos: jax.Array | None = None,  # scalar, decode/chunk only
     use_rope: bool = True,
     page_table: jax.Array | None = None,  # (B, max_pages) int32, paged decode only
+    chunk_len: jax.Array | None = None,  # valid tokens in a chunk (chunk mode)
     sctx: ShardingCtx,
 ) -> tuple[jax.Array, KVCache | None]:
     dt = cdt(cfg)
@@ -279,7 +411,28 @@ def gqa_attention(
         and not (cfg.prefix_lm and cfg.prefix_len)
         and x.shape[1] % min(128, x.shape[1]) == 0
     )
-    if mode == "decode" and page_table is not None:
+    if mode == "chunk":
+        # Chunked prefill for ONE slot (B == 1): x holds C tokens at absolute
+        # positions cur_pos .. cur_pos + C - 1, of which the first chunk_len
+        # are real (the tail is bucket padding). The chunk's K/V stream into
+        # the slot's cache — shared page pool (paged) or contiguous row —
+        # and the queries attend to the already-cached prefix plus the
+        # chunk itself, with purely positional validity. Windowed layers
+        # read the pre-write ring and the chunk keys side by side so that
+        # in-window positions evicted by later chunk colleagues stay
+        # visible to earlier queries.
+        assert cache is not None and cur_pos is not None and chunk_len is not None
+        B, C = q.shape[0], q.shape[1]
+        start = jnp.asarray(cur_pos, jnp.int32)  # tokens already cached
+        idx_c = jnp.arange(C, dtype=jnp.int32)
+        qpos = start + idx_c  # (C,)
+        valid_tok = idx_c < chunk_len  # (C,)
+        out, new_cache = _chunk_attend(
+            q, k, v, cache, cfg, sctx,
+            qpos=qpos, valid_tok=valid_tok, start=start, chunk_len=chunk_len,
+            window=window, page_table=page_table,
+        )
+    elif mode == "decode" and page_table is not None:
         assert cache is not None and cur_pos is not None
         # Paged decode: the cache is a shared page pool (P+1, page, kv, hd)
         # and this slot's logical token s lives in physical page
@@ -415,6 +568,7 @@ def mla_attention(
     positions: jax.Array,
     cache: MLACache | None = None,
     cur_pos: jax.Array | None = None,
+    chunk_len: jax.Array | None = None,  # valid tokens in a chunk (chunk mode)
     sctx: ShardingCtx,
 ) -> tuple[jax.Array, MLACache | None]:
     m = cfg.mla
@@ -437,21 +591,39 @@ def mla_attention(
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B, S, rope)
 
     new_cache: MLACache | None = None
-    if mode == "decode":
+    if mode in ("decode", "chunk"):
         assert cache is not None and cur_pos is not None
         T = cache.ckv.shape[1]
-        pos_v = jnp.broadcast_to(jnp.atleast_1d(cur_pos), (B,)).astype(jnp.int32)
-        rows = jnp.arange(B)
-        ckv_all = cache.ckv.at[rows, pos_v].set(ckv[:, 0].astype(cache.ckv.dtype))
-        krope_all = cache.krope.at[rows, pos_v].set(k_rope[:, 0].astype(cache.krope.dtype))
+        if mode == "chunk":
+            # One slot's prompt chunk (B == 1): scatter the S compressed
+            # latents at positions cur_pos .. cur_pos + chunk_len - 1 (the
+            # padded tail is dropped), then run the absorbed path with
+            # per-query positional validity over the whole row.
+            assert chunk_len is not None
+            start = jnp.asarray(cur_pos, jnp.int32)
+            qpos = start + jnp.arange(S, dtype=jnp.int32)
+            wslot = jnp.where(jnp.arange(S) < chunk_len, qpos, T)
+            ckv_all = cache.ckv.at[0, wslot].set(
+                ckv[0].astype(cache.ckv.dtype), mode="drop"
+            )
+            krope_all = cache.krope.at[0, wslot].set(
+                k_rope[0].astype(cache.krope.dtype), mode="drop"
+            )
+            q_pos = jnp.broadcast_to(qpos[None, :], (B, S))
+        else:
+            pos_v = jnp.broadcast_to(jnp.atleast_1d(cur_pos), (B,)).astype(jnp.int32)
+            rows = jnp.arange(B)
+            ckv_all = cache.ckv.at[rows, pos_v].set(ckv[:, 0].astype(cache.ckv.dtype))
+            krope_all = cache.krope.at[rows, pos_v].set(k_rope[:, 0].astype(cache.krope.dtype))
+            q_pos = pos_v[:, None]
         ckv_all = constrain(ckv_all, ("batch", "kv_seq", "kv_lora"), sctx)
         new_cache = MLACache(ckv_all, krope_all)
         # Absorbed decode: score against the compressed cache directly.
         q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["wk_b"].astype(dt), preferred_element_type=F32).astype(dt)
         s = jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(dt), preferred_element_type=F32)
         s = s + jnp.einsum("bshe,bte->bhst", q_rope, krope_all.astype(dt), preferred_element_type=F32)
-        valid = jnp.arange(T)[None, :] <= pos_v[:, None]  # (B, T)
-        s = jnp.where(valid[:, None, None, :], s * scale, NEG_INF)
+        valid = jnp.arange(T)[None, None, :] <= q_pos[:, :, None]  # (B, S, T)
+        s = jnp.where(valid[:, None], s * scale, NEG_INF)
         pr = jax.nn.softmax(s, axis=-1)
         ctx_c = jnp.einsum("bhst,btr->bshr", pr.astype(dt), ckv_all.astype(dt), preferred_element_type=F32).astype(dt)
         o = jnp.einsum("bshr,rhe->bshe", ctx_c, p["wv_b"].astype(dt), preferred_element_type=F32).astype(dt)

@@ -201,6 +201,7 @@ def apply_block(
     sctx: ShardingCtx,
     enc_out: jax.Array | None = None,
     page_table: jax.Array | None = None,
+    chunk_len: jax.Array | None = None,
 ) -> tuple[BlockIO, dict[str, Any] | None]:
     x, aux = io
     st = _state_to_struct(kind, cfg, state_raw)
@@ -215,7 +216,7 @@ def apply_block(
         if cfg.attn_kind == "mla" and kind != "local_attn":
             a, new_st = attn_mod.mla_attention(
                 p["attn"], cfg, h, mode=mode, positions=positions,
-                cache=st, cur_pos=cur_pos, sctx=sctx,
+                cache=st, cur_pos=cur_pos, chunk_len=chunk_len, sctx=sctx,
             )
         else:
             a, new_st = attn_mod.gqa_attention(
@@ -223,7 +224,7 @@ def apply_block(
                 mask_kind=mask_kind, window=window,
                 prefix_len=cfg.prefix_len if cfg.prefix_lm else 0,
                 cache=st, cur_pos=cur_pos, page_table=page_table,
-                sctx=sctx,
+                chunk_len=chunk_len, sctx=sctx,
             )
         x = x + a
         h = rmsnorm(p["ln2"], x, eps)
@@ -236,22 +237,33 @@ def apply_block(
 
     elif kind == "rglru":
         h = rmsnorm(p["ln1"], x, eps)
-        r, new_st = rec_mod.rglru_block(p["rec"], cfg, h, mode=mode, state=st, sctx=sctx)
+        r, new_st = rec_mod.rglru_block(
+            p["rec"], cfg, h, mode=mode, state=st, chunk_len=chunk_len, sctx=sctx
+        )
         x = x + r
         h = rmsnorm(p["ln2"], x, eps)
         x = x + mlp(p["mlp"], cfg, h, sctx)
 
     elif kind == "mlstm":
         h = rmsnorm(p["ln"], x, eps)
-        r, new_st = rec_mod.mlstm_block(p["core"], cfg, h, mode=mode, state=st, sctx=sctx)
+        r, new_st = rec_mod.mlstm_block(
+            p["core"], cfg, h, mode=mode, state=st, chunk_len=chunk_len, sctx=sctx
+        )
         x = x + r
 
     elif kind == "slstm":
         h = rmsnorm(p["ln"], x, eps)
-        r, new_st = rec_mod.slstm_block(p["core"], cfg, h, mode=mode, state=st, sctx=sctx)
+        r, new_st = rec_mod.slstm_block(
+            p["core"], cfg, h, mode=mode, state=st, chunk_len=chunk_len, sctx=sctx
+        )
         x = x + r
 
     elif kind == "cross_attn_mlp":
+        if mode == "chunk":
+            raise NotImplementedError(
+                "chunked prefill does not support enc-dec blocks; the "
+                "scheduler streams such requests through whole-prompt prefill"
+            )
         h = rmsnorm(p["ln1"], x, eps)
         a, new_self = attn_mod.gqa_attention(
             p["attn"], cfg, h, mode=mode, positions=positions, mask_kind="causal",
@@ -317,6 +329,42 @@ def stack_state_schema(
     return sch
 
 
+# Per-kind overrides turning a zeroed state into the *empty-recurrence*
+# state: the log-space stabilisers must start at their identity values or a
+# chunked prefill resuming from a freshly reset slot diverges from a
+# from-scratch prefill (which initialises these internally).
+_FRESH_STATE_OVERRIDES: dict[str, dict[str, float]] = {
+    "mlstm": {"m": -1e30},
+    "slstm": {"n": 1e-6, "m": -1e30},
+}
+
+
+def fresh_stack_states(cfg: ModelConfig, states: dict[str, Any]) -> dict[str, Any]:
+    """Rewrite a zero-initialised stack state pytree into the state a
+    chunked prefill starts from at position 0 (see overrides above).
+    Works on both per-slot (batch-1) and stacked-group layouts."""
+
+    def patch(kind: str, st):
+        ov = _FRESH_STATE_OVERRIDES.get(kind)
+        if st is None or ov is None:
+            return st
+        return {
+            k: (jnp.full_like(v, ov[k]) if k in ov else v) for k, v in st.items()
+        }
+
+    out: dict[str, Any] = {}
+    if "first" in states:
+        out["first"] = {
+            f"b{i}": patch(kind, states["first"][f"b{i}"])
+            for i, kind in enumerate(cfg.first_blocks)
+        }
+    out["groups"] = {
+        f"g{i}": patch(kind, states["groups"][f"g{i}"])
+        for i, kind in enumerate(cfg.block_pattern)
+    }
+    return out
+
+
 def _block_paged_caps(cfg: ModelConfig, kind: str, s_max: int) -> dict[str, Any] | None:
     """Per-leaf logical token capacity: >0 for pool leaves, 0 for per-slot."""
     if kind in paged_kv_kinds(cfg):
@@ -357,11 +405,12 @@ def apply_stack(
     sctx: ShardingCtx,
     enc_out: jax.Array | None = None,
     page_table: jax.Array | None = None,
+    chunk_len: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, dict[str, Any] | None]:
     """Run the whole layer stack. Returns (x, aux_loss, new_states)."""
     io = BlockIO(x=x, aux=jnp.zeros((), F32))
     new_states: dict[str, Any] = {"first": {}, "groups": {}}
-    want_states = mode in ("prefill", "decode")
+    want_states = mode in ("prefill", "decode", "chunk")
 
     # -- unscanned prefix blocks ------------------------------------------
     for i, kind in enumerate(cfg.first_blocks):
@@ -371,6 +420,7 @@ def apply_stack(
             params["first"][key], cfg, kind, io, mode=mode, positions=positions,
             cur_pos=cur_pos, state_raw=st,
             mask_kind=mask_kind, sctx=sctx, enc_out=enc_out, page_table=page_table,
+            chunk_len=chunk_len,
         )
         if want_states:
             new_states["first"][key] = new_st
@@ -386,7 +436,7 @@ def apply_stack(
                 g_params[key], cfg, kind, carry, mode=mode, positions=positions,
                 cur_pos=cur_pos, state_raw=st,
                 mask_kind=mask_kind, sctx=sctx, enc_out=enc_out,
-                page_table=page_table,
+                page_table=page_table, chunk_len=chunk_len,
             )
             new_group_states[key] = new_st
         return carry, (new_group_states if want_states else None)

@@ -170,6 +170,49 @@ def prefill(
     return logits, states
 
 
+def chunk_step(
+    params: dict[str, Any],
+    cfg: ModelConfig,
+    states: dict[str, Any],
+    tokens: jax.Array,  # (1, C) int32: one slot's prompt chunk (maybe padded)
+    chunk_len: jax.Array,  # scalar int32: number of real tokens (<= C)
+    sctx: ShardingCtx,
+) -> tuple[jax.Array, dict[str, Any]]:
+    """Streamed (chunked) prefill for one slot.
+
+    Runs ``tokens`` at absolute positions ``pos .. pos + C - 1`` against the
+    slot's existing caches — attention layers read the already-cached prefix
+    plus the chunk and write the chunk's K/V in place (through the page
+    table when ``states`` carries one); recurrent layers advance their
+    carried state. Positions beyond ``chunk_len`` are bucket padding: their
+    cache writes are dropped/trash-routed and recurrence updates masked, so
+    every true length in a chunk bucket shares one compiled program. Returns
+    the logits at position ``chunk_len - 1`` (the sampling point when the
+    chunk completes the prompt) and the updated states with
+    ``pos + chunk_len`` tokens cached."""
+    cur_pos = jnp.asarray(states["pos"])  # scalar: tokens already cached
+    page_table = states.get("page_table")
+    x = embed_tokens(params["embed"], cfg, tokens, sctx)
+    x = x * jnp.asarray(cfg.d_model**0.5, cdt(cfg))
+    C = tokens.shape[1]
+    positions = cur_pos + jnp.arange(C, dtype=jnp.int32)
+
+    x, _, new_states = blk.apply_stack(
+        params["stack"], cfg, x, mode="chunk", positions=positions,
+        cur_pos=cur_pos, states=states["layers"], mask_kind=_mask_kind(cfg),
+        sctx=sctx, page_table=page_table, chunk_len=chunk_len,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, chunk_len - 1, 1, axis=1)
+    logits = logits_for_positions(
+        x_last, unembed_weight(params["embed"], cfg), cfg, sctx
+    )
+    out = {"layers": new_states, "pos": cur_pos + chunk_len}
+    if page_table is not None:
+        out["page_table"] = page_table
+    return logits, out
+
+
 def decode_step(
     params: dict[str, Any],
     cfg: ModelConfig,

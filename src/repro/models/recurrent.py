@@ -89,6 +89,7 @@ def rglru_block(
     *,
     mode: str,
     state: RGLRUState | None = None,
+    chunk_len: jax.Array | None = None,  # valid tokens (chunk mode)
     sctx: ShardingCtx,
 ) -> tuple[jax.Array, RGLRUState | None]:
     dt = cdt(cfg)
@@ -97,6 +98,7 @@ def rglru_block(
         jnp.einsum("bsd,dr->bsr", x, p["w_in_gate"].astype(dt), preferred_element_type=F32)
     ).astype(dt)
     u = constrain(u, ("batch", "seq", "rnn"), sctx)
+    K = cfg.conv_width
 
     new_state: RGLRUState | None = None
     if mode == "decode":
@@ -106,13 +108,27 @@ def rglru_block(
         h = a * state.h + gated  # (B, dr) fp32
         new_state = RGLRUState(h=h, conv=conv_state)
         h = h[:, None, :]
+    elif mode == "chunk":
+        # Chunked prefill: carry the recurrence across chunks. The conv sees
+        # the previous chunk's tap state as left context; the scan starts
+        # from the carried h. Padded tail positions run but the new state is
+        # read at chunk_len - 1, so they influence nothing downstream.
+        assert state is not None and chunk_len is not None
+        u_ext = jnp.concatenate([state.conv.astype(u.dtype), u], axis=1)
+        u_c = causal_conv1d_train(u_ext, p["conv_w"], p["conv_b"])[:, K - 1 :]
+        a, gated = _rglru_coeffs(p, u_c)
+        gated = gated.at[:, 0].add(a[:, 0] * state.h)
+        h = rglru_scan(a, gated)  # (B, S, dr) fp32
+        h_last = jax.lax.dynamic_slice_in_dim(h, chunk_len - 1, 1, axis=1)[:, 0]
+        conv_new = jax.lax.dynamic_slice_in_dim(u_ext, chunk_len, K - 1, axis=1)
+        new_state = RGLRUState(h=h_last, conv=conv_new.astype(F32))
     else:
         u_c = causal_conv1d_train(u, p["conv_w"], p["conv_b"])
         a, gated = _rglru_coeffs(p, u_c)
         h = rglru_scan(a, gated)  # (B, S, dr) fp32
         if mode == "prefill":
             new_state = RGLRUState(
-                h=h[:, -1], conv=u[:, -(cfg.conv_width - 1) :].astype(F32)
+                h=h[:, -1], conv=u[:, -(K - 1) :].astype(F32)
             )
     y = h.astype(dt) * g
     out = jnp.einsum("bsr,rd->bsd", y, p["w_out"].astype(dt), preferred_element_type=F32)
@@ -317,6 +333,7 @@ def mlstm_block(
     *,
     mode: str,
     state: MLSTMState | None = None,
+    chunk_len: jax.Array | None = None,  # valid tokens (chunk mode)
     sctx: ShardingCtx,
 ) -> tuple[jax.Array, MLSTMState | None]:
     dt = cdt(cfg)
@@ -329,11 +346,22 @@ def mlstm_block(
     z = jnp.einsum("bsd,dp->bsp", x, p["w_up_gate"].astype(dt), preferred_element_type=F32).astype(dt)
     u = constrain(u, ("batch", "seq", None), sctx)
 
+    K = cfg.conv_width
     new_conv = None
+    u_ext = None
     if mode == "decode":
         assert state is not None
         uc_t, new_conv = causal_conv1d_step(u[:, 0], state.conv, p["conv_w"], p["conv_b"])
         uc = jax.nn.silu(uc_t.astype(F32)).astype(dt)[:, None, :]
+    elif mode == "chunk":
+        # Chunked prefill: the previous chunk's conv taps are the left
+        # context; gate masking below makes padded tail steps exact
+        # identity updates of the recurrence state.
+        assert state is not None and chunk_len is not None
+        u_ext = jnp.concatenate([state.conv.astype(u.dtype), u], axis=1)
+        uc = jax.nn.silu(
+            causal_conv1d_train(u_ext, p["conv_w"], p["conv_b"])[:, K - 1 :].astype(F32)
+        ).astype(dt)
     else:
         uc = jax.nn.silu(
             causal_conv1d_train(u, p["conv_w"], p["conv_b"]).astype(F32)
@@ -354,11 +382,24 @@ def mlstm_block(
         )
         h = h[:, None]
         new_state = MLSTMState(C=C, n=n, m=m, conv=new_conv)
+    elif mode == "chunk":
+        # Padded tail steps become exact no-ops: forget gate saturates to
+        # log f = 0 and the input gate to weight 0 (both exact in fp32), so
+        # the chunk-end state equals the state at chunk_len - 1.
+        valid = (jnp.arange(S) < chunk_len)[None, :, None]
+        i_pre = jnp.where(valid, i_pre, -1e30)
+        f_pre = jnp.where(valid, f_pre, 1e9)
+        h, (C, n, m) = mlstm_chunked(
+            q, k, v, i_pre, f_pre,
+            state=(state.C, state.n, state.m), chunk=64 if S >= 64 else S,
+        )
+        conv_new = jax.lax.dynamic_slice_in_dim(u_ext, chunk_len, K - 1, axis=1)
+        new_state = MLSTMState(C=C, n=n, m=m, conv=conv_new.astype(F32))
     else:
         h, (C, n, m) = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=64 if S >= 64 else S)
         if mode == "prefill":
             new_state = MLSTMState(
-                C=C, n=n, m=m, conv=u[:, -(cfg.conv_width - 1) :].astype(F32)
+                C=C, n=n, m=m, conv=u[:, -(K - 1) :].astype(F32)
             )
 
     h = groupnorm_heads(h).reshape(B, -1, dp).astype(dt)
@@ -413,10 +454,12 @@ def slstm_scan(
     gates: jax.Array,  # (B, S, 4, nh, dh) pre-activations from W x + b
     r: jax.Array,  # (nh, dh, 4, dh) recurrent weights
     state: SLSTMState,
+    valid: jax.Array | None = None,  # (S,) True for real tokens (chunk mode)
 ) -> tuple[jax.Array, SLSTMState]:
     B, S = gates.shape[:2]
 
-    def step(carry: SLSTMState, g_t: jax.Array):
+    def step(carry: SLSTMState, inp):
+        g_t, valid_t = inp
         rec = jnp.einsum("bhd,hdge->bghe", carry.h, r.astype(F32))  # (B,4,nh,dh)
         z_pre, i_pre, f_pre, o_pre = [
             g_t[:, j].astype(F32) + rec[:, j] for j in range(4)
@@ -430,9 +473,15 @@ def slstm_scan(
         c = fp * carry.c + ip * z
         n = jnp.maximum(fp * carry.n + ip, 1e-6)
         h = o * (c / n)
-        return SLSTMState(c=c, n=n, h=h, m=m_new), h
+        new = SLSTMState(c=c, n=n, h=h, m=m_new)
+        # Padded chunk-tail steps must not touch the recurrence (h feeds
+        # back through the recurrent weights, so gate saturation alone
+        # would not keep it frozen).
+        new = jax.tree.map(lambda a, b: jnp.where(valid_t, a, b), new, carry)
+        return new, h
 
-    final, hs = jax.lax.scan(step, state, gates.swapaxes(0, 1))
+    v = jnp.ones((S,), bool) if valid is None else valid
+    final, hs = jax.lax.scan(step, state, (gates.swapaxes(0, 1), v))
     return hs.swapaxes(0, 1), final  # (B, S, nh, dh)
 
 
@@ -480,6 +529,7 @@ def slstm_block(
     *,
     mode: str,
     state: SLSTMState | None = None,
+    chunk_len: jax.Array | None = None,  # valid tokens (chunk mode)
     sctx: ShardingCtx,
 ) -> tuple[jax.Array, SLSTMState | None]:
     dt = cdt(cfg)
@@ -497,15 +547,24 @@ def slstm_block(
             h=jnp.zeros((B, nh, dh), F32),
             m=jnp.full((B, nh, dh), -1e30, F32),
         )
-    scan_fn = _shard_map_batched(slstm_scan, sctx, B)
-    hs, final = scan_fn(gates.astype(F32), p["r_gates"].astype(F32), state)
+    if mode == "chunk":
+        # Chunk serving is per-slot (B == 1): run the recurrence directly
+        # from the carried state, masking padded tail steps.
+        assert chunk_len is not None
+        hs, final = slstm_scan(
+            gates.astype(F32), p["r_gates"].astype(F32), state,
+            valid=jnp.arange(S) < chunk_len,
+        )
+    else:
+        scan_fn = _shard_map_batched(slstm_scan, sctx, B)
+        hs, final = scan_fn(gates.astype(F32), p["r_gates"].astype(F32), state)
     h = groupnorm_heads(hs).reshape(B, S, d).astype(dt)
     # Post-recurrence gated FFN (proj factor 4/3), part of the sLSTM block.
     g = jnp.einsum("bsd,df->bsf", h, p["ffn_gate"].astype(dt), preferred_element_type=F32)
     u = jnp.einsum("bsd,df->bsf", h, p["ffn_up"].astype(dt), preferred_element_type=F32)
     y = (jax.nn.gelu(g) * u).astype(dt)
     out = jnp.einsum("bsf,fd->bsd", y, p["ffn_down"].astype(dt), preferred_element_type=F32)
-    new_state = final if mode in ("prefill", "decode") else None
+    new_state = final if mode in ("prefill", "decode", "chunk") else None
     return constrain(out.astype(dt), ("batch", "seq", "embed_act"), sctx), new_state
 
 

@@ -120,6 +120,59 @@ def insert_slot(full_layers: Any, slot_layers: Any, slot: jax.Array | int) -> An
     )
 
 
+def extract_slot_leaf(
+    full: jax.Array, template: jax.Array, slot: jax.Array | int
+) -> jax.Array:
+    """Slice one batch row out of a batched serving leaf — the inverse of
+    :func:`insert_slot_leaf`. ``template`` is a batch-1 leaf of the target
+    shape; the batch axis is located per-leaf by shape, so scan-stacked
+    group states need no special casing."""
+    f, t = jnp.asarray(full), jnp.asarray(template)
+    if f.shape == t.shape:  # n_slots == 1
+        return f
+    if f.ndim != t.ndim:
+        raise ValueError(f"cannot extract slot state {f.shape} -> {t.shape}")
+    diff = [i for i in range(f.ndim) if f.shape[i] != t.shape[i]]
+    if len(diff) != 1 or t.shape[diff[0]] != 1:
+        raise ValueError(f"cannot extract slot state {f.shape} -> {t.shape}")
+    start = [0] * f.ndim
+    start[diff[0]] = slot
+    return jax.lax.dynamic_slice(f, tuple(start), t.shape)
+
+
+def extract_slot(full_layers: Any, template_layers: Any, slot: jax.Array | int) -> Any:
+    """Extract a batch-1 state pytree at batch index ``slot`` (traced OK)."""
+    return jax.tree.map(
+        lambda f, t: extract_slot_leaf(f, t, slot), full_layers, template_layers
+    )
+
+
+def gather_pages_leaf(pool: jax.Array, page_ids: jax.Array) -> jax.Array:
+    """Snapshot one slot's logical span out of a shared page pool:
+    ``(max_pages, page, ...)`` in logical order (trash-backed tail entries
+    snapshot trash garbage — harmless, they are restored to trash-padded
+    table rows whose reads are positionally masked). Handles an optional
+    leading scan-stacked layer axis."""
+    pool = jnp.asarray(pool)
+    if pool.ndim == 5:  # (L, P+1, page, kv, hd) stacked groups
+        return jax.vmap(lambda pl_: gather_pages_leaf(pl_, page_ids))(pool)
+    return pool[page_ids]
+
+
+def scatter_pages_leaf(
+    pool: jax.Array, snapshot: jax.Array, page_ids: jax.Array
+) -> jax.Array:
+    """Write a :func:`gather_pages_leaf` snapshot back at (new) physical page
+    ids — the swap-in counterpart. Entries of ``page_ids`` beyond the pages
+    the slot holds must point at the trash page."""
+    pool = jnp.asarray(pool)
+    if pool.ndim == 5:
+        return jax.vmap(lambda pl_, s_: scatter_pages_leaf(pl_, s_, page_ids))(
+            pool, snapshot
+        )
+    return pool.at[page_ids].set(snapshot.astype(pool.dtype))
+
+
 def graft_pages_leaf(
     pool: jax.Array,  # (P+1, page, kv, hd) or (L, P+1, page, kv, hd) stacked
     src: jax.Array,  # (1, S, kv, hd) or (L, 1, S, kv, hd) prefill cache

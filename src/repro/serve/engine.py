@@ -32,11 +32,16 @@ class ServeConfig:
     temperature: float = 0.0  # 0 => greedy
     stop_token: int = -1  # -1 => never stop early
     seed: int = 0
-    # Scheduler pass-through: paged KV pool + bucketed prefill (the static
-    # reference path ignores these — it always runs contiguous rows).
+    # Scheduler pass-through: paged KV pool + bucketed prefill + unified
+    # token-budget step (the static reference path ignores these — it
+    # always runs contiguous rows with whole-prompt prefill).
     paged: bool = True
     page_size: int = 16
     prefill_buckets: bool = True
+    n_pages: int | None = None
+    chunk_budget: int | None = None  # None -> whole-prompt prefill
+    min_chunk: int = 16
+    preemption: str = "off"  # "off" | "swap" | "recompute"
 
 
 @dataclass
@@ -74,7 +79,11 @@ class Engine:
                     n_slots=n_slots, cache_len=self.serve.cache_len,
                     seed=self.serve.seed, paged=self.serve.paged,
                     page_size=self.serve.page_size,
+                    n_pages=self.serve.n_pages,
                     prefill_buckets=self.serve.prefill_buckets,
+                    chunk_budget=self.serve.chunk_budget,
+                    min_chunk=self.serve.min_chunk,
+                    preemption=self.serve.preemption,
                 ),
             )
         return self._schedulers[n_slots]

@@ -161,6 +161,28 @@ class PagePool:
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return new
 
+    def extend_to(self, slot: int, n_total: int) -> bool:
+        """Raise ``slot``'s reservation to ``n_total`` pages if the pool can
+        back it; returns False (reservation unchanged) on OOM.
+
+        This is the *reservation-free admission* primitive: instead of
+        reserving a request's worst case up front, the scheduler reserves
+        pages incrementally — per prefill chunk and per decode page-boundary
+        crossing — and reacts to a False return by preempting a victim
+        (swap/recompute) or deferring. ``reserve(slot, 0)`` registers the
+        slot first.
+        """
+        cur = self._reserved.get(slot)
+        if cur is None:
+            raise ValueError(f"slot {slot} holds no reservation to extend")
+        if n_total <= cur:
+            return True
+        if n_total - cur > self.available():
+            return False
+        self._reserved[slot] = n_total
+        self.peak_reserved = max(self.peak_reserved, self.reserved)
+        return True
+
     def reset_peaks(self) -> None:
         """Restart peak tracking (e.g. after a warmup phase) from the
         current occupancy."""

@@ -16,7 +16,9 @@ import numpy as np
 
 class RequestStatus(enum.Enum):
     QUEUED = "queued"  # in the admission queue, no slot yet
+    PREFILLING = "prefilling"  # holds a slot, prompt streaming in by chunks
     ACTIVE = "active"  # prefilled into a slot, decoding
+    PREEMPTED = "preempted"  # pages reclaimed mid-decode, awaiting resume
     FINISHED = "finished"  # retired (stop token or length)
 
 
@@ -53,11 +55,18 @@ class RequestState:
     finish_reason: str | None = None  # "stop" | "length"
     prefill_logits: np.ndarray | None = None  # (1, 1, V) last-position logits
     decode_steps: int = 0  # decode iterations this request rode in
+    # Chunked-prefill cursor: prompt tokens already streamed into the cache
+    # (counts teacher-forced replay tokens after a recompute resume).
+    chunk_pos: int = 0
+    replay_tokens: np.ndarray | None = None  # prompt ++ generated, for resume
+    preemptions: int = 0
+    swap: Any = None  # host-side page/state snapshot while PREEMPTED (swap)
     # Wall-clock stamps (time.perf_counter seconds).
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_first_token: float = 0.0
     t_finish: float = 0.0
+    t_tokens: list[float] = field(default_factory=list)  # per-token stamps
 
     @property
     def done(self) -> bool:
@@ -77,3 +86,11 @@ class RequestState:
     def decode_tokens_per_s(self) -> float:
         dt = self.t_finish - self.t_admit
         return len(self.tokens) / dt if dt > 0 else float("inf")
+
+    def inter_token_s(self) -> list[float]:
+        """Gaps between consecutive token emissions (the latency a streaming
+        client feels mid-generation; long un-chunked prefills of *other*
+        requests show up here as spikes)."""
+        return [
+            b - a for a, b in zip(self.t_tokens, self.t_tokens[1:])
+        ]

@@ -9,40 +9,39 @@ footprint is its live tokens rounded up to pages, not a worst-case
 caches keep their per-slot layout behind the same interface; models with
 no paged layer kind run exactly the PR-1 contiguous path.
 
-Requests flow through an admission queue; each admitted request gets a
-free slot **and** a page reservation:
+**Unified token-budget step.** With ``chunk_budget`` set, each ``step()``
+composes one bounded batch of work: every decoding slot contributes one
+token, plus a prefill *chunk* of the oldest prompt still streaming in
+(``RequestStatus.PREFILLING``). Long prompts therefore enter the paged
+KV over several steps — decode cadence never stalls behind a 4k-token
+prefill. Chunk sizes are drawn from a fixed power-of-two bucket set
+(``min_chunk`` .. ``pow2_floor(chunk_budget)``), deliberately independent
+of the live decode count so the loaded system never meets a chunk shape
+the idle warmup didn't compile; per-step work is bounded by
+``chunk_budget + n_slots`` tokens. With ``chunk_budget=None`` the PR-1/2
+lifecycle is unchanged: whole-prompt prefill + graft at admission.
 
-  1. **admit** — admission checks pool capacity for the request's
-     worst-case page count (prompt + max_new_tokens, ring-folded). If the
-     pool can't cover it the queue defers (OOM backpressure: the request
-     waits, live pages are never touched). Otherwise the prompt's pages
-     are allocated and the slot's page-table row is written.
-  2. **prefill** — the prompt runs through the jitted prefill. With
-     ``prefill_buckets`` (attention-only models) prompts are right-padded
-     to power-of-two buckets so prefill/admit compile once per bucket,
-     not once per distinct length; the true last-token logits are read at
-     a traced ``logit_pos`` and padded cache garbage is handled by
-     positional validity masking.
-  3. **graft** — prompt-length caches are rewritten page-by-page into the
-     pool (dense left-aligned, windowed ring-folded) and per-slot states
-     are inserted at the slot's batch row; one compiled program per
-     prefill *shape*, slot index and true prompt length traced.
-  4. **decode** — the slot rides the shared ``(n_slots, 1)`` decode step;
-     crossing a page boundary allocates the next page from its
-     reservation (never fails) and updates the table row.
-  5. **retire** — on stop-token or length the slot frees its pages back
-     to the pool, its table row is pointed at the trash page, and the
-     slot is backfilled from the queue at the next step.
+**Page-aware preemption.** ``preemption="off"`` keeps worst-case page
+reservations at admission (prompt + max_new_tokens; OOM backpressure
+defers the queue). ``"swap"`` / ``"recompute"`` admit **reservation-free**:
+pages are reserved incrementally per chunk and per decode page-boundary
+crossing, and when the pool runs dry the LRU decoding slot is preempted —
+its pages (and per-slot states) snapshot to host memory (``swap``) or are
+dropped and re-derived by re-streaming prompt + generated tokens
+(``recompute``). Preempted requests resume ahead of fresh admissions and
+continue token-identically (greedy) from where they left off.
 
 The decode hot path is shape-stable by construction: tokens ``(n_slots,
 1)``, active mask ``(n_slots,)``, positions ``(n_slots,)``, page table
-``(n_slots, max_pages)`` int32 — joins, leaves, and page growth only
-change array *values*, so the step never recompiles after its single
-warmup trace (``decode_traces`` counts traces for tests/monitoring;
-``prefill_traces``/``admit_traces`` count per-bucket compiles). Inactive
-slots keep decoding garbage with a frozen position; their writes land in
-the trash page (paged) or their own about-to-be-overwritten row
-(contiguous), so no live state is ever visible through the masks.
+``(n_slots, max_pages)`` int32 — joins, leaves, chunk streaming, page
+growth, and preemption only change array *values*, so the step never
+recompiles after its single warmup trace (``decode_traces``;
+``prefill_traces``/``admit_traces`` count per-bucket compiles of the
+legacy path, ``chunk_traces`` per chunk bucket, ``swap_traces`` the
+swap-out/in pair). Inactive slots keep decoding garbage with a frozen
+position; their writes land in the trash page (paged) or their own
+about-to-be-overwritten row (contiguous), so no live state is ever
+visible through the masks.
 """
 from __future__ import annotations
 
@@ -61,17 +60,38 @@ from repro.models import blocks as blk
 from repro.models import lm
 from repro.serve.cache import (
     _graft_leaf,
+    extract_slot_leaf,
+    gather_pages_leaf,
     graft_pages_leaf,
     graft_states,
     insert_slot,
     insert_slot_leaf,
+    scatter_pages_leaf,
 )
 from repro.serve.pages import PageLayout, PagePool, cdiv, model_page_span
 from repro.serve.request import Request, RequestState, RequestStatus
-from repro.serve.step import init_decode_state, init_paged_decode_state
+from repro.serve.step import (
+    fresh_slot_layers,
+    init_decode_state,
+    init_paged_decode_state,
+)
 from repro.sharding.rules import ShardingCtx
 
 _RECURRENT_KINDS = {"rglru", "mlstm", "slstm"}
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def _pow2_ceil(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 @dataclass
@@ -91,6 +111,16 @@ class SchedulerConfig:
     # the pad tokens).
     prefill_buckets: bool = True
     min_bucket: int = 8
+    # Unified token-budget step: bounds per-step work at one token per
+    # decoding slot plus a prefill chunk of at most pow2_floor(chunk_budget)
+    # tokens (power-of-two buckets >= min_chunk). None -> whole-prompt
+    # prefill at admission.
+    chunk_budget: int | None = None
+    min_chunk: int = 16
+    # Page-aware preemption (requires chunk_budget): "off" reserves the
+    # worst case at admission; "swap" / "recompute" admit reservation-free
+    # and reclaim the LRU decoding slot's pages on OOM.
+    preemption: str = "off"
 
 
 class Scheduler:
@@ -102,6 +132,21 @@ class Scheduler:
         self.sctx = sctx
         self.sched = sched
         n = sched.n_slots
+        if sched.preemption not in ("off", "swap", "recompute"):
+            raise ValueError(f"unknown preemption policy {sched.preemption!r}")
+        if sched.preemption != "off" and sched.chunk_budget is None:
+            raise ValueError(
+                "preemption requires the unified token-budget step "
+                "(set chunk_budget)"
+            )
+        self._chunked = sched.chunk_budget is not None
+        if self._chunked and sched.chunk_budget < sched.min_chunk:
+            raise ValueError(
+                f"chunk_budget {sched.chunk_budget} < min_chunk {sched.min_chunk}"
+            )
+        # Chunked streaming handles token-only requests; modality prefixes
+        # and enc-dec cross caches go through whole-prompt prefill.
+        self._stream_capable = self._chunked and not cfg.enc_dec and not cfg.prefix_len
 
         span = model_page_span(cfg, sched.cache_len) if sched.paged else 0
         self._paged = span > 0
@@ -127,11 +172,13 @@ class Scheduler:
         self._tokens = np.zeros((n, 1), np.int32)  # next input token per slot
         self._temps = np.zeros((n,), np.float32)
         self._active_mask = np.zeros((n,), bool)
+        self._pos_host = np.zeros((n,), np.int64)  # tokens cached per slot
 
         kinds = set(cfg.block_pattern) | set(cfg.first_blocks)
         self._bucketed = sched.prefill_buckets and not (kinds & _RECURRENT_KINDS)
 
         self._queue: deque[RequestState] = deque()
+        self._preempted: deque[RequestState] = deque()  # resume before admits
         self._active: dict[int, RequestState] = {}  # slot -> request
         self._free_slots: list[int] = list(range(n))
         heapq.heapify(self._free_slots)
@@ -142,20 +189,60 @@ class Scheduler:
         self.decode_traces = 0  # jit trace count of the decode hot path
         self.prefill_traces = 0  # one per prompt bucket
         self.admit_traces = 0  # one per prompt bucket
+        self.chunk_traces = 0  # one per chunk bucket
+        self.swap_traces = 0  # swap-out + swap-in programs
         self.total_decode_steps = 0
+        self.total_chunk_steps = 0
         self.deferred_admissions = 0  # pool-backpressure events
+        self.preemptions_total = 0
         self.finished_total = 0  # cumulative, survives keep_finished eviction
         self.generated_tokens_total = 0
         self.last_decode_logits: jax.Array | None = None
+
+        # Per-leaf logical capacities: >0 marks a shared-pool KV leaf (no
+        # batch axis; passed through untouched by per-slot surgery).
+        caps = blk.stack_paged_caps(cfg, sched.cache_len) if self._paged else None
+
+        def _slot_surgery_trees():
+            template = init_decode_state(self.cfg, 1, self.sched.cache_len)["layers"]
+            c = caps if caps is not None else jax.tree.map(lambda _: 0, template)
+            return c, template
+
+        def _freeze_inactive(active, new_layers, old_layers):
+            # Inactive slots (free, or PREFILLING between chunks) must keep
+            # their per-slot states verbatim across other slots' decode
+            # steps: positional KV survives by write-before-read, but a
+            # recurrence would absorb the masked slot's garbage token.
+            # Shared-pool leaves have no batch row to freeze — their
+            # garbage writes stay behind the trash page / the positions the
+            # next chunk overwrites.
+            c, template = _slot_surgery_trees()
+
+            def leaf(cap, new, old, t):
+                if cap:
+                    return new
+                nd, td = jnp.asarray(new), jnp.asarray(t)
+                if nd.shape == td.shape:  # n_slots == 1
+                    return jnp.where(active[0], nd, old)
+                ax = [i for i in range(nd.ndim) if nd.shape[i] != td.shape[i]][0]
+                shape = [1] * nd.ndim
+                shape[ax] = nd.shape[ax]
+                return jnp.where(active.reshape(shape), nd, old)
+
+            return jax.tree.map(leaf, c, new_layers, old_layers, template)
 
         def _decode_fn(params, states, token, active):
             # Python body runs only when jit (re)traces: counts compilations.
             self.decode_traces += 1
             logits, new_states = lm.decode_step(params, self.cfg, states, token, self.sctx)
-            # Freeze retired slots in place; their writes stay confined to the
-            # trash page (paged) or one cache row admission will overwrite.
+            # Freeze inactive slots in place (position and per-slot states).
             new_pos = jnp.where(active, new_states["pos"], states["pos"])
-            out = {"layers": new_states["layers"], "pos": new_pos}
+            out = {
+                "layers": _freeze_inactive(
+                    active, new_states["layers"], states["layers"]
+                ),
+                "pos": new_pos,
+            }
             if "page_table" in new_states:
                 out["page_table"] = new_states["page_table"]
             return logits, out
@@ -169,7 +256,6 @@ class Scheduler:
         self._prefill = jax.jit(_prefill_fn)
 
         if self._paged:
-            caps = blk.stack_paged_caps(cfg, sched.cache_len)
             page_size = self.pages.page_size
 
             def _admit_fn(layers, pos, prefill_layers, slot, page_ids, prompt_len):
@@ -199,6 +285,84 @@ class Scheduler:
         # prefill *shape* — with bucketing, once per bucket.
         self._admit_jit = jax.jit(_admit_fn)
 
+        # -- unified-step programs (chunk streaming, slot reset, swap) -------
+        def _chunk_body(layers, pos, tokens, slot, start, chunk_len, page_ids):
+            c, template = _slot_surgery_trees()
+            slot_layers = jax.tree.map(
+                lambda cap, full, t: full if cap else extract_slot_leaf(full, t, slot),
+                c, layers, template,
+            )
+            states: dict[str, Any] = {"layers": slot_layers, "pos": start}
+            if page_ids is not None:
+                states["page_table"] = page_ids[None, :]
+            logits, new = lm.chunk_step(
+                self.params, self.cfg, states, tokens, chunk_len, self.sctx
+            )
+            new_layers = jax.tree.map(
+                lambda cap, full, s: s if cap else insert_slot_leaf(full, s, slot),
+                c, layers, new["layers"],
+            )
+            return logits, new_layers, pos.at[slot].set(start + chunk_len)
+
+        if self._paged:
+
+            def _chunk_fn(layers, pos, tokens, slot, start, chunk_len, page_ids):
+                self.chunk_traces += 1
+                return _chunk_body(layers, pos, tokens, slot, start, chunk_len, page_ids)
+
+        else:
+
+            def _chunk_fn(layers, pos, tokens, slot, start, chunk_len):
+                self.chunk_traces += 1
+                return _chunk_body(layers, pos, tokens, slot, start, chunk_len, None)
+
+        self._chunk_jit = jax.jit(_chunk_fn)
+
+        def _reset_fn(layers, pos, slot):
+            # Reset the slot's per-slot leaves to the empty-recurrence state
+            # so a chunked prefill starts from what a from-scratch prefill
+            # would derive. Pool leaves stay: the trash-pointed table row
+            # isolates them.
+            c, _ = _slot_surgery_trees()
+            fresh = fresh_slot_layers(self.cfg, self.sched.cache_len)
+            new_layers = jax.tree.map(
+                lambda cap, full, t: full if cap else insert_slot_leaf(full, t, slot),
+                c, layers, fresh,
+            )
+            return new_layers, pos.at[slot].set(0)
+
+        self._reset_jit = jax.jit(_reset_fn)
+
+        if self._paged:
+
+            def _swap_out_fn(layers, page_ids, slot):
+                self.swap_traces += 1
+                c, template = _slot_surgery_trees()
+                return jax.tree.map(
+                    lambda cap, full, t: (
+                        gather_pages_leaf(full, page_ids)
+                        if cap
+                        else extract_slot_leaf(full, t, slot)
+                    ),
+                    c, layers, template,
+                )
+
+            def _swap_in_fn(layers, pos, snap, page_ids, slot, pos_val):
+                self.swap_traces += 1
+                c, _ = _slot_surgery_trees()
+                new_layers = jax.tree.map(
+                    lambda cap, full, s: (
+                        scatter_pages_leaf(full, s, page_ids)
+                        if cap
+                        else insert_slot_leaf(full, s, slot)
+                    ),
+                    c, layers, snap,
+                )
+                return new_layers, pos.at[slot].set(pos_val)
+
+            self._swap_out_jit = jax.jit(_swap_out_fn)
+            self._swap_in_jit = jax.jit(_swap_in_fn)
+
         def _sample_fn(logits, temps, key):
             lg = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
             greedy = jnp.argmax(lg, axis=-1)
@@ -223,7 +387,7 @@ class Scheduler:
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._queue) + len(self._preempted)
 
     @property
     def num_active(self) -> int:
@@ -233,8 +397,10 @@ class Scheduler:
         rs = self._finished.get(rid)
         if rs is not None:
             return rs
-        in_flight = any(r.rid == rid for r in self._active.values()) or any(
-            r.rid == rid for r in self._queue
+        in_flight = (
+            any(r.rid == rid for r in self._active.values())
+            or any(r.rid == rid for r in self._queue)
+            or any(r.rid == rid for r in self._preempted)
         )
         if in_flight:
             raise KeyError(f"request {rid} is not finished yet")
@@ -251,11 +417,13 @@ class Scheduler:
         for the requests that were in flight at call time, in submission
         order. Results are collected as requests retire, so they survive
         ``keep_finished`` eviction even when one drain outruns the cap."""
-        in_flight = {rs.rid for rs in self._queue} | {
-            rs.rid for rs in self._active.values()
-        }
+        in_flight = (
+            {rs.rid for rs in self._queue}
+            | {rs.rid for rs in self._active.values()}
+            | {rs.rid for rs in self._preempted}
+        )
         results: dict[int, RequestState] = {}
-        while self._queue or self._active:
+        while self._queue or self._active or self._preempted:
             self.step()
             for rid in list(in_flight):
                 rs = self._finished.get(rid)
@@ -266,12 +434,16 @@ class Scheduler:
 
     # -- one scheduling iteration ------------------------------------------
     def step(self) -> bool:
-        """Admit from the queue, then run one decode step over active slots.
-
-        Returns True if a decode step ran."""
+        """Admit/resume from the queues, stream at most one prefill chunk
+        (fixed power-of-two buckets up to the token budget), then run one
+        decode step over the decoding slots. Returns True if any model
+        program ran."""
         self._admit_pending()
-        if not self._active:
-            return False
+        ran = False
+        if self._chunked:
+            ran = self._prefill_chunk_step()
+        if not self._active_mask.any():
+            return ran
         if self._paged:
             self._grow_pages()
             self._states["page_table"] = jnp.asarray(self._pt)
@@ -289,24 +461,212 @@ class Scheduler:
 
         now = time.perf_counter()
         for slot, rs in list(self._active.items()):
+            if rs.status is not RequestStatus.ACTIVE:
+                continue  # still streaming its prompt in
             rs.decode_steps += 1
+            self._pos_host[slot] += 1
             tok = int(cols[slot])
             rs.tokens.append(tok)
+            rs.t_tokens.append(now)
             self._tokens[slot, 0] = tok
             self._maybe_finish(rs, now)
         return True
 
-    # -- internals ----------------------------------------------------------
-    def _grow_pages(self) -> None:
-        """Allocate the page backing the position each active slot writes
-        this step. Reservations guarantee this never fails."""
-        for slot, rs in self._active.items():
-            write_pos = rs.prompt_len + rs.decode_steps
-            need = self.pages.pages_for_len(write_pos + 1)
+    # -- chunked prefill (unified token-budget step) -------------------------
+    def _prefill_chunk_step(self) -> bool:
+        """Stream one prompt chunk for the oldest PREFILLING slot.
+
+        Chunk sizes come from a *fixed* power-of-two bucket set —
+        ``min_chunk`` up to ``pow2_floor(chunk_budget)`` — independent of
+        how many decode rows ride the same step: a load-dependent size
+        would compile fresh chunk shapes exactly when the system is busy
+        (the warmup, run idle, would never have seen them). The decode
+        rows' tokens therefore ride on top of the chunk's; per-step work
+        stays bounded by ``chunk_budget + n_slots``. Returns True if a
+        chunk program ran."""
+        prefilling = sorted(
+            (rs for rs in self._active.values() if rs.status is RequestStatus.PREFILLING),
+            key=lambda r: r.rid,
+        )
+        if not prefilling:
+            return False
+        sc = self.sched
+        rs = prefilling[0]
+        slot = rs.slot
+        src = (
+            rs.replay_tokens
+            if rs.replay_tokens is not None
+            else np.asarray(rs.request.prompt)
+        )
+        remaining = len(src) - rs.chunk_pos
+        max_b = _pow2_floor(sc.chunk_budget)
+        bucket = min(max(_pow2_ceil(min(remaining, max_b)), sc.min_chunk), max_b)
+        n_real = min(bucket, remaining)
+        start = rs.chunk_pos
+
+        page_ids = None
+        if self._paged:
+            need = self.pages.pages_for_len(start + n_real)
+            if not self._ensure_pages(slot, need):
+                self.deferred_admissions += 1
+                return False
             held = len(self.pool.allocated(slot))
             if need > held:
                 self._pt[slot, held:need] = self.pool.grow_to(slot, need)
+            # The chunk only attends to pages covering [0, start + n_real);
+            # pass a power-of-two page-count bucket of the table row so the
+            # gather/kernel cost tracks the live prefix, not the table
+            # width (one compile per (chunk, page) bucket pair — early
+            # chunks of a long prompt stay cheap).
+            n_lp = min(_pow2_ceil(max(need, 1)), self.pages.max_pages)
+            page_ids = jnp.asarray(self._pt[slot, :n_lp])
 
+        toks = src[start : start + n_real].astype(np.int32)
+        if n_real < bucket:
+            toks = np.concatenate([toks, np.zeros(bucket - n_real, np.int32)])
+        args = [
+            self._states["layers"], self._states["pos"], jnp.asarray(toks)[None, :],
+            jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32),
+            jnp.asarray(n_real, jnp.int32),
+        ]
+        if self._paged:
+            args.append(page_ids)
+        logits, layers, pos = self._chunk_jit(*args)
+        self._states["layers"] = layers
+        self._states["pos"] = pos
+        rs.chunk_pos += n_real
+        self._pos_host[slot] = rs.chunk_pos
+        self.total_chunk_steps += 1
+        if rs.chunk_pos == len(src):
+            self._finish_prefill(rs, logits)
+        return True
+
+    def _finish_prefill(self, rs: RequestState, logits: jax.Array) -> None:
+        """The prompt is fully streamed: join the decode batch."""
+        slot = rs.slot
+        now = time.perf_counter()
+        req = rs.request
+        if rs.replay_tokens is not None:
+            # Recompute resume: the last generated token was never fed back;
+            # it is the next decode input, not a fresh sample.
+            rs.replay_tokens = None
+            self._tokens[slot, 0] = rs.tokens[-1]
+        else:
+            self._key, sub = jax.random.split(self._key)
+            first = int(
+                np.asarray(
+                    self._sample(
+                        logits[:, -1, :],
+                        jnp.full((1,), req.temperature, jnp.float32),
+                        sub,
+                    )
+                )[0]
+            )
+            rs.tokens = [first]
+            rs.prefill_logits = np.asarray(logits[:, -1:, :])
+            rs.t_first_token = now
+            rs.t_tokens.append(now)
+            self._tokens[slot, 0] = first
+        rs.status = RequestStatus.ACTIVE
+        self._temps[slot] = req.temperature
+        self._active_mask[slot] = True
+        self._maybe_finish(rs, now)
+
+    # -- pages: growth, reservation-free accounting, preemption --------------
+    def _ensure_pages(self, slot: int, n_total: int) -> bool:
+        """Make ``slot``'s reservation cover ``n_total`` pages. Under
+        worst-case reservations this always holds; reservation-free
+        (preemption on), extend incrementally and reclaim LRU victims'
+        pages until the pool can back it."""
+        if self.sched.preemption == "off":
+            return True  # admission reserved the worst case
+        while not self.pool.extend_to(slot, n_total):
+            if not self._preempt_lru(protect=slot):
+                return False
+        return True
+
+    def _grow_pages(self) -> None:
+        """Allocate the page backing the position each decoding slot writes
+        this step. Worst-case reservations guarantee this; reservation-free
+        admission may have to preempt first — including the growing slot
+        *itself* when everyone else's pages are pinned (e.g. a PREFILLING
+        streamer holds the pool and streamers are never victims): the
+        grower is parked and resumes once pages free up."""
+        for slot, rs in list(self._active.items()):
+            if rs.status is not RequestStatus.ACTIVE:
+                continue
+            need = self.pages.pages_for_len(int(self._pos_host[slot]) + 1)
+            held = len(self.pool.allocated(slot))
+            if need <= held:
+                continue
+            if not self._ensure_pages(slot, need):
+                if self._can_preempt(rs):
+                    self._preempt_slot(slot)
+                    continue
+                raise RuntimeError(
+                    f"slot {slot}: cannot back page growth to {need} and the "
+                    "request is not preemptable (recompute cannot replay "
+                    "modality extras); use preemption=\"swap\" or a larger "
+                    "pool for such workloads"
+                )
+            self._pt[slot, held:need] = self.pool.grow_to(slot, need)
+
+    def _can_preempt(self, rs: RequestState) -> bool:
+        """Swap restores any slot verbatim; recompute replays tokens through
+        chunked streaming, which cannot re-feed modality extras or enc-dec
+        caches — such requests are not recompute victims."""
+        if self.sched.preemption == "swap":
+            return True
+        return self._stream_capable and not rs.request.extras
+
+    def _preempt_lru(self, protect: int) -> bool:
+        """Reclaim the least-recently-(re)admitted decoding slot's pages.
+
+        ``swap``: snapshot the slot's page contents + per-slot states to
+        host and restore them verbatim on resume. ``recompute``: drop
+        everything and re-stream prompt + generated tokens (teacher-forced)
+        on resume. Either way the resumed request continues greedy
+        token-identically. Returns False when no victim exists."""
+        victims = [
+            rs
+            for s, rs in self._active.items()
+            if rs.status is RequestStatus.ACTIVE and s != protect
+            and self._can_preempt(rs)
+        ]
+        if not victims:
+            return False
+        self._preempt_slot(min(victims, key=lambda r: r.t_admit).slot)
+        return True
+
+    def _preempt_slot(self, slot: int) -> None:
+        rs = self._active[slot]
+        if self.sched.preemption == "swap":
+            snap = self._swap_out_jit(
+                self._states["layers"],
+                jnp.asarray(self._pt[slot]),
+                jnp.asarray(slot, jnp.int32),
+            )
+            rs.swap = (jax.tree.map(np.asarray, snap), int(self._pos_host[slot]))
+        else:  # recompute
+            rs.replay_tokens = np.concatenate(
+                [np.asarray(rs.request.prompt, np.int32),
+                 np.asarray(rs.tokens[:-1], np.int32)]
+            )
+            rs.chunk_pos = 0
+        rs.status = RequestStatus.PREEMPTED
+        rs.preemptions += 1
+        self.preemptions_total += 1
+        self._active_mask[slot] = False
+        self._tokens[slot, 0] = 0
+        del self._active[slot]
+        heapq.heappush(self._free_slots, slot)
+        self.pool.release(slot)
+        self._pt[slot, :] = self.pages.trash
+        self._pos_host[slot] = 0
+        rs.slot = None
+        self._preempted.append(rs)
+
+    # -- admission -----------------------------------------------------------
     def _bucket_len(self, token_len: int) -> int:
         """Power-of-two padded token count (identity when bucketing is off)."""
         if not self._bucketed:
@@ -319,99 +679,218 @@ class Scheduler:
         cap = self.sched.cache_len - (self.cfg.prefix_len or 0)
         return min(b, max(cap, token_len))
 
+    def _streaming(self) -> bool:
+        return any(
+            rs.status is RequestStatus.PREFILLING for rs in self._active.values()
+        )
+
     def _admit_pending(self) -> None:
+        # Preempted requests resume first: they hold generated progress and
+        # FIFO-resuming them bounds preemption churn. A *deferred* resume
+        # (not enough free pages yet) blocks fresh admissions too —
+        # otherwise younger requests would keep taking the pages the
+        # swapped-out request is waiting for and starve it indefinitely.
+        while self._free_slots and self._preempted:
+            if not self._try_resume(self._preempted[0]):
+                return
+            self._preempted.popleft()
         while self._free_slots and self._queue:
             rs = self._queue[0]
-            req = rs.request
-            prompt_len = req.prompt.shape[0] + (self.cfg.prefix_len or 0)
-            assert (
-                prompt_len + req.max_new_tokens <= self.sched.cache_len
-                or self.cfg.supports_long_context
-                or self.cfg.window_size
-            ), (
-                f"cache_len {self.sched.cache_len} too small for "
-                f"{prompt_len}+{req.max_new_tokens}"
-            )
-            page_ids_arr = None
-            if self._paged:
-                n_reserve = self.pages.pages_for_len(prompt_len + req.max_new_tokens)
-                if n_reserve > self.pages.n_pages:
-                    # Never admissible even into an empty pool: fail fast
-                    # instead of deferring forever (run() would spin).
-                    raise RuntimeError(
-                        f"request {rs.rid} needs {n_reserve} pages worst-case "
-                        f"({prompt_len}+{req.max_new_tokens} tokens @ "
-                        f"{self.pages.page_size}/page) but the pool has only "
-                        f"{self.pages.n_pages}; raise n_pages or lower "
-                        "max_new_tokens"
-                    )
-                if not self.pool.can_reserve(n_reserve):
-                    # OOM backpressure: not enough pool headroom for this
-                    # request's worst case — defer admission (FIFO order is
-                    # preserved; live pages are never reclaimed or aliased).
-                    self.deferred_admissions += 1
-                    break
-            self._queue.popleft()
-            slot = heapq.heappop(self._free_slots)
-            if self._paged:
-                self.pool.reserve(slot, n_reserve)
-                n_admit = self.pages.pages_for_len(prompt_len)
-                self._pt[slot, :] = self.pages.trash
-                self._pt[slot, :n_admit] = self.pool.grow_to(slot, n_admit)
-                page_ids_arr = jnp.asarray(self._pt[slot])
-
-            tok_len = req.prompt.shape[0]
-            pad_to = self._bucket_len(tok_len)
-            toks = np.asarray(req.prompt)
-            if pad_to != tok_len:
-                toks = np.concatenate([toks, np.zeros(pad_to - tok_len, np.int32)])
-            batch = {"tokens": jnp.asarray(toks)[None, :]}
-            for k, v in req.extras.items():
-                batch[k] = jnp.asarray(v)
-            if self._bucketed:
-                batch["logit_pos"] = jnp.asarray(prompt_len - 1, jnp.int32)
-            logits, pstates = self._prefill(self.params, batch)
-
-            plen_t = jnp.asarray(prompt_len, jnp.int32)
-            slot_t = jnp.asarray(slot, jnp.int32)
-            if self._paged:
-                layers, pos = self._admit_jit(
-                    self._states["layers"], self._states["pos"], pstates["layers"],
-                    slot_t, page_ids_arr, plen_t,
-                )
+            if self._stream_capable and not rs.request.extras:
+                ok = self._admit_streaming(rs)
             else:
-                layers, pos = self._admit_jit(
-                    self._states["layers"], self._states["pos"], pstates["layers"],
-                    slot_t, plen_t,
-                )
+                ok = self._admit_prefill(rs)
+            if not ok:
+                break
+            self._queue.popleft()
+
+    def _stream_gate_ok(self) -> bool:
+        """Reservation-free streaming admits one prompt at a time. Two
+        concurrent streamers can deadlock — each holds pages, each needs
+        more, and PREFILLING slots are not preemptable victims — whereas a
+        lone streamer can always reclaim ACTIVE slots' pages, and the
+        admission fail-fast guarantees it fits the empty pool. Worst-case
+        reservations (preemption off) stream concurrently as before."""
+        return self.sched.preemption == "off" or not self._streaming()
+
+    def _check_fits(self, rs: RequestState, prompt_len: int) -> int:
+        """Shared admission validation; returns the worst-case page count."""
+        req = rs.request
+        assert (
+            prompt_len + req.max_new_tokens <= self.sched.cache_len
+            or self.cfg.supports_long_context
+            or self.cfg.window_size
+        ), (
+            f"cache_len {self.sched.cache_len} too small for "
+            f"{prompt_len}+{req.max_new_tokens}"
+        )
+        if not self._paged:
+            return 0
+        n_worst = self.pages.pages_for_len(prompt_len + req.max_new_tokens)
+        if n_worst > self.pages.n_pages:
+            # Never admissible even into an empty pool: fail fast instead
+            # of deferring forever (run() would spin).
+            raise RuntimeError(
+                f"request {rs.rid} needs {n_worst} pages worst-case "
+                f"({prompt_len}+{req.max_new_tokens} tokens @ "
+                f"{self.pages.page_size}/page) but the pool has only "
+                f"{self.pages.n_pages}; raise n_pages or lower "
+                "max_new_tokens"
+            )
+        return n_worst
+
+    def _admit_streaming(self, rs: RequestState) -> bool:
+        """Assign a slot and start streaming the prompt in chunks. Under
+        worst-case reservations this is where OOM backpressure defers;
+        reservation-free admission always proceeds (chunks reserve as they
+        stream, preempting if needed)."""
+        req = rs.request
+        prompt_len = req.prompt.shape[0]
+        n_worst = self._check_fits(rs, prompt_len)
+        if self._paged:
+            if self.sched.preemption == "off":
+                if not self.pool.can_reserve(n_worst):
+                    self.deferred_admissions += 1
+                    return False
+                n_reserve = n_worst
+            else:
+                if not self._stream_gate_ok():
+                    self.deferred_admissions += 1
+                    return False
+                n_reserve = 0
+        slot = heapq.heappop(self._free_slots)
+        if self._paged:
+            self.pool.reserve(slot, n_reserve)
+            self._pt[slot, :] = self.pages.trash
+        layers, pos = self._reset_jit(
+            self._states["layers"], self._states["pos"], jnp.asarray(slot, jnp.int32)
+        )
+        self._states["layers"] = layers
+        self._states["pos"] = pos
+        self._pos_host[slot] = 0
+        rs.slot = slot
+        rs.prompt_len = prompt_len
+        rs.chunk_pos = 0
+        rs.status = RequestStatus.PREFILLING
+        rs.t_admit = time.perf_counter()
+        self._active[slot] = rs
+        return True
+
+    def _try_resume(self, rs: RequestState) -> bool:
+        """Re-admit a preempted request: swap its snapshot back in, or
+        restart streaming (recompute). False defers (not enough pages)."""
+        if rs.swap is not None:
+            snap, pos_v = rs.swap
+            need = self.pages.pages_for_len(pos_v)
+            if need > self.pool.available():
+                self.deferred_admissions += 1
+                return False
+            slot = heapq.heappop(self._free_slots)
+            self.pool.reserve(slot, 0)
+            if not self.pool.extend_to(slot, need):  # pragma: no cover - race-free
+                raise RuntimeError("pool accounting violated availability check")
+            self._pt[slot, :] = self.pages.trash
+            if need:
+                self._pt[slot, :need] = self.pool.grow_to(slot, need)
+            layers, pos = self._swap_in_jit(
+                self._states["layers"], self._states["pos"],
+                jax.tree.map(jnp.asarray, snap),
+                jnp.asarray(self._pt[slot]), jnp.asarray(slot, jnp.int32),
+                jnp.asarray(pos_v, jnp.int32),
+            )
             self._states["layers"] = layers
             self._states["pos"] = pos
-
-            now = time.perf_counter()
-            self._key, sub = jax.random.split(self._key)
-            first = int(
-                np.asarray(
-                    self._sample(
-                        logits[:, -1, :],
-                        jnp.full((1,), req.temperature, jnp.float32),
-                        sub,
-                    )
-                )[0]
-            )
+            self._pos_host[slot] = pos_v
+            rs.swap = None
             rs.slot = slot
-            rs.prompt_len = prompt_len
             rs.status = RequestStatus.ACTIVE
-            rs.tokens = [first]
-            rs.prefill_logits = np.asarray(logits[:, -1:, :])
-            rs.t_admit = now
-            rs.t_first_token = now
-            self._tokens[slot, 0] = first
-            self._temps[slot] = req.temperature
+            rs.t_admit = time.perf_counter()
+            self._tokens[slot, 0] = rs.tokens[-1]
+            self._temps[slot] = rs.request.temperature
             self._active_mask[slot] = True
             self._active[slot] = rs
-            # A 1-token request (or an immediate stop) retires before ever
-            # riding the decode step, freeing the slot for this admission loop.
-            self._maybe_finish(rs, now)
+            return True
+        # recompute: restart chunk streaming over prompt + generated tokens
+        return self._admit_streaming(rs)
+
+    def _admit_prefill(self, rs: RequestState) -> bool:
+        """Whole-prompt prefill + graft at admission (the PR-1/2 path; also
+        the fallback for modality-prefix / enc-dec requests when chunked
+        streaming is on). Returns False to defer on pool backpressure."""
+        req = rs.request
+        prompt_len = req.prompt.shape[0] + (self.cfg.prefix_len or 0)
+        n_reserve = self._check_fits(rs, prompt_len)
+        page_ids_arr = None
+        if self._paged:
+            if not self.pool.can_reserve(n_reserve):
+                # OOM backpressure: not enough pool headroom for this
+                # request's worst case — defer admission (FIFO order is
+                # preserved; live pages are never reclaimed or aliased).
+                self.deferred_admissions += 1
+                return False
+        slot = heapq.heappop(self._free_slots)
+        if self._paged:
+            self.pool.reserve(slot, n_reserve)
+            n_admit = self.pages.pages_for_len(prompt_len)
+            self._pt[slot, :] = self.pages.trash
+            self._pt[slot, :n_admit] = self.pool.grow_to(slot, n_admit)
+            page_ids_arr = jnp.asarray(self._pt[slot])
+
+        tok_len = req.prompt.shape[0]
+        pad_to = self._bucket_len(tok_len)
+        toks = np.asarray(req.prompt)
+        if pad_to != tok_len:
+            toks = np.concatenate([toks, np.zeros(pad_to - tok_len, np.int32)])
+        batch = {"tokens": jnp.asarray(toks)[None, :]}
+        for k, v in req.extras.items():
+            batch[k] = jnp.asarray(v)
+        if self._bucketed:
+            batch["logit_pos"] = jnp.asarray(prompt_len - 1, jnp.int32)
+        logits, pstates = self._prefill(self.params, batch)
+
+        plen_t = jnp.asarray(prompt_len, jnp.int32)
+        slot_t = jnp.asarray(slot, jnp.int32)
+        if self._paged:
+            layers, pos = self._admit_jit(
+                self._states["layers"], self._states["pos"], pstates["layers"],
+                slot_t, page_ids_arr, plen_t,
+            )
+        else:
+            layers, pos = self._admit_jit(
+                self._states["layers"], self._states["pos"], pstates["layers"],
+                slot_t, plen_t,
+            )
+        self._states["layers"] = layers
+        self._states["pos"] = pos
+        self._pos_host[slot] = prompt_len
+
+        now = time.perf_counter()
+        self._key, sub = jax.random.split(self._key)
+        first = int(
+            np.asarray(
+                self._sample(
+                    logits[:, -1, :],
+                    jnp.full((1,), req.temperature, jnp.float32),
+                    sub,
+                )
+            )[0]
+        )
+        rs.slot = slot
+        rs.prompt_len = prompt_len
+        rs.status = RequestStatus.ACTIVE
+        rs.tokens = [first]
+        rs.prefill_logits = np.asarray(logits[:, -1:, :])
+        rs.t_admit = now
+        rs.t_first_token = now
+        rs.t_tokens.append(now)
+        self._tokens[slot, 0] = first
+        self._temps[slot] = req.temperature
+        self._active_mask[slot] = True
+        self._active[slot] = rs
+        # A 1-token request (or an immediate stop) retires before ever
+        # riding the decode step, freeing the slot for this admission loop.
+        self._maybe_finish(rs, now)
+        return True
 
     def _maybe_finish(self, rs: RequestState, now: float) -> None:
         req = rs.request
@@ -428,6 +907,7 @@ class Scheduler:
         self._tokens[slot, 0] = 0
         del self._active[slot]
         heapq.heappush(self._free_slots, slot)
+        self._pos_host[slot] = 0
         if self._paged:
             # Free pages and point the table row at the trash page so the
             # retired slot's frozen-position garbage writes can never touch
@@ -452,12 +932,16 @@ class Scheduler:
             "generated_tokens": self.generated_tokens_total,
             "retained": len(self._finished),
             "decode_steps": self.total_decode_steps,
+            "chunk_steps": self.total_chunk_steps,
             "decode_traces": self.decode_traces,
             "prefill_traces": self.prefill_traces,
             "admit_traces": self.admit_traces,
+            "chunk_traces": self.chunk_traces,
+            "swap_traces": self.swap_traces,
             "pending": self.pending,
             "active": self.num_active,
             "deferred_admissions": self.deferred_admissions,
+            "preemptions": self.preemptions_total,
         }
         if self._paged:
             out["pages"] = self.pool.stats()

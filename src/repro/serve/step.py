@@ -53,6 +53,20 @@ def init_paged_decode_state(
     return state
 
 
+def fresh_slot_layers(cfg: ModelConfig, s_max: int) -> Any:
+    """Batch-1 layer states a chunked prefill (re)starts a slot from.
+
+    Zeroed storage with the recurrence log-stabilisers at their
+    empty-recurrence values (xLSTM ``m`` at -1e30, sLSTM ``n`` at 1e-6) —
+    the state a from-scratch prefill would initialise internally, so
+    streaming chunk 0 against a freshly reset (or recompute-resumed) slot
+    is numerically the same computation."""
+    from repro.models import blocks as blk
+
+    layers = init_decode_state(cfg, 1, s_max)["layers"]
+    return blk.fresh_stack_states(cfg, layers)
+
+
 def token_specs(shape: ShapeConfig, sctx: ShardingCtx) -> jax.ShapeDtypeStruct:
     B = shape.global_batch
     if sctx.mesh is None:

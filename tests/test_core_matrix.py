@@ -328,3 +328,44 @@ class TestHashing:
     def test_property_shuffled_dict_same_key(self, d):
         items = list(d.items())
         assert task_key(dict(items)) == task_key(dict(reversed(items)))
+
+
+class TestTaskViews:
+    """shard()/subset() return lazy MatrixBase views that keep composing."""
+
+    def _m(self, n=10):
+        return ConfigMatrix.from_dict({"parameters": {"a": list(range(n))}})
+
+    def test_views_are_matrices_and_iterate_like_lists(self):
+        from repro.core import MatrixBase, TaskViewMatrix
+
+        view = self._m().shard(0, 3)
+        assert isinstance(view, MatrixBase) and isinstance(view, TaskViewMatrix)
+        # list behavior via iteration / .tasks(): base indices are preserved
+        assert [t.index for t in view] == [0, 3, 6, 9]
+        assert [t.index for t in view.tasks()] == [0, 3, 6, 9]
+        assert len(view) == 4
+
+    def test_shard_keys_match_full_matrix(self):
+        m = self._m()
+        full = {t.index: t.key for t in m.task_list()}
+        for i in range(3):
+            for t in m.shard(i, 3):
+                assert t.key == full[t.index], "sharding must not rekey tasks"
+
+    def test_subset_chains_with_algebra(self):
+        m = self._m(6)
+        other = ConfigMatrix.from_dict({"parameters": {"b": [0, 1]}})
+        comp = (m.subset(lambda p: p["a"] % 2 == 0) * other).where(
+            lambda p: p["a"] + p["b"] < 5
+        )
+        combos = sorted((t.params["a"], t.params["b"]) for t in comp.tasks())
+        assert combos == [(0, 0), (0, 1), (2, 0), (2, 1), (4, 0)]
+
+    def test_shard_union_roundtrips(self):
+        m = self._m(7)
+        union = m.shard(0, 2) + m.shard(1, 2)
+        assert sorted(t.params["a"] for t in union.tasks()) == list(range(7))
+        # de-dup by key: overlapping shards collapse
+        overlap = m.shard(0, 2) + m.shard(0, 2)
+        assert len(overlap.task_list()) == 4

@@ -261,3 +261,84 @@ class TestCacheIdentity:
         # Same namespace => cache hit; different => isolated.
         assert Memento(exp_b, cache=cache, namespace="exp-a").run(m)[0].status == "cached"
         assert Memento(exp_b, cache=cache, namespace="exp-a").run(m).values == ["a"]
+
+
+class TestInvalidate:
+    """Per-axis cache invalidation: Memento.invalidate(**partial_params)."""
+
+    def test_partial_params_invalidate(self, tmp_path):
+        eng = Memento(grid_fn, workdir=tmp_path)
+        m = ConfigMatrix.from_dict(
+            {"parameters": {"arch": ["a", "b"], "lr": [0.1, 0.2, 0.3]}}
+        )
+        eng.run(m)
+        assert sum(r.status == "cached" for r in eng.run(m)) == 6
+        n = eng.invalidate(arch="a")
+        assert n == 3, "one axis value matches half the grid"
+        res = eng.run(m)
+        assert sum(r.status == "cached" for r in res) == 3 and len(res.ok) == 6
+        # multi-key partial assignment: exactly one cell
+        assert eng.invalidate(arch="b", lr=0.2) == 1
+        assert eng.invalidate(arch="zzz") == 0
+
+    def test_invalidate_respects_namespaces(self, tmp_path):
+        a = Memento(grid_fn, workdir=tmp_path, namespace="expA")
+        b = Memento(grid_fn, workdir=tmp_path, namespace="expB")
+        m = ConfigMatrix.from_dict({"parameters": {"arch": ["a"], "lr": [0.1]}})
+        a.run(m)
+        b.run(m)
+        assert a.invalidate(arch="a") == 1
+        assert sum(r.status == "cached" for r in b.run(m)) == 1, (
+            "expB's entry must survive expA's purge"
+        )
+        assert b.invalidate() == 1  # no args: the whole namespace
+
+    def test_invalidate_memory_cache(self):
+        eng = Memento(grid_fn)  # MemoryCache
+        m = ConfigMatrix.from_dict({"parameters": {"arch": ["a", "b"], "lr": [1]}})
+        eng.run(m)
+        assert eng.invalidate(arch="b") == 1
+        assert sum(r.status == "cached" for r in eng.run(m)) == 1
+
+
+def grid_fn(ctx: Context):
+    return f"{ctx['arch']}@{ctx['lr']}"
+
+
+class TestProgressProvider:
+    def test_track_counts_and_eta(self):
+        import io
+
+        from repro.core import ProgressNotificationProvider
+
+        buf = io.StringIO()
+        eng = Memento(square)
+        m = _matrix(4)
+        eng.run(m)  # warm the in-memory cache: 4 cached + 0 live on re-run
+        prov = ProgressNotificationProvider(total=8, stream=buf)
+        results = list(prov.track(eng.stream(_matrix(8))))
+        assert len(results) == 8
+        assert prov.done == 8 and prov.cached == 4 and prov.failed == 0
+        lines = buf.getvalue().strip().splitlines()
+        assert len(lines) == 8
+        assert "8/8 done" in lines[-1] and "4 cached" in lines[-1]
+
+    def test_event_path_counts_failures(self):
+        import io
+
+        from repro.core import ProgressNotificationProvider
+
+        def flaky(ctx: Context):
+            if ctx["i"] == 1:
+                raise RuntimeError("boom")
+            return ctx["i"]
+
+        buf = io.StringIO()
+        prov = ProgressNotificationProvider(total=3, stream=buf)
+        eng = Memento(
+            flaky, notification_provider=prov,
+            runner_config=RunnerConfig(max_workers=2, retries=0, enable_speculation=False),
+        )
+        eng.run(_matrix(3), cache=False)
+        assert prov.done == 3 and prov.failed == 1
+        assert "1 failed" in buf.getvalue()
