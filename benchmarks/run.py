@@ -20,6 +20,10 @@ caching/streaming/retries end-to-end, not hand-rolled loops):
   B11 chunked prefill: mixed 32–4096-token prompts with the unified
       token-budget step on vs off — p50/p95 *inter-token* latency for
       in-flight decodes at equal throughput, ``chunk_budget`` as an axis
+  B12 distributed drain: the same matrix drained through the file-queue by
+      1/2/4 single-threaded worker processes on one shared tmpdir —
+      tasks/s, speedup, and scaling efficiency; plus a kill-one-worker row
+      showing lease recovery completing the matrix anyway
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
@@ -387,6 +391,152 @@ def bench_serve_smoke() -> None:
         )
 
 
+def _b12_task(ctx):
+    time.sleep(ctx.settings["delay"])
+    return ctx["i"]
+
+
+def _b12_worker(root: str, n: int, delay: float, owner: str, lease_s: float,
+                die_after: float = 0.0) -> None:
+    import os
+
+    from repro.core import (
+        CallbackNotificationProvider,
+        DistributedConfig,
+        Memento,
+        RunnerConfig,
+    )
+
+    if die_after:
+        # Simulated host death: hard-kill this worker mid-drain, claims and
+        # all. The survivors must finish the matrix via lease expiry.
+        import threading
+
+        threading.Timer(die_after, lambda: os._exit(29)).start()
+    matrix = {"parameters": {"i": list(range(n))}, "settings": {"delay": delay}}
+    eng = Memento(
+        _b12_task,
+        notification_provider=CallbackNotificationProvider(lambda e: None),
+        workdir=os.path.join(root, "w"),
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    eng.run_distributed(
+        matrix,
+        queue_dir=os.path.join(root, "q"),
+        lease_s=lease_s,
+        owner=owner,
+        # local disk, not NFS: poll tightly so completion latency, not the
+        # poll cadence, dominates the tail
+        distributed_config=DistributedConfig(
+            poll_s=0.05, claim_ahead=1, progress_every_s=60.0
+        ),
+    )
+
+
+def _b12_assemble(root: str):
+    """A quiet parent-side engine that only assembles results (runs nothing
+    itself by the time it is called — everything is cached/done)."""
+    from repro.core import CallbackNotificationProvider, Memento
+
+    return Memento(
+        _b12_task,
+        notification_provider=CallbackNotificationProvider(lambda e: None),
+        workdir=f"{root}/w",
+    )
+
+
+def bench_distributed(smoke: bool = False) -> None:
+    """B12: multi-host drain scaling.
+
+    Each worker is a real OS process running ``Memento.run_distributed``
+    with a single-threaded Runner (so the scaling measured is across the
+    file-queue protocol, not across one process's thread pool), all draining
+    one matrix on one shared tmpdir. A fresh queue+cache per point keeps the
+    points independent; the parent verifies every point produced the full,
+    identical ResultSet.
+    """
+    import multiprocessing
+    import shutil
+    import tempfile
+
+    from repro.core import Memento
+
+    mp = multiprocessing.get_context("fork")
+    n_tasks = 8 if smoke else 32
+    delay = 0.02 if smoke else 0.15
+    points = (1, 2) if smoke else (1, 2, 4)
+    lease_s = 30.0
+    base_rate = None
+    expected = list(range(n_tasks))
+    for n_procs in points:
+        root = tempfile.mkdtemp(prefix="repro_b12_")
+        try:
+            procs = [
+                mp.Process(
+                    target=_b12_worker,
+                    args=(root, n_tasks, delay, f"w{i}", lease_s),
+                )
+                for i in range(n_procs)
+            ]
+            t0 = time.perf_counter()
+            for p in procs:
+                p.start()
+            for p in procs:
+                p.join(timeout=300)
+            wall = time.perf_counter() - t0
+            assert all(p.exitcode == 0 for p in procs), [p.exitcode for p in procs]
+            matrix = {"parameters": {"i": expected}, "settings": {"delay": delay}}
+            res = _b12_assemble(root).run_distributed(
+                matrix, queue_dir=f"{root}/q", publish=False
+            )
+            assert sorted(r.value for r in res) == expected, "ResultSet mismatch"
+            rate = n_tasks / wall
+            if base_rate is None:
+                base_rate = rate
+            speedup = rate / base_rate
+            _row(
+                f"B12_distributed_{n_procs}proc_{n_tasks}tasks",
+                wall * 1e6,
+                f"{rate:.1f} tasks/s speedup={speedup:.2f}x "
+                f"efficiency={speedup / n_procs:.2f}",
+            )
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+
+    # Kill-one-worker: 2 workers + one that dies mid-drain; lease recovery
+    # still completes the full matrix.
+    root = tempfile.mkdtemp(prefix="repro_b12k_")
+    try:
+        kill_lease = 1.0
+        die_after = 0.05 if smoke else 0.15  # must land mid-drain
+        procs = [
+            mp.Process(target=_b12_worker,
+                       args=(root, n_tasks, delay, "victim", kill_lease, die_after)),
+            mp.Process(target=_b12_worker, args=(root, n_tasks, delay, "s1", kill_lease)),
+            mp.Process(target=_b12_worker, args=(root, n_tasks, delay, "s2", kill_lease)),
+        ]
+        t0 = time.perf_counter()
+        for p in procs:
+            p.start()
+        for p in procs:
+            p.join(timeout=300)
+        wall = time.perf_counter() - t0
+        codes = sorted(p.exitcode for p in procs)
+        matrix = {"parameters": {"i": expected}, "settings": {"delay": delay}}
+        res = _b12_assemble(root).run_distributed(
+            matrix, queue_dir=f"{root}/q", publish=False, lease_s=kill_lease
+        )
+        complete = sorted(r.value for r in res) == expected
+        _row(
+            f"B12_distributed_killrecovery_{n_tasks}tasks",
+            wall * 1e6,
+            f"exitcodes={codes} complete={complete} (lease recovery)",
+        )
+        assert complete, "kill-one-worker run did not complete the matrix"
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def bench_roofline_summary() -> None:
     try:
         from repro.launch.report import load_results
@@ -408,6 +558,11 @@ def bench_roofline_summary() -> None:
 def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     bench_matrix_expansion(smoke)
+    if not smoke:
+        # Forks worker processes, so it must run before anything imports
+        # jax (B4 onward) or leaves thread pools behind (B2/B3): forking a
+        # multithreaded XLA process is the documented deadlock case.
+        bench_distributed()
     bench_parallel_speedup(smoke)
     bench_cache_speedup(smoke=smoke)
     bench_checkpoint_overhead(smoke=smoke)
@@ -429,4 +584,13 @@ if __name__ == "__main__":
         "--smoke", action="store_true",
         help="B1-B5 only, tiny sizes (CI end-to-end exercise of the experiment layer)",
     )
-    main(**vars(ap.parse_args()))
+    ap.add_argument(
+        "--distributed-smoke", action="store_true",
+        help="tiny B12 only: 1/2-process file-queue drain + kill-recovery row",
+    )
+    args = ap.parse_args()
+    if args.distributed_smoke:
+        print("name,us_per_call,derived")
+        bench_distributed(smoke=True)
+    else:
+        main(smoke=args.smoke)

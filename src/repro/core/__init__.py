@@ -20,6 +20,7 @@ from .exceptions import (
     TaskFailedError,
     TaskTimeoutError,
 )
+from .distributed import DistributedConfig, LeaseRenewer, stream_distributed
 from .filequeue import FileQueue, QueueStats, drain
 from .hashing import canonicalize, qualified_name, stable_hash, task_key
 from .matrix import (

@@ -1,0 +1,409 @@
+"""Runner-backed multi-host drain: the distributed sweep runtime.
+
+Every participating host runs the same code against one queue directory and
+one shared result cache (both on a shared filesystem):
+
+  publish (idempotent)
+    -> cache hits stream out first, before any claiming starts
+    -> a claim feed pulls work from the FileQueue and drives the host's
+       *full* local Runner: thread pool, per-task retry budget, hard
+       timeouts, straggler speculation, checkpoint heartbeats
+    -> a background lease-renewal thread keeps every locally-claimed lease
+       alive, so long tasks that never call ``ctx.heartbeat()`` no longer
+       lose their lease mid-run
+    -> a poller surfaces completions from *other* hosts (done/ records plus
+       the shared FsCache) into the same result stream, so each host's
+       stream converges to the full matrix regardless of who ran what
+    -> failures carry the real error + traceback in ``done/<key>.json`` and
+       are retried across hosts: a task that failed on host A may be
+       re-claimed by host B (or A) until ``max_attempts`` queue-level
+       attempts are on record, then surfaces as ``failed`` with the
+       *original* error.
+
+The protocol needs no coordinator: termination is per-host ("every task of
+my matrix has a final result somewhere"), and host death is covered by lease
+expiry — survivors re-claim and re-run, which is safe because tasks are
+idempotent (pure function + atomic cache writes + versioned checkpoints).
+"""
+from __future__ import annotations
+
+import queue as _queue_mod
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Iterator, Sequence
+
+from .exceptions import QueueError
+from .filequeue import FileQueue
+from .matrix import TaskSpec
+from .notifications import Event
+from .runner import Runner
+from .task import TaskResult
+
+
+@dataclass
+class DistributedConfig:
+    max_attempts: int = 3  # queue-level (cross-host) attempts per task
+    poll_s: float = 0.2  # remote done/cache poll + local result wait
+    claim_ahead: int = 2  # keys claimed beyond the worker count
+    progress_every_s: float = 5.0  # queue_progress notification cadence
+    missing_result_grace_s: float = 5.0  # done-ok but cache miss tolerance
+
+
+class LeaseRenewer:
+    """Daemon thread renewing the leases of every locally-claimed key.
+
+    Decouples lease liveness from the task's own ``ctx.heartbeat()``
+    discipline: a task that crunches for an hour without heartbeating keeps
+    its claim. A lease we fail to renew (broken by a peer after a stall) is
+    dropped from the set and reported via :meth:`lost`.
+    """
+
+    def __init__(self, queue: FileQueue, interval_s: float | None = None):
+        self.queue = queue
+        self.interval_s = (
+            interval_s if interval_s is not None else max(queue.lease_s / 3.0, 0.05)
+        )
+        self._keys: set[str] = set()
+        self._lost: set[str] = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name="memento-lease-renewer", daemon=True
+        )
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def add(self, key: str) -> None:
+        with self._lock:
+            self._keys.add(key)
+
+    def remove(self, key: str) -> None:
+        with self._lock:
+            self._keys.discard(key)
+
+    def lost(self) -> set[str]:
+        with self._lock:
+            out, self._lost = self._lost, set()
+        return out
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            with self._lock:
+                keys = list(self._keys)
+            for key in keys:
+                try:
+                    self.queue.renew(key)
+                except QueueError:
+                    with self._lock:
+                        self._keys.discard(key)
+                        self._lost.add(key)
+                except Exception:
+                    pass  # transient FS error: retry next tick
+
+
+def _notify(runner: Runner, kind: str, message: str, **payload: Any) -> None:
+    if runner.provider is None:
+        return
+    try:
+        runner.provider.notify(Event(kind=kind, message=message, payload=payload))
+    except Exception:
+        pass  # providers must never take the run down
+
+
+def _notify_finished(runner: Runner, res: TaskResult) -> None:
+    if runner.provider is None:
+        return
+    try:
+        runner.provider.task_finished(res)
+    except Exception:
+        pass
+
+
+def stream_distributed(
+    runner: Runner,
+    queue: FileQueue,
+    specs: Sequence[TaskSpec],
+    config: DistributedConfig | None = None,
+) -> Iterator[TaskResult]:
+    """Cooperatively drain ``specs`` with other hosts; yield every task's
+    final :class:`TaskResult` — cache hits first, then live completions from
+    *any* host in completion order."""
+    cfg = config or DistributedConfig()
+    cache = runner.cache
+    by_key: dict[str, TaskSpec] = {}
+    order: list[str] = []
+    for s in specs:
+        if s.key not in by_key:
+            by_key[s.key] = s
+            order.append(s.key)
+
+    workers = runner.config.resolved_workers()
+    _notify(
+        runner,
+        "run_started",
+        f"{len(order)} tasks, {workers} workers, distributed as {queue.owner}",
+        owner=queue.owner,
+    )
+
+    # Phase 0: cache hits first. Also best-effort mark them done so the
+    # queue's global state converges even if every host had a warm cache.
+    unresolved: set[str] = set()
+    n_cached = 0
+    for key in order:
+        entry = cache.get(key)
+        if entry is not None:
+            n_cached += 1
+            if not queue.is_done(key) and queue.try_claim(key):
+                queue.mark_done(key, "ok", {"cached": True})
+            yield TaskResult(
+                spec=by_key[key], status="cached", value=entry.value, wall_s=0.0
+            )
+        else:
+            unresolved.add(key)
+    if not unresolved:
+        _notify(runner, "run_finished", f"{n_cached} cached / 0 live", cached=n_cached)
+        return
+
+    lock = threading.Lock()
+    owned: set[str] = set()  # claimed by us, executing locally
+    stop = threading.Event()
+    renewer = LeaseRenewer(queue)
+    max_owned = workers + max(0, cfg.claim_ahead)
+    # Stagger the scan origin per host so N hosts don't all hammer the same
+    # head-of-queue key on every round.
+    rot = sum(ord(c) for c in queue.owner) % max(len(order), 1)
+
+    def claim_source() -> Iterator[TaskSpec | None]:
+        while not stop.is_set():
+            with lock:
+                if not unresolved:
+                    return
+                room = len(owned) < max_owned
+                candidates = (
+                    [k for k in order if k in unresolved and k not in owned]
+                    if room
+                    else []
+                )
+            candidates = candidates[rot % max(len(candidates), 1):] + \
+                candidates[:rot % max(len(candidates), 1)]
+            got: str | None = None
+            for key in candidates:
+                if queue.is_done(key):
+                    continue  # a peer finished it; the poller will surface it
+                if queue.try_claim(key):
+                    got = key
+                    break
+            if got is None:
+                yield None  # nothing claimable right now; runner keeps polling
+                continue
+            with lock:
+                owned.add(got)
+            renewer.add(got)
+            yield by_key[got]
+
+    out: "_queue_mod.Queue[TaskResult | None]" = _queue_mod.Queue()
+    local_error: list[BaseException] = []
+
+    def local_loop() -> None:
+        try:
+            for res in runner.stream_source(claim_source()):
+                out.put(res)
+        except BaseException as e:  # noqa: BLE001 - surfaced to the consumer
+            local_error.append(e)
+        finally:
+            out.put(None)  # sentinel: local side exhausted (or died)
+
+    local = threading.Thread(target=local_loop, name="memento-local-drain", daemon=True)
+    renewer.start()
+    local.start()
+
+    missing_since: dict[str, float] = {}
+    t_progress = 0.0
+    n_ok = n_failed = 0
+    t0 = time.time()
+    try:
+        while True:
+            with lock:
+                if not unresolved:
+                    break
+
+            # -- local completions ------------------------------------------
+            try:
+                res = out.get(timeout=cfg.poll_s)
+            except _queue_mod.Empty:
+                res = None
+            if res is None and local_error:
+                # The local drain infrastructure died (not a task failure —
+                # those are TaskResults). Hand our claims back to the cluster
+                # and surface the error instead of silently hanging while the
+                # renewer pins leases nobody is working on.
+                with lock:
+                    stranded = sorted(owned)
+                for key in stranded:
+                    renewer.remove(key)
+                    queue.release(key)
+                    with lock:
+                        owned.discard(key)
+                raise QueueError(
+                    f"local drain on {queue.owner} died: {local_error[0]!r}"
+                ) from local_error[0]
+            if res is not None:
+                key = res.spec.key
+                renewer.remove(key)
+                with lock:
+                    live = key in unresolved
+                if live and res.ok:
+                    queue.mark_done(key, "ok", {"wall_s": res.wall_s})
+                    with lock:
+                        unresolved.discard(key)
+                        owned.discard(key)
+                    n_ok += 1
+                    yield res
+                elif live:
+                    # If our lease was broken mid-run and a peer already
+                    # completed this task successfully, their result wins —
+                    # don't let our late local failure clobber it.
+                    peer_rec = queue.read_done(key)
+                    peer_entry = cache.get(key)
+                    if peer_entry is not None:
+                        with lock:
+                            unresolved.discard(key)
+                            owned.discard(key)
+                        n_ok += 1
+                        yield TaskResult(
+                            spec=res.spec,
+                            status="ok",
+                            value=peer_entry.value,
+                            host=str((peer_rec or {}).get("owner", "peer")),
+                        )
+                        continue
+                    if peer_rec is not None and peer_rec.get("status") == "ok":
+                        # done-ok but payload not visible yet: hand the key to
+                        # the remote poller (with its grace window) instead of
+                        # recording a failure over a success.
+                        with lock:
+                            owned.discard(key)
+                        continue
+                    terminal = queue.finalize_failure(
+                        key,
+                        res.error or res.status,
+                        res.traceback_str,
+                        max_attempts=cfg.max_attempts,
+                    )
+                    if terminal is not None:
+                        with lock:
+                            unresolved.discard(key)
+                            owned.discard(key)
+                        n_failed += 1
+                        yield TaskResult(
+                            spec=res.spec,
+                            status=res.status,
+                            error=terminal.get("error"),
+                            traceback_str=terminal.get("traceback"),
+                            attempts=int(terminal.get("attempts", 1) or 1),
+                            started_unix=res.started_unix,
+                            wall_s=res.wall_s,
+                        )
+                    else:
+                        # Queue-level retry budget remains; finalize_failure
+                        # released the claim, so any host — us included — may
+                        # re-claim for the next attempt.
+                        with lock:
+                            owned.discard(key)
+                        _notify(
+                            runner,
+                            "task_requeued",
+                            f"{res.spec.describe()} failed on {queue.owner}; "
+                            "released for cluster retry",
+                            key=key,
+                        )
+
+            # -- leases we lost (peer broke them after a stall) --------------
+            for key in renewer.lost():
+                _notify(
+                    runner,
+                    "lease_lost",
+                    f"lost lease on {key[:12]}; a peer may duplicate this task "
+                    "(idempotent, results converge)",
+                    key=key,
+                )
+
+            # -- remote completions -----------------------------------------
+            with lock:
+                remote_candidates = [
+                    k for k in order if k in unresolved and k not in owned
+                ]
+            for key in remote_candidates:
+                entry = cache.get(key)
+                if entry is not None:
+                    rec = queue.read_done(key) or {}
+                    with lock:
+                        unresolved.discard(key)
+                    n_ok += 1
+                    remote = TaskResult(
+                        spec=by_key[key],
+                        status="ok",
+                        value=entry.value,
+                        host=str(rec.get("owner", "peer")),
+                        attempts=int(rec.get("attempts", 1) or 1),
+                        wall_s=float(rec.get("wall_s", 0.0) or 0.0),
+                    )
+                    _notify_finished(runner, remote)
+                    yield remote
+                    continue
+                rec = queue.read_done(key)
+                if rec is None:
+                    continue
+                if rec.get("status") == "ok":
+                    # Done record visible before the cache entry (FS lag), or
+                    # the peer's cache write failed. Give it a grace window.
+                    first_seen = missing_since.setdefault(key, time.time())
+                    if time.time() - first_seen <= cfg.missing_result_grace_s:
+                        continue
+                    rec = dict(rec)
+                    rec["status"] = "failed"
+                    rec["error"] = (
+                        f"completed on host {rec.get('owner')} but the result "
+                        "never appeared in the shared cache"
+                    )
+                with lock:
+                    unresolved.discard(key)
+                n_failed += 1
+                remote = TaskResult.from_done_record(by_key[key], rec)
+                _notify_finished(runner, remote)
+                yield remote
+
+            # -- queue progress ---------------------------------------------
+            now = time.time()
+            if now - t_progress >= cfg.progress_every_s:
+                t_progress = now
+                prog = queue.progress()
+                hosts = ", ".join(
+                    f"{h}: {prog['claimed_by'].get(h, 0)} claimed/"
+                    f"{prog['done_by'].get(h, 0)} done"
+                    for h in sorted(set(prog["claimed_by"]) | set(prog["done_by"]))
+                )
+                _notify(
+                    runner,
+                    "queue_progress",
+                    f"{prog['done']}/{prog['total']} done" + (f" ({hosts})" if hosts else ""),
+                    **prog,
+                )
+    finally:
+        stop.set()
+        renewer.stop()
+        local.join(timeout=5.0)
+        _notify(
+            runner,
+            "run_finished",
+            f"{n_ok} ok / {n_failed} failed "
+            f"({n_cached} cached) in {time.time() - t0:.1f}s",
+            ok=n_ok,
+            failed=n_failed,
+            cached=n_cached,
+        )

@@ -10,29 +10,47 @@ failure):
                                     contains owner + lease expiry; renewed by
                                     heartbeats; an expired lease may be broken
                                     by any host (crash recovery)
-  <queue>/done/<key>.json           completion record (results live in FsCache)
+  <queue>/fails/<key>.<nonce>.json  one record per failed execution attempt
+                                    (any host); the cross-host retry budget
+                                    counts these
+  <queue>/done/<key>.json           completion record: status, owning host,
+                                    and for failures the original error +
+                                    traceback (results live in FsCache)
 
 Atomic create-exclusive is the mutex; lease renewal is the liveness signal;
 quorum is never needed because every task is idempotent (pure function +
 atomic cache writes + versioned checkpoints), so the worst case of a broken
 lease race is duplicated work, never corrupted state.
+
+Lease breaking and release never ``unlink`` a claim in place — between
+observing a claim and deleting it, another host may have legitimately
+broken the lease and re-claimed, and the unlink would destroy *their* live
+claim (both hosts then believe they own the task). Instead the claim file
+is atomically renamed (``os.replace``) to a private tombstone, its content
+is verified, and a claim that turns out to be live again is restored via a
+no-clobber hard link. Only one host's rename can win for a given claim
+file, which makes the break itself race-free.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import socket
 import time
 import uuid
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Callable, Iterable, Sequence
+from typing import Any, Callable, Collection, Sequence
 
 from .exceptions import QueueError
 from .matrix import TaskSpec
 
+log = logging.getLogger(__name__)
+
 TASKS = "tasks"
 CLAIMS = "claims"
+FAILS = "fails"
 DONE = "done"
 
 
@@ -59,7 +77,7 @@ class FileQueue:
         self.root = Path(root)
         self.lease_s = float(lease_s)
         self.owner = owner or f"{socket.gethostname()}-{os.getpid()}-{uuid.uuid4().hex[:6]}"
-        for sub in (TASKS, CLAIMS, DONE):
+        for sub in (TASKS, CLAIMS, FAILS, DONE):
             (self.root / sub).mkdir(parents=True, exist_ok=True)
 
     # -- population ---------------------------------------------------------
@@ -106,6 +124,37 @@ class FileQueue:
         )
         os.write(fd, body.encode())
 
+    def _steal_claim(self, key: str) -> tuple[Path, dict[str, Any] | None] | None:
+        """Atomically take ``key``'s claim file out of service.
+
+        Renames the claim to a tombstone private to this call, so the content
+        we then read is exactly the claim we removed — no other host can have
+        mutated it in between (their rename/replace would have lost the race).
+        Returns ``(tombstone_path, content)`` or None when no claim existed.
+        """
+        tomb = self.root / CLAIMS / f".{key}.{uuid.uuid4().hex[:8]}.tomb"
+        try:
+            os.replace(self._claim_path(key), tomb)
+        except FileNotFoundError:
+            return None
+        except OSError:
+            return None
+        try:
+            content: dict[str, Any] | None = json.loads(tomb.read_text())
+        except (OSError, json.JSONDecodeError):
+            content = None
+        return tomb, content
+
+    def _restore_claim(self, key: str, tomb: Path) -> None:
+        """Put back a stolen claim that turned out to be live (not ours to
+        break). Hard-link is atomic and refuses to clobber, so a fresh claim
+        created in the tiny steal window is never destroyed."""
+        try:
+            os.link(tomb, self._claim_path(key))
+        except OSError:
+            pass  # a fresh claim took over in the window; leave it be
+        tomb.unlink(missing_ok=True)
+
     def try_claim(self, key: str) -> bool:
         """Claim ``key``; True on success. Breaks expired leases."""
         path = self._claim_path(key)
@@ -115,11 +164,18 @@ class FileQueue:
             claim = self._read_claim(key)
             if claim is not None and claim.get("expires_unix", 0) > time.time():
                 return False  # live claim held elsewhere
-            # Expired or unreadable: break the lease, then race for the new one.
-            try:
-                path.unlink(missing_ok=True)
-            except OSError:
-                return False
+            # Expired or unreadable: break the lease by *renaming* the claim
+            # to a tombstone. Re-check the tombstone's content — between our
+            # read above and the rename, the owner may have renewed or a
+            # faster host may have broken + re-claimed; a claim that is live
+            # again is restored, not destroyed.
+            stolen = self._steal_claim(key)
+            if stolen is not None:
+                tomb, content = stolen
+                if content is not None and content.get("expires_unix", 0) > time.time():
+                    self._restore_claim(key, tomb)
+                    return False
+                tomb.unlink(missing_ok=True)  # genuinely dead: lease broken
             try:
                 fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
             except FileExistsError:
@@ -131,23 +187,138 @@ class FileQueue:
         return True
 
     def renew(self, key: str) -> None:
-        """Heartbeat: extend the lease. Raises if we no longer own it."""
+        """Heartbeat: extend the lease. Raises if we no longer own it.
+
+        Two paths. While our lease is comfortably live, a blind
+        ``os.replace`` is safe *and* windowless: peers only break expired
+        leases, so nobody may legitimately take a live claim out from under
+        us. Once the lease is near/past expiry that assumption dies — a peer
+        may have broken + re-claimed between our read and our write — so the
+        renewal switches to the same steal-verify protocol as
+        :meth:`try_claim`/:meth:`release`, which raises instead of
+        clobbering the peer's fresh claim.
+        """
         claim = self._read_claim(key)
         if claim is None or claim.get("owner") != self.owner:
             raise QueueError(
                 f"lost lease on {key[:12]} (now owned by "
                 f"{claim.get('owner') if claim else 'nobody'})"
             )
-        tmp = self._claim_path(key).with_suffix(".renew")
-        tmp.write_text(
+        margin = self.lease_s * 0.25  # tolerated cross-host clock/scan skew
+        if claim.get("expires_unix", 0) > time.time() + margin:
+            tmp = self._claim_path(key).with_suffix(".renew")
+            tmp.write_text(
+                json.dumps(
+                    {"owner": self.owner, "expires_unix": time.time() + self.lease_s}
+                )
+            )
+            os.replace(tmp, self._claim_path(key))
+            return
+        stolen = self._steal_claim(key)
+        if stolen is None:
+            raise QueueError(f"lost lease on {key[:12]} (claim vanished)")
+        tomb, content = stolen
+        if content is None or content.get("owner") != self.owner:
+            self._restore_claim(key, tomb)
+            raise QueueError(
+                f"lost lease on {key[:12]} (now owned by "
+                f"{content.get('owner') if content else 'nobody'})"
+            )
+        tomb.unlink(missing_ok=True)
+        # The claim path is momentarily absent; re-create it no-clobber so a
+        # rival that claimed in the window is not overwritten.
+        renewed = self.root / CLAIMS / f".{key}.{uuid.uuid4().hex[:8]}.renew"
+        renewed.write_text(
             json.dumps({"owner": self.owner, "expires_unix": time.time() + self.lease_s})
         )
-        os.replace(tmp, self._claim_path(key))
+        try:
+            os.link(renewed, self._claim_path(key))
+        except OSError as e:
+            raise QueueError(
+                f"lost lease on {key[:12]} (re-claimed during renewal)"
+            ) from e
+        finally:
+            renewed.unlink(missing_ok=True)
 
     def release(self, key: str) -> None:
+        """Drop our claim on ``key`` (no-op if we no longer hold it).
+
+        Ownership is verified *after* atomically renaming the claim to a
+        tombstone: if the content shows another host re-claimed in the
+        meantime (our lease expired and was broken), their claim is restored
+        instead of destroyed.
+        """
         claim = self._read_claim(key)
-        if claim is not None and claim.get("owner") == self.owner:
-            self._claim_path(key).unlink(missing_ok=True)
+        if claim is None or claim.get("owner") != self.owner:
+            return  # already released / broken; never touch a foreign claim
+        stolen = self._steal_claim(key)
+        if stolen is None:
+            return
+        tomb, content = stolen
+        if content is not None and content.get("owner") != self.owner:
+            self._restore_claim(key, tomb)
+            return
+        tomb.unlink(missing_ok=True)
+
+    # -- failure attempts -----------------------------------------------------
+    def record_failure(
+        self, key: str, error: str, traceback_str: str | None = None
+    ) -> int:
+        """Append one attempt-failure record for ``key``; returns how many
+        failed attempts are now on record across all hosts (the cross-host
+        retry budget counts these)."""
+        path = self.root / FAILS / f"{key}.{uuid.uuid4().hex[:8]}.json"
+        tmp = path.with_name(f".{path.name}.tmp")
+        tmp.write_text(
+            json.dumps(
+                {
+                    "key": key,
+                    "owner": self.owner,
+                    "error": error,
+                    "traceback": traceback_str,
+                    "failed_unix": time.time(),
+                },
+                default=str,
+            )
+        )
+        os.replace(tmp, path)
+        return len(self.failure_records(key))
+
+    def finalize_failure(
+        self,
+        key: str,
+        error: str,
+        traceback_str: str | None = None,
+        max_attempts: int = 1,
+    ) -> dict[str, Any] | None:
+        """One failed execution attempt happened here: record it, then either
+        release the claim for any host's next attempt (budget remains —
+        returns None) or write the terminal done record carrying the
+        *original* error + traceback and the attempt count (returns it)."""
+        n = self.record_failure(key, error, traceback_str)
+        if n < max_attempts:
+            self.release(key)  # leave it for any host — this one included
+            return None
+        first = (self.failure_records(key) or [{}])[0]
+        meta = {
+            "error": first.get("error") or error,
+            "traceback": first.get("traceback") or traceback_str,
+            "attempts": n,
+            "last_error": error,
+        }
+        self.mark_done(key, "failed", meta)
+        return self.read_done(key) or {"key": key, "status": "failed", **meta}
+
+    def failure_records(self, key: str) -> list[dict[str, Any]]:
+        """All recorded failed attempts for ``key``, oldest first."""
+        records = []
+        for p in (self.root / FAILS).glob(f"{key}.*.json"):
+            try:
+                records.append(json.loads(p.read_text()))
+            except (OSError, json.JSONDecodeError):
+                continue
+        records.sort(key=lambda r: r.get("failed_unix", 0.0))
+        return records
 
     # -- completion -----------------------------------------------------------
     def mark_done(self, key: str, status: str, meta: dict[str, Any] | None = None) -> None:
@@ -171,6 +342,14 @@ class FileQueue:
     def is_done(self, key: str) -> bool:
         return (self.root / DONE / f"{key}.json").exists()
 
+    def read_done(self, key: str) -> dict[str, Any] | None:
+        """The completion record for ``key`` (status, owner, error/traceback
+        for failures), or None if the task is not done."""
+        try:
+            return json.loads((self.root / DONE / f"{key}.json").read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
+
     # -- iteration --------------------------------------------------------------
     def pending_keys(self) -> list[str]:
         done = {p.stem for p in (self.root / DONE).glob("*.json")}
@@ -180,12 +359,21 @@ class FileQueue:
                 keys.append(p.stem)
         return keys
 
-    def stats(self) -> QueueStats:
-        total = sum(1 for _ in (self.root / TASKS).glob("*.json"))
-        done = sum(1 for _ in (self.root / DONE).glob("*.json"))
+    def stats(self, keys: Collection[str] | None = None) -> QueueStats:
+        """Queue totals; restricted to ``keys`` when given, so a worker that
+        only knows its own matrix version ignores foreign-published tasks."""
+        keyset = set(keys) if keys is not None else None
+
+        def known(stem: str) -> bool:
+            return keyset is None or stem in keyset
+
+        total = sum(1 for p in (self.root / TASKS).glob("*.json") if known(p.stem))
+        done = sum(1 for p in (self.root / DONE).glob("*.json") if known(p.stem))
         now = time.time()
         claimed = 0
         for p in (self.root / CLAIMS).glob("*.claim"):
+            if not known(p.stem):
+                continue
             try:
                 claim = json.loads(p.read_text())
                 if claim.get("expires_unix", 0) > now:
@@ -193,6 +381,41 @@ class FileQueue:
             except (OSError, json.JSONDecodeError):
                 continue
         return QueueStats(total=total, claimed=claimed, done=done)
+
+    def progress(self) -> dict[str, Any]:
+        """Live per-host view for dashboards: who holds claims, who finished
+        what. One directory scan, no payload reads."""
+        now = time.time()
+        claimed_by: dict[str, int] = {}
+        for p in (self.root / CLAIMS).glob("*.claim"):
+            try:
+                claim = json.loads(p.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue
+            if claim.get("expires_unix", 0) > now:
+                owner = str(claim.get("owner", "?"))
+                claimed_by[owner] = claimed_by.get(owner, 0) + 1
+        done_by: dict[str, int] = {}
+        failed = 0
+        n_done = 0
+        for p in (self.root / DONE).glob("*.json"):
+            n_done += 1
+            try:
+                rec = json.loads(p.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue
+            owner = str(rec.get("owner", "?"))
+            done_by[owner] = done_by.get(owner, 0) + 1
+            if rec.get("status") != "ok":
+                failed += 1
+        total = sum(1 for _ in (self.root / TASKS).glob("*.json"))
+        return {
+            "total": total,
+            "done": n_done,
+            "failed": failed,
+            "claimed_by": claimed_by,
+            "done_by": done_by,
+        }
 
 
 def drain(
@@ -202,24 +425,43 @@ def drain(
     on_result: Callable[[str, str, Any], None] | None = None,
     idle_rounds: int = 3,
     idle_sleep_s: float = 0.2,
+    max_attempts: int = 1,
 ) -> dict[str, str]:
     """Worker loop: claim -> execute (with lease heartbeat) -> mark done.
 
     Returns {key: status} for the tasks *this* worker completed. Multiple
     hosts call this concurrently on the same queue directory; termination is
     detected by observing ``idle_rounds`` consecutive scans with no claimable
-    work and no live foreign claims outstanding.
+    work and no live foreign claims outstanding. Keys published by a matrix
+    version this worker doesn't have (``spec is None``) are skipped AND
+    excluded from the termination accounting — they can never become
+    claimable here, so counting them would spin the loop forever.
+
+    A failed execution is terminal only once ``max_attempts`` failures are on
+    record across all hosts (see :meth:`FileQueue.record_failure`); before
+    that the claim is released so any host — this one included — can retry.
+    The terminal ``done/<key>.json`` carries the original error + traceback.
     """
     completed: dict[str, str] = {}
+    known = set(specs_by_key)
     idle = 0
+    warned_foreign = False
     while idle < idle_rounds:
         progressed = False
-        for key in queue.pending_keys():
-            if queue.is_done(key):
-                continue
+        pending = queue.pending_keys()
+        n_foreign = sum(1 for k in pending if k not in known)
+        if n_foreign and not warned_foreign:
+            warned_foreign = True
+            log.warning(
+                "file-queue %s: skipping %d task(s) published by a foreign "
+                "matrix version", queue.root, n_foreign,
+            )
+        for key in pending:
             spec = specs_by_key.get(key)
             if spec is None:
                 continue  # published by a matrix version we don't have
+            if queue.is_done(key):
+                continue
             if not queue.try_claim(key):
                 continue
             progressed = True
@@ -234,15 +476,21 @@ def drain(
                 if on_result is not None:
                     on_result(key, "ok", value)
             except Exception as e:  # noqa: BLE001 - task isolation by design
-                queue.mark_done(key, "failed", {"error": f"{type(e).__qualname__}: {e}"})
-                completed[key] = "failed"
-                if on_result is not None:
-                    on_result(key, "failed", e)
+                import traceback as _tb
+
+                error = f"{type(e).__qualname__}: {e}"
+                terminal = queue.finalize_failure(
+                    key, error, _tb.format_exc(), max_attempts=max_attempts
+                )
+                if terminal is not None:
+                    completed[key] = "failed"
+                    if on_result is not None:
+                        on_result(key, "failed", e)
         if progressed:
             idle = 0
         else:
-            stats = queue.stats()
-            if stats.available == 0 and stats.claimed == 0:
+            stats = queue.stats(keys=known)
+            if stats.available <= 0 and stats.claimed == 0:
                 idle += 1
             time.sleep(idle_sleep_s)
     return completed

@@ -14,16 +14,17 @@ over the same stream — both accept paper-schema dicts or composed matrices
 """
 from __future__ import annotations
 
-import time
+from dataclasses import replace
 from pathlib import Path
 from typing import Any, Callable, Iterator, Mapping
 
 from .cache import BaseCache, FsCache, MemoryCache, NullCache
-from .filequeue import FileQueue, drain
+from .distributed import DistributedConfig, stream_distributed
+from .filequeue import FileQueue
 from .matrix import ConfigMatrix, MatrixBase, TaskSpec, as_matrix
 from .notifications import ConsoleNotificationProvider, NotificationProvider
 from .runner import Runner, RunnerConfig
-from .task import Context, ResultSet, TaskCheckpointStore, TaskResult
+from .task import Context, ResultSet, TaskResult
 
 
 class Memento:
@@ -157,75 +158,75 @@ class Memento:
         return n
 
     # -- cluster API ------------------------------------------------------------
+    def stream_distributed(
+        self,
+        config_matrix: Mapping[str, Any] | MatrixBase,
+        queue_dir: str | Path,
+        lease_s: float = 120.0,
+        publish: bool = True,
+        max_attempts: int | None = None,
+        owner: str | None = None,
+        distributed_config: DistributedConfig | None = None,
+    ) -> Iterator[TaskResult]:
+        """Cooperatively drain ``config_matrix`` with other launcher hosts,
+        yielding each task's final result as soon as it is known *anywhere*.
+
+        Every participating host calls this with the same matrix + queue_dir
+        (a shared filesystem) and a shared ``workdir`` (the FsCache is how
+        results travel between hosts). Cache hits stream out first; then the
+        host's full local Runner (thread pool, retries, timeouts, straggler
+        speculation) drains the queue while completions from *other* hosts —
+        discovered by polling ``done/`` + the shared cache — interleave into
+        the same stream. A background thread renews the lease of every
+        locally-claimed task, so tasks need not call ``ctx.heartbeat()`` to
+        stay alive; host death is covered by lease expiry + re-claim.
+
+        Failures are retried across hosts: up to ``max_attempts`` queue-level
+        attempts (each one a full local run, including this host's own
+        ``RunnerConfig.retries``) may land on any mix of hosts, after which
+        the task surfaces as ``failed`` carrying the original error and
+        traceback from ``done/<key>.json``.
+        """
+        specs = self._specs(config_matrix)
+        queue = FileQueue(queue_dir, lease_s=lease_s, owner=owner)
+        if publish:
+            queue.publish(specs)
+        runner = Runner(
+            self.exp_func,
+            cache=self.cache,
+            provider=self.provider,
+            config=self.runner_config,
+            checkpoint_root=self._ckpt_root,
+            manifest_extra={"namespace": self.namespace},
+        )
+        cfg = distributed_config or DistributedConfig()
+        if max_attempts is not None:
+            # explicit argument wins over (or fills in) the config object
+            cfg = replace(cfg, max_attempts=max_attempts)
+        return stream_distributed(runner, queue, specs, cfg)
+
     def run_distributed(
         self,
         config_matrix: Mapping[str, Any] | MatrixBase,
         queue_dir: str | Path,
         lease_s: float = 120.0,
         publish: bool = True,
+        max_attempts: int | None = None,
+        owner: str | None = None,
+        distributed_config: DistributedConfig | None = None,
     ) -> ResultSet:
-        """Cooperatively drain ``config_matrix`` with other launcher hosts.
-
-        Every participating host calls this with the same matrix + queue_dir
-        (a shared filesystem). Tasks are claimed via leases; results land in
-        the shared FsCache so *all* hosts can assemble the full ResultSet at
-        the end. Survives host death: expired leases are re-claimed.
-        """
-        specs = self._specs(config_matrix)
-        by_key = {s.key: s for s in specs}
-        queue = FileQueue(queue_dir, lease_s=lease_s)
-        if publish:
-            queue.publish(specs)
-
-        def execute(spec: TaskSpec, beat: Callable[[], None]) -> Any:
-            cached = self.cache.get(spec.key)
-            if cached is not None:
-                return cached.value
-            ckpts = (
-                TaskCheckpointStore(self._ckpt_root, spec.key) if self._ckpt_root else None
+        """Blocking collector over :meth:`stream_distributed` — every host
+        gets the full matrix's ResultSet (ours + peers'), in matrix order,
+        with failure results carrying the real error from whichever host
+        recorded it."""
+        return ResultSet(
+            self.stream_distributed(
+                config_matrix,
+                queue_dir,
+                lease_s=lease_s,
+                publish=publish,
+                max_attempts=max_attempts,
+                owner=owner,
+                distributed_config=distributed_config,
             )
-            ctx = Context(spec=spec, checkpoints=ckpts, _heartbeat=beat)
-            t0 = time.time()
-            value = self.exp_func(ctx)
-            from .cache import param_repr
-
-            self.cache.put(
-                spec.key,
-                value,
-                manifest={
-                    "params": {k: param_repr(v) for k, v in spec.params.items()},
-                    "namespace": self.namespace,
-                    "wall_s": time.time() - t0,
-                },
-            )
-            return value
-
-        def on_result(key: str, status: str, value: Any) -> None:
-            res = TaskResult(
-                spec=by_key[key],
-                status="ok" if status == "ok" else "failed",
-                value=value if status == "ok" else None,
-                error=None if status == "ok" else str(value),
-            )
-            try:
-                self.provider.task_finished(res)
-            except Exception:
-                pass
-
-        drain(queue, by_key, execute, on_result=on_result)
-
-        # Assemble the global view (ours + peers') from the shared cache/queue.
-        results: list[TaskResult] = []
-        for spec in specs:
-            entry = self.cache.get(spec.key)
-            if entry is not None:
-                results.append(
-                    TaskResult(spec=spec, status="cached", value=entry.value)
-                )
-            elif queue.is_done(spec.key):
-                results.append(
-                    TaskResult(spec=spec, status="failed", error="failed on a peer host")
-                )
-            else:
-                results.append(TaskResult(spec=spec, status="skipped"))
-        return ResultSet(results)
+        ).materialize()

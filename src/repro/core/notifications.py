@@ -152,6 +152,14 @@ class ProgressNotificationProvider(NotificationProvider):
     are only visible on the stream path, since hits bypass execution).
     The ETA extrapolates the observed live-completion rate over the
     remaining tasks; cached results are instant and excluded from the rate.
+
+    On a distributed run it additionally consumes the driver's periodic
+    ``queue_progress`` events, rendering the cluster-wide view with live
+    per-host claimed/done counts::
+
+        [memento] queue 12/40 done (hostA-1: 3 claimed/5 done, hostB-2: ...)
+
+    The latest snapshot stays available as ``prov.queue_state``.
     """
 
     def __init__(
@@ -166,6 +174,7 @@ class ProgressNotificationProvider(NotificationProvider):
         self.done = 0  # ok + failed + cached
         self.failed = 0
         self.cached = 0
+        self.queue_state: dict[str, Any] | None = None  # last queue_progress
         self._t0: float | None = None
         self._t_last_print = 0.0
         self._lock = threading.Lock()
@@ -194,6 +203,10 @@ class ProgressNotificationProvider(NotificationProvider):
         with self._lock:
             if event.kind == "run_started":
                 self._t0 = time.time()
+                return
+            if event.kind == "queue_progress":
+                self.queue_state = dict(event.payload)
+                self._render_queue()
                 return
             if event.kind not in ("task_finished", "task_failed"):
                 return
@@ -229,6 +242,22 @@ class ProgressNotificationProvider(NotificationProvider):
         eta = self.eta_s()
         eta_s = f" ETA {eta:.0f}s" if eta is not None else ""
         print(f"[memento] {self.done}{total} done{detail}{eta_s}", file=self.stream)
+
+    def _render_queue(self) -> None:
+        q = self.queue_state or {}
+        hosts = sorted(set(q.get("claimed_by", {})) | set(q.get("done_by", {})))
+        per_host = ", ".join(
+            f"{h}: {q.get('claimed_by', {}).get(h, 0)} claimed/"
+            f"{q.get('done_by', {}).get(h, 0)} done"
+            for h in hosts
+        )
+        failed = f", {q['failed']} failed" if q.get("failed") else ""
+        detail = f" ({per_host})" if per_host else ""
+        print(
+            f"[memento] queue {q.get('done', 0)}/{q.get('total', 0)} done"
+            f"{failed}{detail}",
+            file=self.stream,
+        )
 
 
 class MultiProvider(NotificationProvider):

@@ -236,9 +236,35 @@ class Runner:
     def _stream_threads(self, specs: Sequence[TaskSpec]) -> Iterator[TaskResult]:
         if not specs:
             return
+        yield from self.stream_source(iter(specs))
+
+    def stream_source(
+        self, source: "Iterator[TaskSpec | None]"
+    ) -> Iterator[TaskResult]:
+        """Thread-mode streaming over an *incremental* spec source.
+
+        ``source`` is pulled between supervision rounds: each ``TaskSpec`` it
+        yields is submitted to the pool immediately; ``None`` means "nothing
+        available right now, ask again next round" (the pull resumes on the
+        following round); exhaustion (``StopIteration``) means no further
+        specs will ever arrive. The stream terminates once the source is
+        exhausted and every submitted task is finalised.
+
+        This is what lets an external work feed — the distributed file-queue
+        claim loop — drive the full local machinery (thread pool, retries,
+        hard timeouts, straggler speculation) instead of a one-task-at-a-time
+        loop. A plain ``iter(list_of_specs)`` reproduces :meth:`run` exactly.
+
+        Re-yielding a key that was already finalised resets that task's
+        attempt state and runs it afresh — the distributed driver uses this
+        for queue-level (cross-host) retry rounds. Only re-feed a key after
+        consuming its previous final result.
+        """
         cfg = self.config
         n_spec_launched = 0
-        attempts_failed = {s.key: 0 for s in specs}  # failed attempts per task
+        attempts_failed: dict[str, int] = {}  # failed attempts per task
+        submitted: dict[str, TaskSpec] = {}
+        source_exhausted = False
         retry_at: list[tuple[float, TaskSpec]] = []
         attempts: dict[str, list[_Attempt]] = {}
         done_keys: set[str] = set()
@@ -256,6 +282,8 @@ class Runner:
         try:
 
             def submit(spec: TaskSpec, speculative: bool = False) -> None:
+                submitted[spec.key] = spec
+                attempts_failed.setdefault(spec.key, 0)
                 number = len(attempts.get(spec.key, [])) + 1
                 holder = _Attempt(
                     spec=spec,
@@ -284,7 +312,14 @@ class Runner:
                     attempt=number,
                 )
 
-            for spec in specs:
+            def admit(spec: TaskSpec) -> None:
+                with lock:
+                    if spec.key in done_keys:
+                        # Re-fed after finalisation (queue-level retry):
+                        # forget the previous round's attempt state.
+                        done_keys.discard(spec.key)
+                        attempts_failed[spec.key] = 0
+                        attempts.pop(spec.key, None)
                 submit(spec)
 
             def record_success(att: _Attempt, value: Any) -> None:
@@ -367,9 +402,22 @@ class Runner:
             # -- supervision loop ---------------------------------------------
             failed_seen = False
             while True:
+                # Pull newly available work. A list source is drained whole on
+                # the first round (the classic submit-everything-upfront); an
+                # incremental source hands over what it has and yields None.
+                if not source_exhausted:
+                    while True:
+                        try:
+                            item = next(source)
+                        except StopIteration:
+                            source_exhausted = True
+                            break
+                        if item is None:
+                            break  # nothing available this round
+                        admit(item)
                 with lock:
                     n_done = len(done_keys)
-                if n_done == len(specs):
+                if source_exhausted and n_done == len(submitted):
                     break
                 if cfg.fail_fast and failed_seen:
                     break

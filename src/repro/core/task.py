@@ -183,6 +183,28 @@ class TaskResult:
             wall_s=time.time() - started,
         )
 
+    @classmethod
+    def from_done_record(
+        cls, spec: TaskSpec, record: dict[str, Any], value: Any = None
+    ) -> "TaskResult":
+        """Build a result from a file-queue ``done/<key>.json`` record — how
+        one host surfaces a task another host executed, with the *real* error
+        + traceback and the owning host rather than a generic placeholder."""
+        status = "ok" if record.get("status") == "ok" else "failed"
+        error = record.get("error")
+        if status != "ok" and not error:
+            error = f"failed on host {record.get('owner', '?')} (no error recorded)"
+        return cls(
+            spec=spec,
+            status=status,
+            value=value,
+            error=None if status == "ok" else str(error),
+            traceback_str=record.get("traceback") or None,
+            attempts=int(record.get("attempts", 1) or 1),
+            wall_s=float(record.get("wall_s", 0.0) or 0.0),
+            host=str(record.get("owner", "peer")),
+        )
+
     def summary(self) -> str:
         base = f"{self.spec.describe()} -> {self.status} in {self.wall_s:.2f}s"
         if self.error:

@@ -16,7 +16,13 @@ results, and resume for free instead of hand-rolled loops.
 (process-mode safe); ``serve_matrix`` / ``train_matrix`` build the matching
 ``ConfigMatrix`` — compose further with ``+``/``*``/``where``/``derive``.
 """
-from .serve import serve_matrix, serve_sweep
+from .serve import serve_matrix, serve_sweep, serve_sweep_distributed
 from .train import train_matrix, train_sweep
 
-__all__ = ["serve_sweep", "serve_matrix", "train_sweep", "train_matrix"]
+__all__ = [
+    "serve_sweep",
+    "serve_matrix",
+    "serve_sweep_distributed",
+    "train_sweep",
+    "train_matrix",
+]

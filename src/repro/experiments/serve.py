@@ -72,6 +72,45 @@ def serve_matrix(
     return ConfigMatrix.from_dict({"parameters": params, "settings": dict(workload)})
 
 
+def serve_sweep_distributed(
+    matrix,
+    queue_dir,
+    workdir,
+    namespace: str = "serve",
+    lease_s: float = 600.0,
+    max_attempts: int = 3,
+    notification_provider=None,
+    runner_config=None,
+    stream: bool = False,
+    owner: str | None = None,
+):
+    """Drain one serving sweep cooperatively across launcher hosts.
+
+    Every host calls this with the same ``matrix``, ``queue_dir`` and
+    ``workdir`` (both on a shared filesystem); tasks are leased through the
+    file queue, metrics land in the shared FsCache, and each host returns
+    the *full* sweep's ResultSet (or, with ``stream=True``, an iterator of
+    results in completion order — cache hits first, then completions from
+    any host). The default lease is generous because one serving cell
+    includes model compiles; the runtime's background renewer keeps it
+    alive however long a cell runs.
+    """
+    from repro.core import Memento, RunnerConfig
+
+    eng = Memento(
+        serve_sweep,
+        notification_provider=notification_provider,
+        workdir=workdir,
+        namespace=namespace,
+        runner_config=runner_config
+        or RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    method = eng.stream_distributed if stream else eng.run_distributed
+    return method(
+        matrix, queue_dir, lease_s=lease_s, max_attempts=max_attempts, owner=owner
+    )
+
+
 def serve_sweep(ctx: Context) -> dict[str, Any]:
     """Experiment function: drive one serving configuration, return metrics."""
     arch = ctx["arch"]

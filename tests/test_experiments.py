@@ -78,6 +78,31 @@ class TestServeSweep:
         assert len(tasks) == 8
         assert {t.params["paged"] for t in tasks} == {True, False}
 
+    def test_serve_sweep_distributed_across_hosts(self, tmp_path):
+        """The ROADMAP item: a serve sweep drained through the file-queue.
+        One 'host' executes the cells; a second host (same shared workdir +
+        queue) assembles the identical full ResultSet without re-running —
+        everything arrives via the shared cache / done records."""
+        from repro.experiments import serve_sweep_distributed
+
+        matrix = serve_matrix(
+            ["llama3.2-3b"], backends=["xla"], scheduler={"n_slots": [2]},
+            cache_len=64, n_requests=2, prompt_lens=(5, 9), max_new_tokens=3,
+            warmup=False,
+        )
+        first = serve_sweep_distributed(
+            matrix, queue_dir=tmp_path / "q", workdir=tmp_path / "w",
+            owner="host-a",
+        )
+        assert [r.status for r in first] == ["ok"]
+        assert first[0].value["generated_tokens"] == 2 * 3
+        second = serve_sweep_distributed(
+            matrix, queue_dir=tmp_path / "q", workdir=tmp_path / "w",
+            owner="host-b",
+        )
+        assert [r.status for r in second] == ["cached"]
+        assert second[0].value["tokens"] == first[0].value["tokens"]
+
 
 class TestTrainSweep:
     def test_train_sweep_through_memento_and_cache(self, tmp_path):
