@@ -350,6 +350,74 @@ def bench_serve_chunked(smoke: bool = False) -> None:
         _row("B11_token_identity", 0.0, "MISMATCH between chunked and off")
 
 
+def bench_serve_prefix(smoke: bool = False) -> None:
+    """B13: prompt-prefix sharing on a shared-system-prompt workload.
+
+    One Memento matrix with ``prefix_sharing`` as the axis drives the same
+    workload in which every prompt starts with one shared system prompt. A
+    primer request registers the prefix pages before the timed window (its
+    solo TTFT is reported as ttft_cold); with sharing on, every timed
+    request adopts the registered pages instead of recomputing them —
+    warm-prefix TTFT drops below the no-sharing arm's cold-prefix TTFT on
+    the identical contended workload, and peak page bytes drop below the
+    no-sharing baseline because N slots map one physical copy of the
+    prefix. Greedy token identity between the two rows is asserted:
+    sharing is a memory/latency change, not a sampling change.
+    """
+    from repro.core import Memento, RunnerConfig
+    from repro.experiments import serve_matrix, serve_sweep
+
+    if smoke:
+        cache_len, page, budget, shared_len = 96, 8, 16, 32
+        prompts, rate, max_new = (4, 9, 6, 4), 0.0, 4
+    else:
+        cache_len, page, budget, shared_len = 4224, 64, 256, 1024
+        prompts, rate, max_new = (32, 64, 32, 128, 32, 64, 32, 96), 6.0, 8
+    matrix = serve_matrix(
+        ["llama3.2-3b"], backends=["xla"],
+        scheduler={"prefix_sharing": [False, True]},
+        cache_len=cache_len, n_slots=4, page_size=page, chunk_budget=budget,
+        n_requests=len(prompts), prompt_lens=prompts,
+        shared_prefix_len=shared_len, prime_prefix=True,
+        max_new_tokens=max_new, arrival_rate_hz=rate, warmup=True,
+    )
+    eng = Memento(
+        serve_sweep, namespace="serve",
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    rows = {}
+    for r in eng.run(matrix, cache=False):
+        v = _value(r)
+        label = "sharing_on" if v["prefix_sharing"] else "sharing_off"
+        rows[label] = v
+        warm = v["ttft_warm_p50_s"] or v["ttft_p50_s"]
+        _row(
+            f"B13_serve_prefix_{label}_{len(prompts)}req",
+            v["wall_s"] * 1e6,
+            f"{v['tokens_per_s']:.1f} tok/s ttft_cold={v['ttft_cold_s']*1e3:.0f}ms "
+            f"ttft_warm_p50={warm*1e3:.0f}ms prefix_hits={v['prefix_hits']} "
+            f"hit_tokens={v['prefix_hit_tokens']} "
+            f"peak_cache_bytes={v['peak_cache_bytes']}",
+        )
+    if len(rows) == 2:
+        on, off = rows["sharing_on"], rows["sharing_off"]
+        if on["tokens"] != off["tokens"]:
+            _row("B13_token_identity", 0.0, "MISMATCH between sharing on and off")
+        # cold baseline = the sharing-off arm's TTFT p50: the same timed
+        # requests under the same contention, just with cold prefixes (the
+        # primer's solo ttft_cold is uncontended and not comparable)
+        warm_lt_cold = (on["ttft_warm_p50_s"] or float("inf")) < off["ttft_p50_s"]
+        mem_lt_off = on["peak_cache_bytes"] < off["peak_cache_bytes"]
+        _row(
+            "B13_prefix_wins", 0.0,
+            f"warm_ttft_lt_cold={warm_lt_cold} "
+            f"({(on['ttft_warm_p50_s'] or 0) * 1e3:.0f}ms vs "
+            f"{off['ttft_p50_s'] * 1e3:.0f}ms) "
+            f"peak_bytes_lt_nosharing={mem_lt_off} "
+            f"({on['peak_cache_bytes']} vs {off['peak_cache_bytes']})",
+        )
+
+
 def bench_serve_smoke() -> None:
     """Tiny B9/B10/B11 rows for CI: one smoke-scale model, second-scale
     workloads, still through Memento + serve_sweep end-to-end."""
@@ -569,12 +637,14 @@ def main(smoke: bool = False) -> None:
     bench_failure_isolation()
     if smoke:
         bench_serve_smoke()
+        bench_serve_prefix(smoke=True)
         return
     bench_kernels()
     bench_train_sweep()
     bench_serve_throughput()
     bench_serve_paged()
     bench_serve_chunked()
+    bench_serve_prefix()
     bench_roofline_summary()
 
 

@@ -20,8 +20,20 @@ Axes/settings understood by :func:`serve_sweep`:
   min_chunk              smallest chunk bucket (default 16)
   preemption             "off" | "swap" | "recompute" (reservation-free
                          admission + LRU page reclaim; needs chunk_budget)
+  prefix_sharing         adopt indexed prompt-prefix pages (default True;
+                         effective on fully-paged streaming models)
+  tenant_quota           per-tenant worst-case page cap (default None)
+  tenant_weights         {tenant: weight} stride-fair admission (default None)
   n_requests             workload size (default 8)
   prompt_lens            cycled prompt lengths (default (4, 8, 12))
+  shared_prefix_len      tokens of one shared prompt prefix prepended to
+                         every request (default 0; the prefix-sharing
+                         workload knob — prompt_lens become tail lengths)
+  prime_prefix           pre-submit one prefix-only request before timing so
+                         the timed requests hit a warm prefix index
+                         (default False; its TTFT is reported as ttft_cold_s)
+  n_tenants              round-robin requests over this many tenants
+                         ("t0".."tN-1", default 1)
   max_new_tokens         per-request decode budget (default 8)
   temperature            0 => greedy (default)
   arrival_rate_hz        Poisson arrival rate; 0/absent => offline batch
@@ -137,6 +149,9 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         chunk_budget=None if chunk_budget is None else int(chunk_budget),
         min_chunk=int(_opt(ctx, "min_chunk", 16)),
         preemption=str(_opt(ctx, "preemption", "off")),
+        prefix_sharing=bool(_opt(ctx, "prefix_sharing", True)),
+        tenant_quota=_opt(ctx, "tenant_quota", None),
+        tenant_weights=_opt(ctx, "tenant_weights", None),
         seed=int(_opt(ctx, "seed", 0)),
     )
     sched = Scheduler(cfg, params, ShardingCtx.null(), sched_cfg)
@@ -144,27 +159,48 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     rng = np.random.default_rng(int(_opt(ctx, "seed", 0)))
     n_req = int(_opt(ctx, "n_requests", 8))
     prompt_lens = [int(p) for p in _opt(ctx, "prompt_lens", (4, 8, 12))]
+    shared_len = int(_opt(ctx, "shared_prefix_len", 0))
+    n_tenants = int(_opt(ctx, "n_tenants", 1))
     max_new = int(_opt(ctx, "max_new_tokens", 8))
     temperature = float(_opt(ctx, "temperature", 0.0))
     lens = [prompt_lens[i % len(prompt_lens)] for i in range(n_req)]
+    shared = rng.integers(0, cfg.vocab_size, size=shared_len).astype(np.int32)
     requests = [
         Request(
-            rng.integers(0, cfg.vocab_size, size=p).astype(np.int32),
+            np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, size=p).astype(np.int32)]
+            ),
             max_new_tokens=max_new,
             temperature=temperature,
+            tenant=f"t{i % n_tenants}",
         )
-        for p in lens
+        for i, p in enumerate(lens)
     ]
 
     if _opt(ctx, "warmup", True):
         # Compile every prompt-length bucket + the decode step outside the
         # timed window so the measured run sees steady-state latencies.
-        for p in sorted(set(lens)):
+        warm_lens = {shared_len + p for p in lens}
+        if shared_len and _opt(ctx, "prime_prefix", False):
+            warm_lens.add(shared_len)  # the primer's own bucket
+        for p in sorted(warm_lens):
             sched.submit(Request(np.zeros(p, np.int32), max_new_tokens=2))
         sched.run()
         if sched.pool is not None:
             sched.pool.reset_peaks()
         sched.deferred_admissions = 0
+
+    ttft_cold = None
+    if shared_len and _opt(ctx, "prime_prefix", False):
+        # Prime the prefix index: one prefix-only request registers the
+        # shared pages (its TTFT is the cold-prefix cost), so every timed
+        # request adopts instead of recomputing the shared span.
+        primer = sched.submit(Request(shared, max_new_tokens=1))
+        while sched.pending or sched.num_active:
+            sched.step()
+        ttft_cold = sched.result(primer).ttft_s
+        if sched.pool is not None:
+            sched.pool.reset_peaks()
 
     rate = float(_opt(ctx, "arrival_rate_hz", 0.0) or 0.0)
     # Scope work counters past warmup (trace counters stay cumulative:
@@ -172,6 +208,8 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     steps_before = sched.total_decode_steps
     chunks_before = sched.total_chunk_steps
     preempts_before = sched.preemptions_total
+    hits_before = sched.prefix_hits
+    hit_tokens_before = sched.prefix_hit_tokens
     t0 = time.perf_counter()
     if rate > 0.0:
         arrivals = np.cumsum(rng.exponential(scale=1.0 / rate, size=n_req))
@@ -202,6 +240,7 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     itl = [gap for rs in done for gap in rs.inter_token_s()]
     itl_a = np.array(itl) if itl else np.zeros(1)
     cache_bytes = sched.paged_cache_bytes()
+    warm_ttft = np.array([rs.ttft_s for rs in done if rs.adopted_tokens > 0])
     return {
         "arch": arch,
         "attn_backend": backend,
@@ -220,11 +259,19 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         "prefill_traces": sched.prefill_traces,
         "chunk_traces": sched.chunk_traces,
         "deferred_admissions": sched.stats()["deferred_admissions"],
+        "quota_deferrals": sched.quota_deferrals,
         "preemptions": sched.preemptions_total - preempts_before,
+        "prefix_hits": sched.prefix_hits - hits_before,
+        "prefix_hit_tokens": sched.prefix_hit_tokens - hit_tokens_before,
+        "ttft_cold_s": ttft_cold,
+        "ttft_warm_p50_s": (
+            float(np.percentile(warm_ttft, 50)) if warm_ttft.size else None
+        ),
         "peak_cache_bytes": cache_bytes["peak_bytes"],
         "contiguous_cache_bytes": cache_bytes["contiguous_bytes"],
         "paged": sched_cfg.paged,
         "chunk_budget": sched_cfg.chunk_budget,
         "preemption": sched_cfg.preemption,
+        "prefix_sharing": sched_cfg.prefix_sharing,
         "tokens": [rs.tokens for rs in done],
     }

@@ -301,6 +301,14 @@ def _chunk_attend(
             # Dense: scatter the chunk into its pages first (pads -> trash),
             # then attend over the whole table — stale or trash-backed slots
             # fall out of the positional mask automatically.
+            #
+            # Shared-page invariant: with prefix sharing a table entry may
+            # map a page other slots also read. This write is safe because
+            # the scheduler (a) only streams chunks at or past the slot's
+            # first unadopted position and (b) runs PagePool.prepare_write
+            # over [start, start + chunk_len) before launching the chunk,
+            # forking any still-shared page — so every page written here is
+            # exclusively owned (refcount 1) by the time the program runs.
             pid = jnp.where(valid_tok, page_table[0, qpos // page], trash)
             off = qpos % page
             ck = cache.k.at[pid, off].set(k[0].astype(cache.k.dtype))
@@ -438,7 +446,14 @@ def gqa_attention(
         # and this slot's logical token s lives in physical page
         # page_table[b, s // page] at offset s % page. Retired slots' table
         # rows all point at the trash page (index P), so their frozen-pos
-        # garbage writes can never corrupt a live tenant's pages.
+        # garbage writes can never corrupt a live tenant's pages. With
+        # prefix sharing, pages can additionally be mapped by several
+        # live slots (refcounted); this one-token write is still safe:
+        # decode positions sit past the prompt, adopted/indexed pages
+        # cover only full *prompt* pages, and the scheduler runs
+        # PagePool.prepare_write (copy-on-write fork) on the write
+        # position before every decode step — a written page is always
+        # refcount-1 private by the time this program runs.
         B = q.shape[0]
         page = cache.k.shape[1]
         max_pages = page_table.shape[1]

@@ -23,7 +23,7 @@ from repro.models import recurrent as rec_mod
 from repro.models.attention import KVCache, MLACache
 from repro.models.layers import cdt, mlp, mlp_schema, rmsnorm, rmsnorm_schema
 from repro.models.recurrent import MLSTMState, RGLRUState, SLSTMState
-from repro.models.schema import ParamSpec, stack_specs
+from repro.models.schema import LeafLayout, ParamSpec, layout_for_spec, stack_specs
 from repro.sharding.rules import ShardingCtx
 
 F32 = jnp.float32
@@ -365,31 +365,54 @@ def fresh_stack_states(cfg: ModelConfig, states: dict[str, Any]) -> dict[str, An
     return out
 
 
-def _block_paged_caps(cfg: ModelConfig, kind: str, s_max: int) -> dict[str, Any] | None:
-    """Per-leaf logical token capacity: >0 for pool leaves, 0 for per-slot."""
-    if kind in paged_kv_kinds(cfg):
+def _block_layouts(
+    cfg: ModelConfig, kind: str, s_max: int, paged: bool, stacked: bool
+) -> dict[str, Any] | None:
+    """Per-leaf :class:`LeafLayout` metadata for one block's decode state.
+
+    Pool leaves are tagged ``paged`` with their logical token capacity;
+    everything else derives its layout from the ParamSpec axis *names*
+    (``window`` -> ring, ``kv_seq``/``frames`` -> dense, neither -> copy),
+    so leaves with coinciding shapes can never be confused. ``stacked``
+    group leaves carry their leading "layer" axis in the stacked spec,
+    which shifts the derived axis indices automatically.
+    """
+    if paged and kind in paged_kv_kinds(cfg):
         cap = cfg.window_size if kind == "local_attn" else s_max
-        return {"k": cap, "v": cap}
+        lay = LeafLayout("paged", cap=cap)
+        return {"k": lay, "v": lay}
     raw = block_state_schema(cfg, kind, 1, s_max)
-    return jax.tree.map(lambda _: 0, raw, is_leaf=lambda x: isinstance(x, ParamSpec))
+    if stacked:
+        raw = stack_specs(raw, 1)  # layer axis name only; count is irrelevant
+    return jax.tree.map(layout_for_spec, raw, is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
-def stack_paged_caps(cfg: ModelConfig, s_max: int) -> dict[str, Any]:
-    """A pytree congruent with ``stack_state_schema`` whose int leaves give
-    each leaf's logical capacity when paged (0 = per-slot contiguous).
-    Stacking adds a leading layer axis but not tree structure, so the
-    unstacked caps line up with stacked group states."""
+def stack_layouts(cfg: ModelConfig, s_max: int, paged: bool = True) -> dict[str, Any]:
+    """A pytree congruent with ``stack_state_schema`` whose leaves are
+    :class:`LeafLayout` records. Stacking adds a leading layer axis but not
+    tree structure, so the per-block layouts line up with stacked group
+    states (their axis indices account for the layer axis)."""
     sch: dict[str, Any] = {}
     if cfg.first_blocks:
         sch["first"] = {
-            f"b{i}": _block_paged_caps(cfg, k, s_max)
+            f"b{i}": _block_layouts(cfg, k, s_max, paged, stacked=False)
             for i, k in enumerate(cfg.first_blocks)
         }
     sch["groups"] = {
-        f"g{i}": _block_paged_caps(cfg, k, s_max)
+        f"g{i}": _block_layouts(cfg, k, s_max, paged, stacked=True)
         for i, k in enumerate(cfg.block_pattern)
     }
     return sch
+
+
+def stack_paged_caps(cfg: ModelConfig, s_max: int) -> dict[str, Any]:
+    """Int view of :func:`stack_layouts`: each leaf's logical capacity when
+    paged (0 = per-slot contiguous)."""
+    return jax.tree.map(
+        lambda lay: lay.cap if lay.kind == "paged" else 0,
+        stack_layouts(cfg, s_max, paged=True),
+        is_leaf=lambda x: isinstance(x, LeafLayout),
+    )
 
 
 def apply_stack(

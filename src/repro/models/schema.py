@@ -46,6 +46,51 @@ class ParamSpec:
         return n
 
 
+@dataclass(frozen=True)
+class LeafLayout:
+    """Explicit cache-layout metadata for one decode-state leaf.
+
+    Serving-side state surgery (serve/cache.py) used to locate a leaf's
+    cache-sequence / batch axis by diffing source and target shapes —
+    which silently mis-grafts when a windowed, MLA, or paged leaf happens
+    to coincide in shape with a different layout. A ``LeafLayout`` is
+    derived once from the leaf's :class:`ParamSpec` axis *names* (the
+    same single source of truth the shardings come from) and dispatches
+    the graft explicitly:
+
+      * ``paged``  — lives in the shared page pool; ``cap`` is the leaf's
+        logical token capacity (cache_len dense / window_size ring),
+      * ``dense``  — contiguous KV rows, left-aligned grafts along
+        ``seq_axis`` (source must fit the target: a longer source is a
+        loud error, never a silent ring-fold),
+      * ``ring``   — windowed ring buffer along ``seq_axis``; position p
+        lands at slot ``p % W``,
+      * ``copy``   — sequence-length-independent state (recurrent h/conv,
+        cross-encoder KV): shapes must match exactly.
+
+    Axis indices are measured on the actual serving arrays — scan-stacked
+    group leaves carry their leading "layer" axis in the spec, so no
+    offset bookkeeping is needed.
+    """
+
+    kind: str  # "paged" | "dense" | "ring" | "copy"
+    seq_axis: int = -1  # cache-sequence axis (dense/ring)
+    batch_axis: int = -1  # slot/batch axis (absent on pool leaves)
+    cap: int = 0  # paged: logical token capacity
+
+
+def layout_for_spec(spec: "ParamSpec") -> LeafLayout:
+    """Derive a non-pool leaf's layout from its axis names."""
+    axes = spec.axes
+    batch = axes.index("batch") if "batch" in axes else -1
+    if "window" in axes:
+        return LeafLayout("ring", seq_axis=axes.index("window"), batch_axis=batch)
+    for name in ("kv_seq", "frames"):
+        if name in axes:
+            return LeafLayout("dense", seq_axis=axes.index(name), batch_axis=batch)
+    return LeafLayout("copy", batch_axis=batch)
+
+
 def is_spec(x: Any) -> bool:
     return isinstance(x, ParamSpec)
 

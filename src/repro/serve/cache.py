@@ -26,6 +26,15 @@ off); padded positions beyond ``prompt_len`` may land in the cache as
 garbage, which is safe everywhere a cache is read through positional
 validity masking plus the decode write-before-read invariant.
 
+Grafts dispatch on explicit :class:`repro.models.schema.LeafLayout`
+metadata when a congruent ``layouts`` pytree is supplied (derived from
+the state schema's axis names by ``blocks.stack_layouts``): dense leaves
+left-align and *refuse* a source longer than the target, ring leaves
+fold, copy leaves require exact shapes. Without layouts the legacy
+shape-diff guessing is used — kept for direct callers, but the shape
+heuristic cannot tell a ring leaf from a dense leaf whose sizes happen
+to coincide, which is exactly the mis-graft the metadata closes off.
+
 All grafts preserve the destination dtype (bf16 caches stay bf16 even
 when the prefill ran in fp32).
 """
@@ -35,6 +44,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.models.schema import LeafLayout
 
 
 def _ring_fill(
@@ -55,9 +66,46 @@ def _ring_fill(
 
 
 def _graft_leaf(
-    dst: jax.Array, src: jax.Array, prompt_len: jax.Array | int
+    dst: jax.Array,
+    src: jax.Array,
+    prompt_len: jax.Array | int,
+    layout: LeafLayout | None = None,
 ) -> jax.Array:
     d, s = jnp.asarray(dst), jnp.asarray(src)
+    if layout is not None:
+        if d.ndim != s.ndim:
+            raise ValueError(f"cannot graft cache {s.shape} -> {d.shape}")
+        if layout.kind == "copy":
+            if d.shape != s.shape:
+                raise ValueError(
+                    f"copy-layout leaf requires matching shapes, got {s.shape} -> {d.shape}"
+                )
+            return s.astype(d.dtype)
+        ax = layout.seq_axis
+        dm = jnp.moveaxis(d, ax, 0)
+        sm = jnp.moveaxis(s, ax, 0)
+        rest_d = dm.shape[1:]
+        rest_s = sm.shape[1:]
+        if rest_d != rest_s:
+            raise ValueError(f"cannot graft cache {s.shape} -> {d.shape}")
+        W = dm.shape[0]
+        if layout.kind == "ring":
+            if sm.shape[0] >= W:
+                dm = _ring_fill(dm, sm, prompt_len, W)
+            else:  # prefill ran at a bucket shorter than the window
+                dm = dm.at[: sm.shape[0]].set(sm.astype(dm.dtype))
+        elif layout.kind == "dense":
+            if sm.shape[0] > W:
+                # Without metadata this case used to silently ring-fold.
+                raise ValueError(
+                    f"dense cache graft source {s.shape} exceeds target {d.shape} "
+                    f"along seq axis {ax}"
+                )
+            dm = dm.at[: sm.shape[0]].set(sm.astype(dm.dtype))
+        else:
+            raise ValueError(f"cannot graft layout {layout.kind!r} leaf")
+        return jnp.moveaxis(dm, 0, ax)
+    # Legacy shape-diff guessing (no layout metadata supplied).
     if d.shape == s.shape:
         return s.astype(d.dtype)
     if d.ndim != s.ndim:
@@ -79,15 +127,28 @@ def _graft_leaf(
 
 
 def graft_states(
-    target_layers: Any, prefill_layers: Any, prompt_len: jax.Array | int
+    target_layers: Any,
+    prefill_layers: Any,
+    prompt_len: jax.Array | int,
+    layouts: Any = None,
 ) -> Any:
     """Graft prefill-length layer states into serving-length layer states.
 
     ``prompt_len`` may be a Python int or a traced scalar (one compiled
     program per prefill *shape*, shared by every true length in a bucket).
+    ``layouts`` is an optional congruent pytree of :class:`LeafLayout`
+    (from ``blocks.stack_layouts``); when given, each leaf's graft is
+    dispatched on explicit metadata instead of shape guessing.
     """
+    if layouts is None:
+        return jax.tree.map(
+            lambda d, s: _graft_leaf(d, s, prompt_len), target_layers, prefill_layers
+        )
     return jax.tree.map(
-        lambda d, s: _graft_leaf(d, s, prompt_len), target_layers, prefill_layers
+        lambda d, s, lay: _graft_leaf(d, s, prompt_len, lay),
+        target_layers,
+        prefill_layers,
+        layouts,
     )
 
 

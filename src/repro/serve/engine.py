@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
 from repro.models import lm
 from repro.serve.cache import graft_states
 from repro.serve.request import Request
@@ -42,6 +43,7 @@ class ServeConfig:
     chunk_budget: int | None = None  # None -> whole-prompt prefill
     min_chunk: int = 16
     preemption: str = "off"  # "off" | "swap" | "recompute"
+    prefix_sharing: bool = True  # adopt indexed prompt-prefix pages
 
 
 @dataclass
@@ -65,7 +67,10 @@ class Engine:
     def _grow_states(self, states: dict[str, Any], prompt_len: int, batch: int) -> dict[str, Any]:
         """Move prefill caches (length S) into serving caches (cache_len)."""
         target = init_decode_state(self.cfg, batch, self.serve.cache_len, start_pos=prompt_len)
-        grafted = graft_states(target["layers"], states["layers"], prompt_len)
+        layouts = blk.stack_layouts(self.cfg, self.serve.cache_len, paged=False)
+        grafted = graft_states(
+            target["layers"], states["layers"], prompt_len, layouts=layouts
+        )
         return {"layers": grafted, "pos": jnp.asarray(prompt_len, jnp.int32)}
 
     # -- generation (continuous-batching path) ------------------------------
@@ -84,6 +89,7 @@ class Engine:
                     chunk_budget=self.serve.chunk_budget,
                     min_chunk=self.serve.min_chunk,
                     preemption=self.serve.preemption,
+                    prefix_sharing=self.serve.prefix_sharing,
                 ),
             )
         return self._schedulers[n_slots]

@@ -1,4 +1,5 @@
-"""Paged KV block pool for serving.
+"""Paged KV block pool for serving: refcounted pages with copy-on-write
+prefix sharing.
 
 Instead of one contiguous ``cache_len`` KV row per slot, every paged
 attention layer stores its cache as a pool of fixed-size pages
@@ -17,17 +18,44 @@ their garbage writes could corrupt a new tenant — pointing their whole
 table row at the trash page confines those writes to storage nobody
 reads (positional validity masks it everywhere else).
 
-``PagePool`` is the host-side allocator. Admission **reserves** a
-request's worst-case page count (prompt + max_new_tokens, ring-folded)
-so that mid-decode growth can never fail — the OOM-backpressure path is
-purely at admission time: if the pool cannot cover the reservation the
-request stays queued (deferred, never a corrupted live page). Pages are
-physically allocated lazily: the prompt's pages at admit, one more
-whenever decode crosses a page boundary, all returned at retirement.
+**Refcounted sharing.** A physical page may appear in several slots'
+tables at once: each page carries a refcount (the number of slots whose
+table maps it) and is freed only when that count reaches zero. Full
+prompt-prefix pages are content-addressed through a **prefix index** —
+``prefix_page_keys`` hashes a prompt at page granularity into a chain of
+keys, a completed page is registered under its key, and a later request
+whose prompt starts with the same tokens *adopts* the existing physical
+pages instead of recomputing them (``adopt_prefix``): N requests sharing
+a system prompt pay one set of pages and near-zero warm-prefix TTFT.
+Pages whose refcount drops to zero while still indexed are parked in an
+LRU *cached* list — immediately reusable by the next adopter, reclaimed
+(and unindexed) only when the free list runs dry.
+
+**Copy-on-write.** Shared pages are immutable by construction — only
+*full* prompt pages are indexed, adoption is page-aligned, and both the
+chunked-prefill and the decode write paths only ever write at or past
+the first unadopted position. ``prepare_write`` enforces that invariant
+locally anyway: before a slot writes token range ``[start, stop)`` the
+scheduler calls it, and any page in that range with refcount > 1 is
+forked to a private copy (the caller re-points its table entry and
+copies the device page), while a refcount-1 page that is still indexed
+is simply unindexed (its content is about to diverge from its key).
+
+``PagePool`` is the host-side allocator. Admission **reserves** page
+counts (worst-case under ``preemption="off"``, incrementally otherwise)
+so that growth within a reservation can never fail; adopted pages raise
+a slot's reservation and allocation together, so sharing never consumes
+the backing owed to other slots. The owed backing — the gap between
+reservations and allocations that ``available()`` must protect — is
+maintained incrementally (``_owed``), not recomputed per call: the
+scheduler asks on every prefill chunk and decode page-boundary crossing.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
+
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.blocks import paged_kv_kinds
@@ -35,6 +63,28 @@ from repro.models.blocks import paged_kv_kinds
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def prefix_page_keys(
+    tokens: np.ndarray, page_size: int, n_pages: int | None = None
+) -> list[bytes]:
+    """Hash a token vector into its chain of full-page prefix keys.
+
+    ``keys[j]`` digests tokens ``[0, (j + 1) * page_size)`` — each key
+    extends the previous one, so two prompts share ``keys[:k]`` iff they
+    share their first ``k * page_size`` tokens. Only *full* pages get a
+    key: a partial trailing page is never indexed (it is still written).
+    """
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    n = len(toks) // page_size if n_pages is None else n_pages
+    keys: list[bytes] = []
+    h = b""
+    for j in range(n):
+        h = hashlib.blake2b(
+            h + toks[j * page_size : (j + 1) * page_size].tobytes(), digest_size=16
+        ).digest()
+        keys.append(h)
+    return keys
 
 
 @dataclass(frozen=True)
@@ -87,22 +137,37 @@ def model_page_span(cfg: ModelConfig, cache_len: int) -> int:
 
 
 class PagePool:
-    """Host-side page allocator with worst-case reservations.
+    """Host-side refcounted page allocator with prefix sharing + CoW.
 
     Invariants (property-tested in ``tests/test_serve_pages.py``):
-      * a physical page is held by at most one slot (no aliasing),
-      * ``len(free) + sum(allocated)`` is constant (no leaks),
-      * ``sum(reserved - allocated) <= len(free)`` — growth up to each
-        slot's reservation can never fail.
+      * refcounts are never negative; a page is freed (or cached) exactly
+        when its refcount reaches zero,
+      * ``free + cached + in_use`` partitions the pool (conservation —
+        a page shared by k slots is *one* in-use page, not k),
+      * ``_owed`` always equals ``sum(reserved - allocated)`` recomputed,
+      * ``sum(reserved - allocated) <= free + cached`` — growth up to each
+        slot's reservation can never fail,
+      * after ``prepare_write`` over a range, every page in that range is
+        exclusively owned (refcount 1) and unindexed.
     """
 
     def __init__(self, layout: PageLayout):
         self.layout = layout
         self._free: list[int] = list(range(layout.n_pages - 1, -1, -1))
-        self._allocated: dict[int, list[int]] = {}  # slot -> page ids
+        self._allocated: dict[int, list[int]] = {}  # slot -> page ids (logical order)
         self._reserved: dict[int, int] = {}  # slot -> reserved page count
+        self._ref: dict[int, int] = {}  # pid -> #slots mapping it (absent == 0)
+        self._index: dict[bytes, int] = {}  # prefix key -> pid
+        self._key_of: dict[int, bytes] = {}  # pid -> its index key
+        # ref-0 pages still holding indexed prefix content, LRU order
+        # (oldest first; dict preserves insertion order).
+        self._cached: dict[int, None] = {}
+        self._owed = 0  # sum(reserved - allocated), maintained incrementally
         self.peak_in_use = 0
         self.peak_reserved = 0
+        self.cow_forks = 0
+        self.adopted_total = 0
+        self.cache_evictions = 0
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -110,27 +175,62 @@ class PagePool:
         return len(self._free)
 
     @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+    @property
     def in_use(self) -> int:
-        return sum(len(p) for p in self._allocated.values())
+        """Distinct physical pages mapped by at least one slot."""
+        return len(self._ref)
 
     @property
     def reserved(self) -> int:
         return sum(self._reserved.values())
 
     def available(self) -> int:
-        """Pages admissible to a *new* reservation: free pages minus the
-        backing still owed to existing reservations."""
-        owed = sum(
+        """Pages admissible to a *new* reservation: free + evictable
+        cached pages minus the backing still owed to existing
+        reservations. O(1) — ``_owed`` is maintained incrementally."""
+        return len(self._free) + len(self._cached) - self._owed
+
+    def owed_recomputed(self) -> int:
+        """The owed backing recomputed from scratch (test oracle for the
+        incremental ``_owed`` counter)."""
+        return sum(
             self._reserved[s] - len(self._allocated.get(s, ()))
             for s in self._reserved
         )
-        return len(self._free) - owed
 
     def allocated(self, slot: int) -> list[int]:
         return self._allocated.get(slot, [])
 
+    def refcount(self, pid: int) -> int:
+        return self._ref.get(pid, 0)
+
     def can_reserve(self, n: int) -> bool:
         return n <= self.available()
+
+    # -- internal -----------------------------------------------------------
+    def _drop_index(self, pid: int) -> None:
+        key = self._key_of.pop(pid, None)
+        if key is not None and self._index.get(key) == pid:
+            del self._index[key]
+
+    def _take_free(self) -> int:
+        """A writable physical page: the free list first, then evict the
+        least-recently-released cached prefix page (unindexing it)."""
+        if self._free:
+            return self._free.pop()
+        if self._cached:
+            pid = next(iter(self._cached))
+            del self._cached[pid]
+            self._drop_index(pid)
+            self.cache_evictions += 1
+            return pid
+        raise RuntimeError(
+            "page pool exhausted: no free or cached page to take "
+            "(accounting bug, or a CoW fork beyond the pool's backing)"
+        )
 
     # -- lifecycle ----------------------------------------------------------
     def reserve(self, slot: int, n: int) -> None:
@@ -143,11 +243,12 @@ class PagePool:
             )
         self._reserved[slot] = n
         self._allocated[slot] = []
+        self._owed += n
         self.peak_reserved = max(self.peak_reserved, self.reserved)
 
     def grow_to(self, slot: int, n_total: int) -> list[int]:
-        """Allocate pages until ``slot`` holds ``n_total``; returns the new
-        page ids. Never fails within the slot's reservation."""
+        """Allocate fresh private pages until ``slot`` holds ``n_total``;
+        returns the new page ids. Never fails within the reservation."""
         held = self._allocated[slot]
         if n_total > self._reserved[slot]:
             raise RuntimeError(
@@ -156,8 +257,11 @@ class PagePool:
             )
         new = []
         while len(held) < n_total:
-            new.append(self._free.pop())
-            held.append(new[-1])
+            pid = self._take_free()
+            self._ref[pid] = 1
+            new.append(pid)
+            held.append(pid)
+            self._owed -= 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return new
 
@@ -180,20 +284,126 @@ class PagePool:
         if n_total - cur > self.available():
             return False
         self._reserved[slot] = n_total
+        self._owed += n_total - cur
         self.peak_reserved = max(self.peak_reserved, self.reserved)
         return True
+
+    # -- prefix sharing -----------------------------------------------------
+    def adopt_prefix(self, slot: int, keys: list[bytes]) -> int:
+        """Map the longest indexed run of ``keys`` into ``slot``'s table.
+
+        Each hit bumps the page's refcount (reviving it from the cached
+        list if idle) and raises the slot's reservation in step with its
+        allocation, so adoption consumes no free-list backing and can
+        never fail. Must run right after ``reserve`` (before any growth):
+        adopted pages are the slot's logical pages ``0..n-1``. Returns
+        the number of pages adopted; ``allocated(slot)`` gives their ids.
+        """
+        if slot not in self._reserved:
+            raise ValueError(f"slot {slot} holds no reservation to adopt into")
+        held = self._allocated[slot]
+        if held:
+            raise ValueError("adopt_prefix must precede page growth")
+        n = 0
+        for key in keys:
+            pid = self._index.get(key)
+            if pid is None:
+                break
+            if pid in self._cached:
+                del self._cached[pid]
+            self._ref[pid] = self._ref.get(pid, 0) + 1
+            held.append(pid)
+            self._reserved[slot] += 1  # reservation and allocation move together
+            n += 1
+        if n:
+            self.adopted_total += n
+            self.peak_in_use = max(self.peak_in_use, self.in_use)
+            self.peak_reserved = max(self.peak_reserved, self.reserved)
+        return n
+
+    def register_page(self, slot: int, logical: int, key: bytes) -> bool:
+        """Index ``slot``'s logical page under its prefix key once its
+        content is complete (every position written). First writer wins:
+        if the key is already indexed (a concurrent identical prompt) the
+        later page stays private. Idempotent."""
+        pid = self._allocated[slot][logical]
+        if pid in self._key_of or key in self._index:
+            return False
+        self._index[key] = pid
+        self._key_of[pid] = key
+        return True
+
+    def lookup_prefix(self, keys: list[bytes]) -> int:
+        """Length of the longest indexed run of ``keys`` (no side effects)."""
+        n = 0
+        for key in keys:
+            if key not in self._index:
+                break
+            n += 1
+        return n
+
+    def prepare_write(self, slot: int, start: int, stop: int) -> list[tuple[int, int, int]]:
+        """Make token range ``[start, stop)`` of ``slot`` exclusively
+        writable. Pages in the range with refcount > 1 are forked to a
+        private copy — the table entry is re-pointed here and the caller
+        must copy device contents ``old -> new`` and update its mirrors —
+        and refcount-1 pages still indexed are unindexed (their content is
+        about to diverge from their key). Returns ``(logical, old, new)``
+        fork triples (empty in the steady state: the scheduler only ever
+        writes at or past the first unadopted position)."""
+        held = self._allocated.get(slot)
+        if not held or stop <= start:
+            return []
+        P, span = self.layout.page_size, self.layout.span
+        fold = (lambda t: (t % span) // P) if span else (lambda t: t // P)
+        if span and stop - start >= span:
+            js: list[int] = list(range(len(held)))
+        else:
+            js = sorted({fold(t) for t in [*range(start, stop, P), stop - 1]})
+        forks: list[tuple[int, int, int]] = []
+        for j in js:
+            if j >= len(held):
+                continue
+            pid = held[j]
+            r = self._ref[pid]
+            if r > 1:
+                new = self._take_free()
+                self._ref[pid] = r - 1
+                self._ref[new] = 1
+                held[j] = new
+                forks.append((j, pid, new))
+                self.cow_forks += 1
+            elif pid in self._key_of:
+                self._drop_index(pid)
+        if forks:
+            self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return forks
+
+    # -- retirement ---------------------------------------------------------
+    def release(self, slot: int) -> None:
+        """Unmap every page the slot holds and drop its reservation. A
+        page's storage is recycled only at refcount zero: indexed pages
+        park in the cached LRU (future adopters revive them), anonymous
+        pages return to the free list."""
+        held = self._allocated.pop(slot, [])
+        reserved = self._reserved.pop(slot, 0)
+        self._owed -= reserved - len(held)
+        for pid in held:
+            r = self._ref[pid] - 1
+            if r > 0:
+                self._ref[pid] = r
+                continue
+            del self._ref[pid]
+            if pid in self._key_of:
+                self._cached[pid] = None
+            else:
+                self._free.append(pid)
 
     def reset_peaks(self) -> None:
         """Restart peak tracking (e.g. after a warmup phase) from the
         current occupancy."""
         self.peak_in_use = self.in_use
         self.peak_reserved = self.reserved
-
-    def release(self, slot: int) -> None:
-        """Free every page the slot holds and drop its reservation."""
-        for pid in self._allocated.pop(slot, []):
-            self._free.append(pid)
-        self._reserved.pop(slot, None)
 
     def stats(self) -> dict[str, int]:
         return {
@@ -202,6 +412,12 @@ class PagePool:
             "pages_in_use": self.in_use,
             "pages_reserved": self.reserved,
             "pages_free": self.n_free,
+            "pages_cached": self.n_cached,
+            "pages_shared": sum(1 for r in self._ref.values() if r > 1),
+            "pages_indexed": len(self._index),
             "peak_pages_in_use": self.peak_in_use,
             "peak_pages_reserved": self.peak_reserved,
+            "adopted_pages": self.adopted_total,
+            "cow_forks": self.cow_forks,
+            "cache_evictions": self.cache_evictions,
         }

@@ -26,13 +26,16 @@ class RequestStatus(enum.Enum):
 class Request:
     """One generation request. ``prompt`` is a (P,) int32 token vector;
     ``extras`` carries per-request modality inputs (``prefix_embeds`` /
-    ``enc_embeds``) with a leading batch-1 axis."""
+    ``enc_embeds``) with a leading batch-1 axis. ``tenant`` names the
+    submitting tenant for page quotas / weighted-fair admission (every
+    request shares one tenant by default, which disables both)."""
 
     prompt: np.ndarray
     max_new_tokens: int = 32
     stop_token: int = -1  # -1 => never stop early
     temperature: float = 0.0  # 0 => greedy
     extras: dict[str, Any] = field(default_factory=dict)
+    tenant: str = "default"
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, dtype=np.int32)
@@ -60,6 +63,9 @@ class RequestState:
     chunk_pos: int = 0
     replay_tokens: np.ndarray | None = None  # prompt ++ generated, for resume
     preemptions: int = 0
+    # Prompt tokens satisfied from the shared prefix index at admission
+    # (their pages were adopted, not recomputed — the warm-prefix win).
+    adopted_tokens: int = 0
     swap: Any = None  # host-side page/state snapshot while PREEMPTED (swap)
     # Wall-clock stamps (time.perf_counter seconds).
     t_submit: float = 0.0

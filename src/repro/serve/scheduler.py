@@ -29,7 +29,30 @@ crossing, and when the pool runs dry the LRU decoding slot is preempted —
 its pages (and per-slot states) snapshot to host memory (``swap``) or are
 dropped and re-derived by re-streaming prompt + generated tokens
 (``recompute``). Preempted requests resume ahead of fresh admissions and
-continue token-identically (greedy) from where they left off.
+continue token-identically (greedy) from where they left off. Multiple
+prompts may stream concurrently: when no ACTIVE victim holds reclaimable
+pages, a *younger* PREFILLING streamer is restarted instead (streaming
+admissions are token-only, so re-streaming is always valid under either
+policy), which guarantees the oldest in-flight request can always reclaim
+what it needs — the old single-streamer admission gate is gone.
+
+**Prefix sharing.** With ``prefix_sharing`` (fully-paged streaming-capable
+models), prompts are hashed at page granularity on admission and full
+prompt pages are content-addressed in the pool's prefix index: a request
+whose prompt starts with an already-indexed page chain *adopts* those
+physical pages (refcount++) instead of recomputing them, then streams only
+the unadopted tail — N requests sharing a system prompt pay one set of
+pages and near-zero warm-prefix TTFT. Shared pages are copy-on-write:
+before any write into an adopted range the pool forks a private copy
+(``cow_traces``; never taken on the scheduler's own write pattern, which
+only touches positions past the adopted span).
+
+**Multi-tenant admission.** ``tenant_quota`` caps each tenant's summed
+worst-case page footprint (quota-blocked tenants are skipped while others
+admit); ``tenant_weights`` orders fresh admissions by stride scheduling —
+each admit advances its tenant's virtual pass by ``tokens / weight`` — so
+a heavy tenant cannot starve a light one. With both unset the admission
+queue stays exact-FIFO.
 
 The decode hot path is shape-stable by construction: tokens ``(n_slots,
 1)``, active mask ``(n_slots,)``, positions ``(n_slots,)``, page table
@@ -68,7 +91,13 @@ from repro.serve.cache import (
     insert_slot_leaf,
     scatter_pages_leaf,
 )
-from repro.serve.pages import PageLayout, PagePool, cdiv, model_page_span
+from repro.serve.pages import (
+    PageLayout,
+    PagePool,
+    cdiv,
+    model_page_span,
+    prefix_page_keys,
+)
 from repro.serve.request import Request, RequestState, RequestStatus
 from repro.serve.step import (
     fresh_slot_layers,
@@ -121,6 +150,15 @@ class SchedulerConfig:
     # worst case at admission; "swap" / "recompute" admit reservation-free
     # and reclaim the LRU decoding slot's pages on OOM.
     preemption: str = "off"
+    # Content-address full prompt pages and adopt matching pages at
+    # admission (copy-on-write protected). Takes effect only for
+    # fully-paged streaming-capable models; a no-op everywhere else.
+    prefix_sharing: bool = True
+    # Multi-tenant admission: cap each tenant's summed worst-case page
+    # footprint (None -> unlimited) and order fresh admissions by stride
+    # scheduling over per-tenant weights (None -> exact FIFO).
+    tenant_quota: int | None = None
+    tenant_weights: dict[str, float] | None = None
 
 
 class Scheduler:
@@ -139,6 +177,12 @@ class Scheduler:
                 "preemption requires the unified token-budget step "
                 "(set chunk_budget)"
             )
+        if sched.tenant_quota is not None and sched.tenant_quota < 1:
+            raise ValueError(f"tenant_quota must be >= 1, got {sched.tenant_quota}")
+        if sched.tenant_weights is not None and any(
+            w <= 0 for w in sched.tenant_weights.values()
+        ):
+            raise ValueError("tenant_weights must be positive")
         self._chunked = sched.chunk_budget is not None
         if self._chunked and sched.chunk_budget < sched.min_chunk:
             raise ValueError(
@@ -176,6 +220,22 @@ class Scheduler:
 
         kinds = set(cfg.block_pattern) | set(cfg.first_blocks)
         self._bucketed = sched.prefill_buckets and not (kinds & _RECURRENT_KINDS)
+        # Prefix sharing needs every stateful leaf to live behind the page
+        # table: windowed ring pages are position-folded (not prefix
+        # content-addressable) and per-slot leaves (MLA ckv, recurrent
+        # states) would silently carry prefix information sharing can't
+        # reconstruct — so only fully dense-paged streaming models share.
+        self._sharing = (
+            sched.prefix_sharing
+            and self._paged
+            and self._stream_capable
+            and kinds <= {"attn_mlp", "attn_moe"}
+            and kinds <= blk.paged_kv_kinds(cfg)
+        )
+        self._slot_keys: dict[int, list[bytes]] = {}  # slot -> prompt page keys
+        self._slot_reg: dict[int, int] = {}  # slot -> leading pages registered
+        self._slot_worst: dict[int, tuple[str, int]] = {}  # slot -> (tenant, pages)
+        self._tenant_pass: dict[str, float] = {}  # stride-scheduling virtual time
 
         self._queue: deque[RequestState] = deque()
         self._preempted: deque[RequestState] = deque()  # resume before admits
@@ -191,14 +251,21 @@ class Scheduler:
         self.admit_traces = 0  # one per prompt bucket
         self.chunk_traces = 0  # one per chunk bucket
         self.swap_traces = 0  # swap-out + swap-in programs
+        self.cow_traces = 0  # copy-on-write fork programs (per fork count)
         self.total_decode_steps = 0
         self.total_chunk_steps = 0
         self.deferred_admissions = 0  # pool-backpressure events
+        self.quota_deferrals = 0  # tenant-quota skip events
         self.preemptions_total = 0
+        self.prefix_hits = 0  # admissions that adopted >= 1 indexed page
+        self.prefix_hit_tokens = 0  # prompt tokens satisfied by adoption
         self.finished_total = 0  # cumulative, survives keep_finished eviction
         self.generated_tokens_total = 0
         self.last_decode_logits: jax.Array | None = None
 
+        # Explicit per-leaf layout metadata (paged pool leaf, dense,
+        # ring, copy) — the graft/surgery dispatch; see models/schema.py.
+        layouts = blk.stack_layouts(cfg, sched.cache_len, paged=self._paged)
         # Per-leaf logical capacities: >0 marks a shared-pool KV leaf (no
         # batch axis; passed through untouched by per-slot surgery).
         caps = blk.stack_paged_caps(cfg, sched.cache_len) if self._paged else None
@@ -262,14 +329,16 @@ class Scheduler:
                 self.admit_traces += 1
                 target = init_decode_state(self.cfg, 1, self.sched.cache_len)["layers"]
 
-                def leaf(cap, full, tgt, src):
-                    if cap:  # shared-pool KV leaf: scatter pages
+                def leaf(lay, full, tgt, src):
+                    if lay.kind == "paged":  # shared-pool KV leaf: scatter pages
                         return graft_pages_leaf(
-                            full, src, page_ids, prompt_len, cap, page_size
+                            full, src, page_ids, prompt_len, lay.cap, page_size
                         )
-                    return insert_slot_leaf(full, _graft_leaf(tgt, src, prompt_len), slot)
+                    return insert_slot_leaf(
+                        full, _graft_leaf(tgt, src, prompt_len, lay), slot
+                    )
 
-                new_layers = jax.tree.map(leaf, caps, layers, target, prefill_layers)
+                new_layers = jax.tree.map(leaf, layouts, layers, target, prefill_layers)
                 return new_layers, pos.at[slot].set(prompt_len)
 
         else:
@@ -277,7 +346,9 @@ class Scheduler:
             def _admit_fn(layers, pos, prefill_layers, slot, prompt_len):
                 self.admit_traces += 1
                 target = init_decode_state(self.cfg, 1, self.sched.cache_len)
-                slot_layers = graft_states(target["layers"], prefill_layers, prompt_len)
+                slot_layers = graft_states(
+                    target["layers"], prefill_layers, prompt_len, layouts=layouts
+                )
                 new_layers = insert_slot(layers, slot_layers, slot)
                 return new_layers, pos.at[slot].set(prompt_len)
 
@@ -318,20 +389,43 @@ class Scheduler:
 
         self._chunk_jit = jax.jit(_chunk_fn)
 
-        def _reset_fn(layers, pos, slot):
+        def _reset_fn(layers, pos, slot, pos_val):
             # Reset the slot's per-slot leaves to the empty-recurrence state
             # so a chunked prefill starts from what a from-scratch prefill
             # would derive. Pool leaves stay: the trash-pointed table row
-            # isolates them.
+            # isolates them. ``pos_val`` is the adopted-prefix length (0
+            # without sharing): the slot's frozen decode position must sit
+            # at the first *unadopted* logical page, or the inactive slot's
+            # garbage decode writes would land inside a shared page.
             c, _ = _slot_surgery_trees()
             fresh = fresh_slot_layers(self.cfg, self.sched.cache_len)
             new_layers = jax.tree.map(
                 lambda cap, full, t: full if cap else insert_slot_leaf(full, t, slot),
                 c, layers, fresh,
             )
-            return new_layers, pos.at[slot].set(0)
+            return new_layers, pos.at[slot].set(pos_val)
 
         self._reset_jit = jax.jit(_reset_fn)
+
+        if self._paged:
+
+            def _cow_fn(layers, src_ids, dst_ids):
+                # Fork shared pages: copy page contents src -> dst in every
+                # pool leaf (one program per fork count; essentially never
+                # runs — the scheduler's write pattern stays past adopted
+                # spans — but keeps CoW safety local to the pool).
+                self.cow_traces += 1
+
+                def leaf(cap, full):
+                    if not cap:
+                        return full
+                    if full.ndim == 5:  # stacked groups: leading layer axis
+                        return full.at[:, dst_ids].set(full[:, src_ids])
+                    return full.at[dst_ids].set(full[src_ids])
+
+                return jax.tree.map(leaf, caps, layers)
+
+            self._cow_jit = jax.jit(_cow_fn)
 
         if self._paged:
 
@@ -446,6 +540,15 @@ class Scheduler:
             return ran
         if self._paged:
             self._grow_pages()
+            if self._sharing:
+                # CoW guard: decode writes one token per ACTIVE slot at its
+                # current position — fork first if that page is shared (the
+                # scheduler's write pattern keeps this a no-op, but the
+                # invariant is enforced here, not assumed).
+                for slot, rs in list(self._active.items()):
+                    if rs.status is RequestStatus.ACTIVE:
+                        p = int(self._pos_host[slot])
+                        self._apply_cow(slot, self.pool.prepare_write(slot, p, p + 1))
             self._states["page_table"] = jnp.asarray(self._pt)
 
         self._key, sub = jax.random.split(self._key)
@@ -507,12 +610,19 @@ class Scheduler:
         page_ids = None
         if self._paged:
             need = self.pages.pages_for_len(start + n_real)
-            if not self._ensure_pages(slot, need):
+            if not self._ensure_pages(slot, need, rid=rs.rid):
                 self.deferred_admissions += 1
                 return False
             held = len(self.pool.allocated(slot))
             if need > held:
                 self._pt[slot, held:need] = self.pool.grow_to(slot, need)
+            if self._sharing:
+                # Fork any shared page in the chunk's write range before the
+                # chunk program touches it (steady-state no-op: chunks only
+                # write at or past the first unadopted position).
+                self._apply_cow(
+                    slot, self.pool.prepare_write(slot, start, start + n_real)
+                )
             # The chunk only attends to pages covering [0, start + n_real);
             # pass a power-of-two page-count bucket of the table row so the
             # gather/kernel cost tracks the live prefix, not the table
@@ -537,6 +647,14 @@ class Scheduler:
         rs.chunk_pos += n_real
         self._pos_host[slot] = rs.chunk_pos
         self.total_chunk_steps += 1
+        if self._sharing and slot in self._slot_keys:
+            # Register newly-completed full prompt pages in the prefix
+            # index (first writer wins; adopted pages are already indexed).
+            keys = self._slot_keys[slot]
+            done = min(rs.chunk_pos // self.pages.page_size, len(keys))
+            for j in range(self._slot_reg.get(slot, 0), done):
+                self.pool.register_page(slot, j, keys[j])
+            self._slot_reg[slot] = max(self._slot_reg.get(slot, 0), done)
         if rs.chunk_pos == len(src):
             self._finish_prefill(rs, logits)
         return True
@@ -573,15 +691,27 @@ class Scheduler:
         self._maybe_finish(rs, now)
 
     # -- pages: growth, reservation-free accounting, preemption --------------
-    def _ensure_pages(self, slot: int, n_total: int) -> bool:
+    def _apply_cow(self, slot: int, forks: list[tuple[int, int, int]]) -> None:
+        """Materialise ``prepare_write`` forks: re-point the host page-table
+        mirror and copy page contents old -> new in every pool leaf."""
+        if not forks:
+            return
+        for j, _, new in forks:
+            self._pt[slot, j] = new
+        src = jnp.asarray([old for _, old, _ in forks], jnp.int32)
+        dst = jnp.asarray([new for _, _, new in forks], jnp.int32)
+        self._states["layers"] = self._cow_jit(self._states["layers"], src, dst)
+
+    def _ensure_pages(self, slot: int, n_total: int, rid: int | None = None) -> bool:
         """Make ``slot``'s reservation cover ``n_total`` pages. Under
         worst-case reservations this always holds; reservation-free
-        (preemption on), extend incrementally and reclaim LRU victims'
-        pages until the pool can back it."""
+        (preemption on), extend incrementally and reclaim victims' pages
+        until the pool can back it. ``rid`` is the requesting request's id
+        (ordering key for the younger-streamer victim rule)."""
         if self.sched.preemption == "off":
             return True  # admission reserved the worst case
         while not self.pool.extend_to(slot, n_total):
-            if not self._preempt_lru(protect=slot):
+            if not self._preempt_lru(protect=slot, requester_rid=rid):
                 return False
         return True
 
@@ -589,9 +719,9 @@ class Scheduler:
         """Allocate the page backing the position each decoding slot writes
         this step. Worst-case reservations guarantee this; reservation-free
         admission may have to preempt first — including the growing slot
-        *itself* when everyone else's pages are pinned (e.g. a PREFILLING
-        streamer holds the pool and streamers are never victims): the
-        grower is parked and resumes once pages free up."""
+        *itself* when everyone else's pages are pinned (e.g. an *older*
+        PREFILLING streamer holds the pool; only younger streamers are
+        victims): the grower is parked and resumes once pages free up."""
         for slot, rs in list(self._active.items()):
             if rs.status is not RequestStatus.ACTIVE:
                 continue
@@ -599,7 +729,7 @@ class Scheduler:
             held = len(self.pool.allocated(slot))
             if need <= held:
                 continue
-            if not self._ensure_pages(slot, need):
+            if not self._ensure_pages(slot, need, rid=rs.rid):
                 if self._can_preempt(rs):
                     self._preempt_slot(slot)
                     continue
@@ -619,28 +749,54 @@ class Scheduler:
             return True
         return self._stream_capable and not rs.request.extras
 
-    def _preempt_lru(self, protect: int) -> bool:
+    def _preempt_lru(self, protect: int, requester_rid: int | None = None) -> bool:
         """Reclaim the least-recently-(re)admitted decoding slot's pages.
 
         ``swap``: snapshot the slot's page contents + per-slot states to
         host and restore them verbatim on resume. ``recompute``: drop
         everything and re-stream prompt + generated tokens (teacher-forced)
         on resume. Either way the resumed request continues greedy
-        token-identically. Returns False when no victim exists."""
+        token-identically.
+
+        When no ACTIVE victim exists (concurrent streamers contending for
+        pages), a *younger* PREFILLING streamer (rid > requester) is
+        restarted instead — streaming admissions are token-only, so
+        re-streaming from chunk 0 is valid under either policy, and
+        preferring the youngest guarantees the oldest in-flight request
+        always wins the pages it needs: no two-streamer deadlock, no
+        livelock. Returns False when no victim exists."""
         victims = [
             rs
             for s, rs in self._active.items()
             if rs.status is RequestStatus.ACTIVE and s != protect
             and self._can_preempt(rs)
         ]
-        if not victims:
+        if victims:
+            self._preempt_slot(min(victims, key=lambda r: r.t_admit).slot)
+            return True
+        if requester_rid is None:
             return False
-        self._preempt_slot(min(victims, key=lambda r: r.t_admit).slot)
+        streamers = [
+            rs
+            for s, rs in self._active.items()
+            if rs.status is RequestStatus.PREFILLING and s != protect
+            and rs.rid > requester_rid
+        ]
+        if not streamers:
+            return False
+        self._preempt_slot(max(streamers, key=lambda r: r.rid).slot)
         return True
 
     def _preempt_slot(self, slot: int) -> None:
         rs = self._active[slot]
-        if self.sched.preemption == "swap":
+        if rs.status is RequestStatus.PREFILLING:
+            # A parked streamer restarts from chunk 0 on resume under either
+            # policy — its source (prompt, or replay_tokens after an earlier
+            # recompute preemption) is token-only by construction, and any
+            # pages it registered in the prefix index survive in the pool's
+            # cached list, so the restart re-adopts instead of recomputing.
+            rs.chunk_pos = 0
+        elif self.sched.preemption == "swap":
             snap = self._swap_out_jit(
                 self._states["layers"],
                 jnp.asarray(self._pt[slot]),
@@ -663,25 +819,80 @@ class Scheduler:
         self.pool.release(slot)
         self._pt[slot, :] = self.pages.trash
         self._pos_host[slot] = 0
+        self._slot_keys.pop(slot, None)
+        self._slot_reg.pop(slot, None)
+        self._slot_worst.pop(slot, None)
         rs.slot = None
         self._preempted.append(rs)
 
     # -- admission -----------------------------------------------------------
     def _bucket_len(self, token_len: int) -> int:
-        """Power-of-two padded token count (identity when bucketing is off)."""
+        """Power-of-two padded token count (identity when bucketing is off).
+
+        Dense prompts never exceed ``cache_len`` (asserted at admission),
+        so buckets cap there to keep the padded prompt in one row. Prompts
+        legitimately *past* the cap (windowed / long-context models) stay
+        on uncapped power-of-two buckets: at most log2(longest prompt)
+        distinct shapes, never the raw length (which would compile one
+        prefill program per prompt and defeat the bounded-compile
+        guarantee)."""
         if not self._bucketed:
             return token_len
         b = max(self.sched.min_bucket, 1)
         while b < token_len:
             b *= 2
-        # Dense prompts never exceed cache_len (asserted at admission), so
-        # buckets are capped there to keep the padded prompt in one row.
         cap = self.sched.cache_len - (self.cfg.prefix_len or 0)
-        return min(b, max(cap, token_len))
+        if token_len > cap:
+            if self.cfg.supports_long_context or self.cfg.window_size:
+                return b
+            raise RuntimeError(
+                f"prompt of {token_len} tokens exceeds the dense prefill cap "
+                f"{cap} (cache_len {self.sched.cache_len}); admission "
+                "validation should have rejected this request"
+            )
+        return min(b, cap)
 
-    def _streaming(self) -> bool:
-        return any(
-            rs.status is RequestStatus.PREFILLING for rs in self._active.values()
+    def _worst_pages(self, rs: RequestState) -> int:
+        """Worst-case page footprint of a request (0 when not paged)."""
+        if not self._paged:
+            return 0
+        req = rs.request
+        prompt_len = req.prompt.shape[0] + (self.cfg.prefix_len or 0)
+        return self.pages.pages_for_len(prompt_len + req.max_new_tokens)
+
+    def _tenant_pages(self, tenant: str) -> int:
+        """Worst-case pages currently charged to ``tenant``'s slots."""
+        return sum(w for t, w in self._slot_worst.values() if t == tenant)
+
+    def _pick_next(self, blocked: set[str]) -> RequestState | None:
+        """Weighted-fair pick: among each unblocked tenant's head-of-line
+        request, take the one whose tenant has the lowest stride pass
+        (ties by rid). Tenants first seen mid-flight join at the current
+        minimum pass, so a newcomer is served promptly but cannot burn
+        accumulated credit."""
+        heads: dict[str, RequestState] = {}
+        for rs in self._queue:
+            t = rs.request.tenant
+            if t in blocked or t in heads:
+                continue
+            heads[t] = rs
+        if not heads:
+            return None
+        floor = min(self._tenant_pass.values(), default=0.0)
+
+        def pass_of(t: str) -> float:
+            return self._tenant_pass.get(t, floor)
+
+        return min(heads.values(), key=lambda r: (pass_of(r.request.tenant), r.rid))
+
+    def _charge_tenant(self, rs: RequestState) -> None:
+        req = rs.request
+        weights = self.sched.tenant_weights or {}
+        w = weights.get(req.tenant, 1.0)
+        floor = min(self._tenant_pass.values(), default=0.0)
+        cost = (req.prompt.shape[0] + req.max_new_tokens) / w
+        self._tenant_pass[req.tenant] = (
+            self._tenant_pass.get(req.tenant, floor) + cost
         )
 
     def _admit_pending(self) -> None:
@@ -694,24 +905,52 @@ class Scheduler:
             if not self._try_resume(self._preempted[0]):
                 return
             self._preempted.popleft()
+        sc = self.sched
+        if sc.tenant_quota is None and not sc.tenant_weights:
+            # Single-tenant: exact FIFO (the historical admission order).
+            while self._free_slots and self._queue:
+                rs = self._queue[0]
+                if not self._admit(rs):
+                    break
+                self._queue.popleft()
+            return
+        # Multi-tenant: weighted-fair ordering with per-tenant page quotas.
+        # A quota-blocked tenant is skipped (its requests keep FIFO order
+        # within the tenant) while other tenants continue to admit; pool
+        # backpressure blocks everyone (FIFO fairness of the pool itself).
+        blocked: set[str] = set()
         while self._free_slots and self._queue:
-            rs = self._queue[0]
-            if self._stream_capable and not rs.request.extras:
-                ok = self._admit_streaming(rs)
-            else:
-                ok = self._admit_prefill(rs)
-            if not ok:
+            rs = self._pick_next(blocked)
+            if rs is None:
                 break
-            self._queue.popleft()
+            tenant = rs.request.tenant
+            if self._paged and sc.tenant_quota is not None:
+                n_worst = self._worst_pages(rs)
+                if n_worst > sc.tenant_quota:
+                    raise RuntimeError(
+                        f"request {rs.rid} needs {n_worst} pages worst-case, "
+                        f"more than tenant {tenant!r}'s whole quota "
+                        f"({sc.tenant_quota}); raise tenant_quota or lower "
+                        "max_new_tokens"
+                    )
+                if self._tenant_pages(tenant) + n_worst > sc.tenant_quota:
+                    blocked.add(tenant)
+                    self.quota_deferrals += 1
+                    continue
+            if not self._admit(rs):
+                break
+            # identity, not ==: Request's dataclass __eq__ compares prompt
+            # arrays elementwise
+            for i, q in enumerate(self._queue):
+                if q is rs:
+                    del self._queue[i]
+                    break
+            self._charge_tenant(rs)
 
-    def _stream_gate_ok(self) -> bool:
-        """Reservation-free streaming admits one prompt at a time. Two
-        concurrent streamers can deadlock — each holds pages, each needs
-        more, and PREFILLING slots are not preemptable victims — whereas a
-        lone streamer can always reclaim ACTIVE slots' pages, and the
-        admission fail-fast guarantees it fits the empty pool. Worst-case
-        reservations (preemption off) stream concurrently as before."""
-        return self.sched.preemption == "off" or not self._streaming()
+    def _admit(self, rs: RequestState) -> bool:
+        if self._stream_capable and not rs.request.extras:
+            return self._admit_streaming(rs)
+        return self._admit_prefill(rs)
 
     def _check_fits(self, rs: RequestState, prompt_len: int) -> int:
         """Shared admission validation; returns the worst-case page count."""
@@ -740,37 +979,69 @@ class Scheduler:
         return n_worst
 
     def _admit_streaming(self, rs: RequestState) -> bool:
-        """Assign a slot and start streaming the prompt in chunks. Under
-        worst-case reservations this is where OOM backpressure defers;
-        reservation-free admission always proceeds (chunks reserve as they
-        stream, preempting if needed)."""
+        """Assign a slot and start streaming the prompt in chunks, adopting
+        any indexed prefix pages first (their tokens are skipped, not
+        recomputed). Under worst-case reservations this is where OOM
+        backpressure defers; reservation-free admission always proceeds
+        (chunks reserve as they stream, preempting younger streamers or
+        LRU decoders if needed — no single-streamer gate)."""
         req = rs.request
         prompt_len = req.prompt.shape[0]
         n_worst = self._check_fits(rs, prompt_len)
-        if self._paged:
-            if self.sched.preemption == "off":
-                if not self.pool.can_reserve(n_worst):
-                    self.deferred_admissions += 1
-                    return False
-                n_reserve = n_worst
-            else:
-                if not self._stream_gate_ok():
-                    self.deferred_admissions += 1
-                    return False
-                n_reserve = 0
+        if self._paged and self.sched.preemption == "off":
+            if not self.pool.can_reserve(n_worst):
+                self.deferred_admissions += 1
+                return False
         slot = heapq.heappop(self._free_slots)
+        start = 0
         if self._paged:
-            self.pool.reserve(slot, n_reserve)
+            self.pool.reserve(slot, 0)
             self._pt[slot, :] = self.pages.trash
+            if self._sharing:
+                P = self.pages.page_size
+                keys = prefix_page_keys(req.prompt, P)
+                src_len = (
+                    len(rs.replay_tokens)
+                    if rs.replay_tokens is not None
+                    else prompt_len
+                )
+                # Cap adoption below the streamed source so at least one
+                # token still streams: the final chunk's logits seed the
+                # first sampled token.
+                adopted = self.pool.adopt_prefix(slot, keys[: (src_len - 1) // P])
+                if adopted:
+                    self._pt[slot, :adopted] = self.pool.allocated(slot)
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += adopted * P
+                    start = adopted * P
+                self._slot_keys[slot] = keys
+                self._slot_reg[slot] = adopted
+            if self.sched.preemption == "off" and not self.pool.extend_to(
+                slot, n_worst
+            ):
+                # Adoption revives cached pages (no longer evictable), but
+                # it adopts at least as many pages as it revives, so the
+                # pre-checked headroom still covers the remainder; this
+                # rollback is defensive.
+                self.pool.release(slot)
+                self._pt[slot, :] = self.pages.trash
+                self._slot_keys.pop(slot, None)
+                self._slot_reg.pop(slot, None)
+                heapq.heappush(self._free_slots, slot)
+                self.deferred_admissions += 1
+                return False
+            self._slot_worst[slot] = (req.tenant, n_worst)
         layers, pos = self._reset_jit(
-            self._states["layers"], self._states["pos"], jnp.asarray(slot, jnp.int32)
+            self._states["layers"], self._states["pos"], jnp.asarray(slot, jnp.int32),
+            jnp.asarray(start, jnp.int32),
         )
         self._states["layers"] = layers
         self._states["pos"] = pos
-        self._pos_host[slot] = 0
+        self._pos_host[slot] = start
         rs.slot = slot
         rs.prompt_len = prompt_len
-        rs.chunk_pos = 0
+        rs.chunk_pos = start
+        rs.adopted_tokens = start
         rs.status = RequestStatus.PREFILLING
         rs.t_admit = time.perf_counter()
         self._active[slot] = rs
@@ -803,6 +1074,7 @@ class Scheduler:
             self._pos_host[slot] = pos_v
             rs.swap = None
             rs.slot = slot
+            self._slot_worst[slot] = (rs.request.tenant, self._worst_pages(rs))
             rs.status = RequestStatus.ACTIVE
             rs.t_admit = time.perf_counter()
             self._tokens[slot, 0] = rs.tokens[-1]
@@ -831,6 +1103,7 @@ class Scheduler:
         slot = heapq.heappop(self._free_slots)
         if self._paged:
             self.pool.reserve(slot, n_reserve)
+            self._slot_worst[slot] = (req.tenant, n_reserve)
             n_admit = self.pages.pages_for_len(prompt_len)
             self._pt[slot, :] = self.pages.trash
             self._pt[slot, :n_admit] = self.pool.grow_to(slot, n_admit)
@@ -908,10 +1181,15 @@ class Scheduler:
         del self._active[slot]
         heapq.heappush(self._free_slots, slot)
         self._pos_host[slot] = 0
+        self._slot_keys.pop(slot, None)
+        self._slot_reg.pop(slot, None)
+        self._slot_worst.pop(slot, None)
         if self._paged:
             # Free pages and point the table row at the trash page so the
             # retired slot's frozen-position garbage writes can never touch
-            # a future tenant of these pages.
+            # a future tenant of these pages. Pages this slot registered in
+            # the prefix index park in the pool's cached list at refcount
+            # zero — the next same-prefix admission revives them for free.
             self.pool.release(slot)
             self._pt[slot, :] = self.pages.trash
         rs.status = RequestStatus.FINISHED
@@ -938,10 +1216,14 @@ class Scheduler:
             "admit_traces": self.admit_traces,
             "chunk_traces": self.chunk_traces,
             "swap_traces": self.swap_traces,
+            "cow_traces": self.cow_traces,
             "pending": self.pending,
             "active": self.num_active,
             "deferred_admissions": self.deferred_admissions,
+            "quota_deferrals": self.quota_deferrals,
             "preemptions": self.preemptions_total,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
         }
         if self._paged:
             out["pages"] = self.pool.stats()

@@ -218,9 +218,10 @@ class TestPreemption:
             assert sched.result(rid).tokens == _solo(cfg, params, p, 10)
 
     def test_decoder_self_preempts_when_streamer_pins_pool(self):
-        """PREFILLING slots are never victims; when a streamer has pinned
-        the pool and a decoder crosses a page boundary, the decoder parks
-        *itself* (instead of crashing) and resumes token-identically."""
+        """Decode-side growth never victimizes a streamer (only a chunk
+        request may restart a *younger* streamer); when a streamer has
+        pinned the pool and a decoder crosses a page boundary, the decoder
+        parks *itself* (instead of crashing) and resumes token-identically."""
         cfg, params = _params_for("llama3.2-3b")
         prompts = _prompts(cfg, [6, 24], seed=9)
         sched = Scheduler(

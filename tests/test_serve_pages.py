@@ -100,6 +100,186 @@ class TestPagePoolProperties:
 
 
 # ==========================================================================
+# Refcounted sharing + copy-on-write invariants
+# ==========================================================================
+def _chain(prompt_id: int, n: int) -> list[bytes]:
+    """A deterministic prefix-key chain standing in for prefix_page_keys."""
+    return [f"p{prompt_id}-{j}".encode() for j in range(n)]
+
+
+class TestRefcountCoWProperties:
+    def _check(self, pool, live):
+        """The module-docstring invariants, recomputed from scratch."""
+        n_pages = pool.layout.n_pages
+        # conservation: free + cached + distinct-in-use partitions the pool
+        assert pool.n_free + pool.n_cached + pool.in_use == n_pages
+        # refcount == number of slot table entries mapping the page, and a
+        # page reaches the free/cached sets only at refcount zero
+        counts: dict[int, int] = {}
+        for s in live:
+            for pid in pool.allocated(s):
+                counts[pid] = counts.get(pid, 0) + 1
+        assert counts == {pid: pool.refcount(pid) for pid in counts}
+        assert all(r > 0 for r in counts.values())
+        # the incremental owed-backing counter equals the recomputed sum
+        assert pool._owed == pool.owed_recomputed()
+        assert pool.available() >= 0
+
+    @settings(max_examples=30)
+    @given(
+        n_pages=st.integers(min_value=2, max_value=32),
+        page_size=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=10_000),
+    )
+    def test_random_share_cow_traffic(self, n_pages, page_size, seed):
+        """Random adopt/grow/register/prepare_write/release traffic keeps
+        refcounts exact, conserves pages, keeps the incremental owed
+        counter equal to its recomputation, and leaves written ranges
+        exclusively owned."""
+        layout = PageLayout(
+            page_size=page_size, n_pages=n_pages, span=n_pages * page_size
+        )
+        pool = PagePool(layout)
+        rng = np.random.default_rng(seed)
+        live: dict[int, list[bytes]] = {}  # slot -> its prompt key chain
+        next_slot = 0
+        for _ in range(150):
+            op = rng.integers(0, 4)
+            if op == 0:  # admit, scheduler-style: pre-check worst case,
+                # reserve nothing, adopt the indexed prefix run, extend
+                keys = _chain(int(rng.integers(0, 3)), int(rng.integers(1, 5)))
+                if pool.can_reserve(len(keys)):
+                    pool.reserve(next_slot, 0)
+                    adopted = pool.adopt_prefix(next_slot, keys)
+                    target = int(rng.integers(adopted, len(keys) + 1))
+                    assert pool.extend_to(next_slot, target)
+                    live[next_slot] = keys
+                    next_slot += 1
+            elif op == 1 and live:  # grow + register full pages
+                slot = int(rng.choice(list(live)))
+                held = len(pool.allocated(slot))
+                target = int(rng.integers(held, pool._reserved[slot] + 1))
+                pool.grow_to(slot, target)
+                for j in range(len(pool.allocated(slot))):
+                    if j < len(live[slot]) and rng.integers(0, 2):
+                        pool.register_page(slot, j, live[slot][j])
+            elif op == 2 and live:  # write a random token range: CoW
+                slot = int(rng.choice(list(live)))
+                held = pool.allocated(slot)
+                if held:
+                    start = int(rng.integers(0, len(held) * page_size))
+                    stop = int(rng.integers(start + 1, len(held) * page_size + 1))
+                    need = {j for j in range(start // page_size,
+                                             (stop - 1) // page_size + 1)}
+                    shared = sum(
+                        1 for j in need if pool.refcount(held[j]) > 1
+                    )
+                    # Forks are unreserved allocations: only fork within the
+                    # unreserved headroom, as scheduler traffic does (writes
+                    # land past the adopted span, so shared forks are rare).
+                    if shared <= pool.available():
+                        pool.prepare_write(slot, start, stop)
+                        held = pool.allocated(slot)
+                        for j in need:
+                            # written pages are exclusively owned + unindexed
+                            assert pool.refcount(held[j]) == 1
+                            assert held[j] not in pool._key_of
+            elif op == 3 and live:  # retire
+                slot = int(rng.choice(list(live)))
+                pool.release(slot)
+                del live[slot]
+            self._check(pool, live)
+        for slot in list(live):
+            pool.release(slot)
+        self._check(pool, {})
+        # cached pages are recyclable: taking everything drains the pool
+        assert pool.n_free + pool.n_cached == n_pages
+
+    def test_adopt_longest_indexed_run_and_revival(self):
+        pool = PagePool(PageLayout(page_size=4, n_pages=8, span=32))
+        keys = _chain(0, 4)
+        pool.reserve(0, 0)
+        assert pool.extend_to(0, 3) and pool.grow_to(0, 3)
+        for j in range(3):
+            pool.register_page(0, j, keys[j])
+        pool.release(0)  # refcount zero -> indexed pages park in cached LRU
+        assert pool.n_cached == 3 and pool.in_use == 0
+        pool.reserve(1, 0)
+        assert pool.adopt_prefix(1, keys) == 3  # keys[3] unindexed: run stops
+        assert pool.n_cached == 0 and pool.in_use == 3
+        assert [pool.refcount(p) for p in pool.allocated(1)] == [1, 1, 1]
+        # adoption raised reservation with allocation: owed unchanged
+        assert pool._owed == 0 == pool.owed_recomputed()
+
+    def test_register_first_wins(self):
+        pool = PagePool(PageLayout(page_size=4, n_pages=8, span=32))
+        key = _chain(7, 1)[0]
+        for slot in (0, 1):
+            pool.reserve(slot, 1)
+            pool.grow_to(slot, 1)
+        assert pool.register_page(0, 0, key)
+        assert not pool.register_page(1, 0, key)  # concurrent same prompt
+        assert not pool.register_page(0, 0, key)  # idempotent
+        pool.reserve(2, 0)
+        assert pool.adopt_prefix(2, [key]) == 1
+        assert pool.allocated(2) == pool.allocated(0) != pool.allocated(1)
+
+    def test_shared_write_always_forks(self):
+        pool = PagePool(PageLayout(page_size=4, n_pages=8, span=32))
+        keys = _chain(0, 2)
+        pool.reserve(0, 2)
+        pool.grow_to(0, 2)
+        for j in range(2):
+            pool.register_page(0, j, keys[j])
+        pool.reserve(1, 0)
+        assert pool.adopt_prefix(1, keys) == 2
+        shared = list(pool.allocated(1))
+        assert shared == pool.allocated(0)
+        forks = pool.prepare_write(1, 0, 5)  # touches pages 0 and 1
+        assert [(j, old) for j, old, _ in forks] == [(0, shared[0]), (1, shared[1])]
+        assert pool.allocated(1) != pool.allocated(0)
+        assert all(pool.refcount(p) == 1 for p in pool.allocated(0))
+        assert all(pool.refcount(p) == 1 for p in pool.allocated(1))
+        assert pool.cow_forks == 2
+        # owner's copies stay indexed; a third adopter still hits them
+        pool.reserve(2, 0)
+        assert pool.adopt_prefix(2, keys) == 2
+        assert pool.allocated(2) == pool.allocated(0)
+
+    def test_release_frees_only_at_refcount_zero(self):
+        pool = PagePool(PageLayout(page_size=4, n_pages=4, span=16))
+        key = _chain(0, 1)[0]
+        pool.reserve(0, 1)
+        pool.grow_to(0, 1)
+        pool.register_page(0, 0, key)
+        pool.reserve(1, 0)
+        assert pool.adopt_prefix(1, [key]) == 1
+        pid = pool.allocated(0)[0]
+        pool.release(0)
+        assert pool.refcount(pid) == 1 and pool.n_cached == 0  # still held by 1
+        pool.release(1)
+        assert pool.refcount(pid) == 0 and pool.n_cached == 1  # parked, indexed
+
+    def test_cached_lru_eviction_unindexes(self):
+        pool = PagePool(PageLayout(page_size=4, n_pages=2, span=8))
+        keys = _chain(0, 2)
+        pool.reserve(0, 2)
+        pool.grow_to(0, 2)
+        for j in range(2):
+            pool.register_page(0, j, keys[j])
+        pool.release(0)
+        assert pool.n_cached == 2 and pool.n_free == 0
+        # a fresh private allocation must evict the LRU cached page
+        pool.reserve(1, 1)
+        pool.grow_to(1, 1)
+        assert pool.cache_evictions == 1
+        pool.reserve(2, 0)
+        # the evicted (oldest) page left the index; the newer one survives
+        assert pool.adopt_prefix(2, keys) == 0  # chain broken at keys[0]
+        assert keys[0] not in pool._index and keys[1] in pool._index
+
+
+# ==========================================================================
 # Token identity: paged scheduler vs static engine, across state families
 # ==========================================================================
 class TestPagedTokenIdentity:
