@@ -382,6 +382,92 @@ class FileQueue:
                 continue
         return QueueStats(total=total, claimed=claimed, done=done)
 
+    # -- garbage collection ---------------------------------------------------
+    def gc(
+        self,
+        max_age_s: float = 7 * 86400.0,
+        grace_s: float | None = None,
+        dry_run: bool = False,
+    ) -> dict[str, int]:
+        """Collect the debris crashed or long-finished drains leave behind.
+
+        Three families, each safe to remove by protocol argument:
+
+        * ``fails/<key>.<nonce>.json`` attempt records whose task has a
+          terminal ``done/`` record (the retry budget can never be consulted
+          again), or older than ``max_age_s`` regardless.
+        * orphaned claim tombstones (``claims/.<key>.<hex>.tomb``): private
+          to one steal-verify call, normally unlinked within milliseconds —
+          an old one means its host died mid-break. Each is *audited* before
+          retirement: a tombstone still holding a live claim for a task with
+          no claim file and no done record is restored no-clobber (finishing
+          the dead host's interrupted protocol step) rather than deleted;
+          the usual long-expired case is unlinked. Worst case of retiring a
+          tombstone is a re-run of an idempotent task, never corrupted state.
+        * atomic-write scratch (``.*.tmp`` under any subdir, ``*.renew``
+          under claims/): the real record, if any, was installed by
+          ``os.replace``/``os.link``, so an old leftover is pure debris.
+
+        Tombstones and scratch younger than ``grace_s`` (default 2x lease)
+        are left alone — their owner may be mid-call. Never touches task
+        records, live claims, or done records. Returns removal counts;
+        ``dry_run`` counts without removing.
+        """
+        now = time.time()
+        grace = 2.0 * self.lease_s if grace_s is None else float(grace_s)
+        out = {"fails_purged": 0, "tombs_retired": 0, "tombs_restored": 0,
+               "scratch_purged": 0}
+
+        def age(p: Path) -> float:
+            try:
+                return now - p.stat().st_mtime
+            except OSError:
+                return -1.0  # vanished under us: another host collected it
+
+        done = {p.stem for p in (self.root / DONE).glob("*.json")}
+        for p in (self.root / FAILS).glob("*.json"):
+            if p.name.startswith("."):
+                continue  # scratch, handled below
+            key = p.name[: -len(".json")].rsplit(".", 1)[0]
+            if key in done or age(p) > max_age_s:
+                out["fails_purged"] += 1
+                if not dry_run:
+                    p.unlink(missing_ok=True)
+        for p in (self.root / CLAIMS).iterdir():
+            name = p.name
+            if not (name.endswith(".tomb") and name.startswith(".")):
+                continue
+            a = age(p)
+            if a < 0 or a <= grace:
+                continue
+            key = name[1:].rsplit(".", 2)[0]
+            try:
+                content: dict[str, Any] | None = json.loads(p.read_text())
+            except (OSError, json.JSONDecodeError):
+                content = None
+            live = content is not None and content.get("expires_unix", 0) > now
+            if live and key not in done and not self._claim_path(key).exists():
+                out["tombs_restored"] += 1
+                if not dry_run:
+                    self._restore_claim(key, p)
+                continue
+            out["tombs_retired"] += 1
+            if not dry_run:
+                p.unlink(missing_ok=True)
+        for sub in (TASKS, CLAIMS, FAILS, DONE):
+            for p in (self.root / sub).iterdir():
+                scratch = (
+                    p.name.startswith(".") and not p.name.endswith(".tomb")
+                ) or (sub == CLAIMS and p.name.endswith(".renew"))
+                if not scratch:
+                    continue
+                a = age(p)
+                if a > grace:
+                    out["scratch_purged"] += 1
+                    if not dry_run:
+                        p.unlink(missing_ok=True)
+        return out
+
     def progress(self) -> dict[str, Any]:
         """Live per-host view for dashboards: who holds claims, who finished
         what. One directory scan, no payload reads."""
@@ -494,3 +580,52 @@ def drain(
                 idle += 1
             time.sleep(idle_sleep_s)
     return completed
+
+
+def _cli(argv: Sequence[str] | None = None) -> int:
+    """``python -m repro.core.filequeue`` — queue maintenance from cron or by
+    hand on the shared filesystem, no engine import required."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.filequeue",
+        description="Maintenance tools for shared-filesystem task queues.",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    g = sub.add_parser(
+        "gc", help="purge stale attempt records and orphaned lease debris"
+    )
+    g.add_argument("queue_dir")
+    g.add_argument(
+        "--max-age-s", type=float, default=7 * 86400.0,
+        help="fail records older than this are stale even for unfinished tasks",
+    )
+    g.add_argument(
+        "--grace-s", type=float, default=None,
+        help="tombstone/scratch grace window (default: 2x lease)",
+    )
+    g.add_argument("--lease-s", type=float, default=120.0)
+    g.add_argument("--dry-run", action="store_true")
+    s = sub.add_parser("stats", help="queue totals")
+    s.add_argument("queue_dir")
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.queue_dir):
+        ap.error(f"not a queue directory: {args.queue_dir}")
+    if args.cmd == "gc":
+        q = FileQueue(args.queue_dir, lease_s=args.lease_s)
+        out = q.gc(
+            max_age_s=args.max_age_s, grace_s=args.grace_s, dry_run=args.dry_run
+        )
+        tag = " (dry run)" if args.dry_run else ""
+        print(", ".join(f"{k}={v}" for k, v in out.items()) + tag)
+    else:
+        st = FileQueue(args.queue_dir).stats()
+        print(
+            f"total={st.total} claimed={st.claimed} done={st.done} "
+            f"available={st.available}"
+        )
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess test
+    raise SystemExit(_cli())

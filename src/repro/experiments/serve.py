@@ -24,6 +24,15 @@ Axes/settings understood by :func:`serve_sweep`:
                          effective on fully-paged streaming models)
   tenant_quota           per-tenant worst-case page cap (default None)
   tenant_weights         {tenant: weight} stride-fair admission (default None)
+  speculative            drafted multi-token decode steps with batched
+                         verify (default False; greedy slots only)
+  draft_k                max draft tokens per verify call (default 4)
+  drafter                "ngram" (self-speculative prompt lookup, default)
+                         or "oracle" (an untimed reference pass records
+                         each request's greedy continuation and replays
+                         it — the high-acceptance upper bound; run with
+                         prefix_sharing off for row comparability, or the
+                         reference pass also warms the prefix index)
   n_requests             workload size (default 8)
   prompt_lens            cycled prompt lengths (default (4, 8, 12))
   shared_prefix_len      tokens of one shared prompt prefix prepended to
@@ -52,7 +61,7 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.core.task import Context
 from repro.serve.request import Request
-from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.scheduler import Scheduler, SchedulerConfig, _pow2_ceil
 from repro.sharding.rules import ShardingCtx
 
 
@@ -152,8 +161,13 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         prefix_sharing=bool(_opt(ctx, "prefix_sharing", True)),
         tenant_quota=_opt(ctx, "tenant_quota", None),
         tenant_weights=_opt(ctx, "tenant_weights", None),
+        speculative=bool(_opt(ctx, "speculative", False)),
+        draft_k=int(_opt(ctx, "draft_k", 4)),
         seed=int(_opt(ctx, "seed", 0)),
     )
+    drafter_kind = str(_opt(ctx, "drafter", "ngram"))
+    if drafter_kind not in ("ngram", "oracle"):
+        raise ValueError(f"unknown drafter {drafter_kind!r}")
     sched = Scheduler(cfg, params, ShardingCtx.null(), sched_cfg)
 
     rng = np.random.default_rng(int(_opt(ctx, "seed", 0)))
@@ -186,9 +200,62 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         for p in sorted(warm_lens):
             sched.submit(Request(np.zeros(p, np.int32), max_new_tokens=2))
         sched.run()
+        if sched_cfg.speculative:
+            # Compile the verify + rollback programs for every k-bucket
+            # outside the timed window: a draft of out-of-vocab sentinels
+            # can never be accepted, so one request per bucket exercises
+            # verify and the rejection path (replay or pos fixup).
+            from repro.serve.draft import ScriptDrafter
+
+            wlen = max(shared_len + p for p in lens)
+            seen: set[int] = set()
+            for d in range(sched_cfg.draft_k, 0, -1):
+                b = _pow2_ceil(d + 1)
+                if b in seen:
+                    continue
+                seen.add(b)
+                sched.set_drafter(ScriptDrafter([np.full(d, -2, np.int32)]))
+                sched.submit(Request(np.zeros(wlen, np.int32), max_new_tokens=d + 2))
+                sched.run()
         if sched.pool is not None:
             sched.pool.reset_peaks()
         sched.deferred_admissions = 0
+
+    if sched_cfg.speculative:
+        if drafter_kind == "oracle":
+            # Untimed reference pass: run the workload with drafting muted
+            # (empty ScriptDrafter proposes nothing -> plain greedy) to
+            # record each request's continuation, then replay it as a
+            # perfect draft — the acceptance upper bound for this workload.
+            from repro.serve.draft import ReplayDrafter, ScriptDrafter
+
+            sched.set_drafter(ScriptDrafter([]))
+            ref_rids = [
+                sched.submit(
+                    Request(
+                        r.prompt, max_new_tokens=r.max_new_tokens,
+                        temperature=r.temperature, tenant=r.tenant,
+                    )
+                )
+                for r in requests
+            ]
+            while sched.pending or sched.num_active:
+                ctx.heartbeat()
+                sched.step()
+            seqs = [
+                np.concatenate(
+                    [requests[i].prompt,
+                     np.asarray(sched.result(rid).tokens, np.int32)]
+                )
+                for i, rid in enumerate(ref_rids)
+            ]
+            sched.set_drafter(ReplayDrafter(seqs))
+            if sched.pool is not None:
+                sched.pool.reset_peaks()
+        else:
+            from repro.serve.draft import NgramDrafter
+
+            sched.set_drafter(NgramDrafter())
 
     ttft_cold = None
     if shared_len and _opt(ctx, "prime_prefix", False):
@@ -210,6 +277,11 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     preempts_before = sched.preemptions_total
     hits_before = sched.prefix_hits
     hit_tokens_before = sched.prefix_hit_tokens
+    spec_before = sched.total_spec_steps
+    replays_before = sched.total_spec_replays
+    fallbacks_before = sched.spec_fallbacks
+    drafted_before = sched.drafted_tokens_total
+    accepted_before = sched.accepted_tokens_total
     t0 = time.perf_counter()
     if rate > 0.0:
         arrivals = np.cumsum(rng.exponential(scale=1.0 / rate, size=n_req))
@@ -241,6 +313,17 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     itl_a = np.array(itl) if itl else np.zeros(1)
     cache_bytes = sched.paged_cache_bytes()
     warm_ttft = np.array([rs.ttft_s for rs in done if rs.adopted_tokens > 0])
+    decode_steps = sched.total_decode_steps - steps_before
+    spec_steps = sched.total_spec_steps - spec_before
+    spec_replays = sched.total_spec_replays - replays_before
+    drafted = sched.drafted_tokens_total - drafted_before
+    accepted = sched.accepted_tokens_total - accepted_before
+    # The headline speculation metric: generated tokens per model-step-
+    # equivalent (decode steps + verify calls + rollback replays — every
+    # forward pass the decode phase paid). Plain decoding pins this at
+    # ~min(n_slots, live requests); speculation lifts it by accepted
+    # tokens per verify.
+    model_steps = decode_steps + spec_steps + spec_replays
     return {
         "arch": arch,
         "attn_backend": backend,
@@ -253,11 +336,19 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         "ttft_p50_s": float(np.percentile(ttft, 50)),
         "itl_p50_s": float(np.percentile(itl_a, 50)),
         "itl_p95_s": float(np.percentile(itl_a, 95)),
-        "decode_steps": sched.total_decode_steps - steps_before,
+        "decode_steps": decode_steps,
         "chunk_steps": sched.total_chunk_steps - chunks_before,
+        "spec_steps": spec_steps,
+        "spec_replays": spec_replays,
+        "spec_fallbacks": sched.spec_fallbacks - fallbacks_before,
+        "drafted_tokens": drafted,
+        "accepted_tokens": accepted,
+        "accept_rate": accepted / drafted if drafted else None,
+        "tokens_per_model_step": toks / model_steps if model_steps else None,
         "decode_traces": sched.decode_traces,
         "prefill_traces": sched.prefill_traces,
         "chunk_traces": sched.chunk_traces,
+        "verify_traces": sched.verify_traces,
         "deferred_admissions": sched.stats()["deferred_admissions"],
         "quota_deferrals": sched.quota_deferrals,
         "preemptions": sched.preemptions_total - preempts_before,
@@ -273,5 +364,8 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         "chunk_budget": sched_cfg.chunk_budget,
         "preemption": sched_cfg.preemption,
         "prefix_sharing": sched_cfg.prefix_sharing,
+        "speculative": sched_cfg.speculative,
+        "draft_k": sched_cfg.draft_k if sched_cfg.speculative else None,
+        "drafter": drafter_kind if sched_cfg.speculative else None,
         "tokens": [rs.tokens for rs in done],
     }

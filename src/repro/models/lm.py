@@ -177,6 +177,7 @@ def chunk_step(
     tokens: jax.Array,  # (1, C) int32: one slot's prompt chunk (maybe padded)
     chunk_len: jax.Array,  # scalar int32: number of real tokens (<= C)
     sctx: ShardingCtx,
+    all_logits: bool = False,
 ) -> tuple[jax.Array, dict[str, Any]]:
     """Streamed (chunked) prefill for one slot.
 
@@ -189,7 +190,14 @@ def chunk_step(
     every true length in a chunk bucket shares one compiled program. Returns
     the logits at position ``chunk_len - 1`` (the sampling point when the
     chunk completes the prompt) and the updated states with
-    ``pos + chunk_len`` tokens cached."""
+    ``pos + chunk_len`` tokens cached.
+
+    With ``all_logits`` the returned logits cover every chunk position
+    ``(1, C, V)`` — the **verify mode** speculative decoding rides: the
+    logits at chunk index ``i`` are exactly what a sequential decode step
+    would produce after consuming ``tokens[:, : i + 1]``, so one chunk call
+    scores a whole drafted run at once (positions past ``chunk_len`` are
+    pad garbage; callers slice them off)."""
     cur_pos = jnp.asarray(states["pos"])  # scalar: tokens already cached
     page_table = states.get("page_table")
     x = embed_tokens(params["embed"], cfg, tokens, sctx)
@@ -203,9 +211,10 @@ def chunk_step(
         sctx=sctx, page_table=page_table, chunk_len=chunk_len,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    x_last = jax.lax.dynamic_slice_in_dim(x, chunk_len - 1, 1, axis=1)
+    if not all_logits:
+        x = jax.lax.dynamic_slice_in_dim(x, chunk_len - 1, 1, axis=1)
     logits = logits_for_positions(
-        x_last, unembed_weight(params["embed"], cfg), cfg, sctx
+        x, unembed_weight(params["embed"], cfg), cfg, sctx
     )
     out = {"layers": new_states, "pos": cur_pos + chunk_len}
     if page_table is not None:

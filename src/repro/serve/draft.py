@@ -1,0 +1,114 @@
+"""Draft-token proposers for speculative decoding.
+
+A :class:`Drafter` guesses the next ``k`` tokens of a sequence from its
+context alone; the scheduler then *verifies* the whole guess in one
+``chunk_step`` call (all-position logits) and keeps the longest greedy-
+matching run — emitting ``accepted + 1`` tokens per model step instead of
+one. The interface is deliberately model-free (``propose(context, k)``):
+the built-in drafters are self-speculative (no second model), and a
+learned draft model slots in behind the same two methods.
+
+Drafters are *advisory*: a wrong proposal costs one rejected verify
+position, never a wrong token — greedy acceptance keeps outputs
+token-identical to plain decoding by construction.
+"""
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+
+class Drafter(abc.ABC):
+    """Proposes up to ``k`` draft tokens continuing ``context``.
+
+    ``context`` is the full known token sequence (prompt ++ generated so
+    far, including the token about to be fed to the model). Return a
+    ``(<=k,)`` int array — empty means "no guess" and the scheduler runs a
+    plain decode step for that slot. Must be deterministic for a given
+    context (greedy identity tests replay workloads)."""
+
+    @abc.abstractmethod
+    def propose(self, context: np.ndarray, k: int) -> np.ndarray: ...
+
+    def reset(self) -> None:  # pragma: no cover - optional hook
+        """Forget any cross-request state (called between workloads)."""
+
+
+class NgramDrafter(Drafter):
+    """Self-speculative prompt-lookup drafting (no draft model).
+
+    Finds the most recent *earlier* occurrence of the context's trailing
+    n-gram and proposes the tokens that followed it — longest n first, so
+    a more specific match wins. Catches the repetition structure real
+    prompts are full of (copied spans, code idioms, "assistant echoes the
+    question") at zero model cost; on contexts with no self-overlap it
+    proposes nothing and the slot falls back to plain decoding.
+    """
+
+    def __init__(self, max_ngram: int = 4, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(f"need 1 <= min_ngram <= max_ngram, got {min_ngram}..{max_ngram}")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, context: np.ndarray, k: int) -> np.ndarray:
+        ctx = np.asarray(context, np.int32).reshape(-1)
+        L = len(ctx)
+        if k < 1 or L < self.min_ngram + 1:
+            return np.zeros(0, np.int32)
+        for n in range(min(self.max_ngram, L - 1), self.min_ngram - 1, -1):
+            suffix = ctx[L - n :]
+            # Earlier occurrences of the trailing n-gram: windows over
+            # ctx[:-1] start at i <= L-1-n, so the suffix's own occurrence
+            # (start L-n) is excluded and every match leaves at least one
+            # continuation token. The continuation may overlap the suffix —
+            # that is the periodic case drafting exists for.
+            windows = np.lib.stride_tricks.sliding_window_view(ctx[:-1], n)
+            hits = np.nonzero((windows == suffix).all(axis=1))[0]
+            if hits.size == 0:
+                continue
+            start = int(hits[-1]) + n
+            cont = ctx[start : start + k]
+            if cont.size:
+                return cont.astype(np.int32)
+        return np.zeros(0, np.int32)
+
+
+class ReplayDrafter(Drafter):
+    """Oracle-style drafter that replays known full sequences.
+
+    Holds complete token sequences (prompt ++ continuation); when a
+    context is a strict prefix of one of them, proposes the next ``k``
+    tokens of that sequence. Stands in for a perfect draft model: the
+    benchmark's high-acceptance upper bound, and the deterministic
+    acceptance path property tests drive."""
+
+    def __init__(self, sequences):
+        self._seqs = [np.asarray(s, np.int32).reshape(-1) for s in sequences]
+
+    def propose(self, context: np.ndarray, k: int) -> np.ndarray:
+        ctx = np.asarray(context, np.int32).reshape(-1)
+        L = len(ctx)
+        for seq in self._seqs:
+            if len(seq) > L and np.array_equal(seq[:L], ctx):
+                return seq[L : L + k].copy()
+        return np.zeros(0, np.int32)
+
+
+class ScriptDrafter(Drafter):
+    """Proposes from a fixed script of drafts (test harness).
+
+    Each ``propose`` call pops the next entry — an int array proposed
+    verbatim (truncated to ``k``) — and returns empty once the script is
+    exhausted. Lets tests force exact acceptance/rejection patterns."""
+
+    def __init__(self, drafts):
+        self._drafts = [np.asarray(d, np.int32).reshape(-1) for d in drafts]
+        self.calls = 0
+
+    def propose(self, context: np.ndarray, k: int) -> np.ndarray:
+        self.calls += 1
+        if not self._drafts:
+            return np.zeros(0, np.int32)
+        return self._drafts.pop(0)[:k]

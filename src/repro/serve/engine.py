@@ -44,6 +44,9 @@ class ServeConfig:
     min_chunk: int = 16
     preemption: str = "off"  # "off" | "swap" | "recompute"
     prefix_sharing: bool = True  # adopt indexed prompt-prefix pages
+    speculative: bool = False  # drafted multi-token steps (greedy slots)
+    draft_k: int = 4  # max draft tokens per verify call
+    drafter: Any = None  # Drafter instance; None -> NgramDrafter
 
 
 @dataclass
@@ -90,6 +93,9 @@ class Engine:
                     min_chunk=self.serve.min_chunk,
                     preemption=self.serve.preemption,
                     prefix_sharing=self.serve.prefix_sharing,
+                    speculative=self.serve.speculative,
+                    draft_k=self.serve.draft_k,
+                    drafter=self.serve.drafter,
                 ),
             )
         return self._schedulers[n_slots]

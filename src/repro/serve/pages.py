@@ -379,6 +379,48 @@ class PagePool:
             self.peak_in_use = max(self.peak_in_use, self.in_use)
         return forks
 
+    def truncate_to(
+        self, slot: int, n_total: int, keep_reservation: bool = False
+    ) -> list[int]:
+        """Drop ``slot``'s trailing pages until it holds ``n_total``
+        (speculative-decoding rollback: pages grown for rejected draft
+        tokens are returned). Popped pages are recycled exactly as in
+        ``release`` — though in speculative use they are always private
+        refcount-1 pages (CoW forking and page-aligned adoption mean
+        sharing only ever covers the prompt prefix, and drafts extend past
+        it). With ``keep_reservation`` the reservation stays (the freed
+        backing becomes owed again — ``preemption="off"`` mode, where the
+        worst case was reserved up front); otherwise the reservation
+        shrinks with the allocation. Returns the popped page ids (newest
+        first) so the caller can re-point table entries at the trash page.
+        """
+        held = self._allocated.get(slot)
+        if held is None:
+            raise ValueError(f"slot {slot} holds no allocation to truncate")
+        if n_total < 0 or n_total > len(held):
+            raise ValueError(
+                f"slot {slot}: truncate to {n_total} of {len(held)} pages"
+            )
+        removed: list[int] = []
+        while len(held) > n_total:
+            pid = held.pop()
+            removed.append(pid)
+            r = self._ref[pid] - 1
+            if r > 0:
+                self._ref[pid] = r
+                continue
+            del self._ref[pid]
+            if pid in self._key_of:
+                self._cached[pid] = None
+            else:
+                self._free.append(pid)
+        if removed:
+            if keep_reservation:
+                self._owed += len(removed)
+            else:
+                self._reserved[slot] -= len(removed)
+        return removed
+
     # -- retirement ---------------------------------------------------------
     def release(self, slot: int) -> None:
         """Unmap every page the slot holds and drop its reservation. A

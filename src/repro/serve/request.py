@@ -66,6 +66,12 @@ class RequestState:
     # Prompt tokens satisfied from the shared prefix index at admission
     # (their pages were adopted, not recomputed — the warm-prefix win).
     adopted_tokens: int = 0
+    # Speculative decoding: verify steps this request rode, draft tokens
+    # proposed for it, and how many of those the verify pass accepted
+    # (each spec step also emits one non-draft bonus token on top).
+    spec_steps: int = 0
+    drafted: int = 0
+    accepted: int = 0
     swap: Any = None  # host-side page/state snapshot while PREEMPTED (swap)
     # Wall-clock stamps (time.perf_counter seconds).
     t_submit: float = 0.0

@@ -54,6 +54,28 @@ each admit advances its tenant's virtual pass by ``tokens / weight`` — so
 a heavy tenant cannot starve a light one. With both unset the admission
 queue stays exact-FIFO.
 
+**Speculative decoding.** With ``speculative``, every greedy ACTIVE slot
+gets a chance to emit *several* tokens per step: a :class:`Drafter`
+proposes up to ``draft_k`` continuation tokens from the token history
+alone (the default n-gram prompt-lookup drafter needs no second model),
+and one **verify** call — ``lm.chunk_step`` with ``all_logits`` — scores
+the pending input token plus the whole draft at once. The logits at
+chunk index ``i`` are exactly what sequential decoding would produce
+after consuming token ``i``, so greedy acceptance (keep the longest run
+where the model's argmax equals the draft) emits ``accepted + 1`` tokens
+that are token-identical to plain decoding by construction. Rejection
+rollback rides the existing machinery: page growth for the draft is
+truncated back (``PagePool.truncate_to``; refcounts preserved — draft
+pages are always private), garbage KV beyond the accepted position is
+inert under the positional masks for dense/MLA caches, and archs whose
+state genuinely advanced (recurrent carries, windowed ring folds) replay
+the accepted tokens from a pre-verify snapshot through the already-
+compiled chunk program. Verify shapes come from a fixed bucket set (one
+trace per (k-bucket, page-bucket)), and speculation composes with
+chunked prefill, preemption, prefix sharing, and tenant admission — a
+slot that cannot get pages for its draft simply decodes plainly that
+step (``spec_fallbacks``).
+
 The decode hot path is shape-stable by construction: tokens ``(n_slots,
 1)``, active mask ``(n_slots,)``, positions ``(n_slots,)``, page table
 ``(n_slots, max_pages)`` int32 — joins, leaves, chunk streaming, page
@@ -61,10 +83,10 @@ growth, and preemption only change array *values*, so the step never
 recompiles after its single warmup trace (``decode_traces``;
 ``prefill_traces``/``admit_traces`` count per-bucket compiles of the
 legacy path, ``chunk_traces`` per chunk bucket, ``swap_traces`` the
-swap-out/in pair). Inactive slots keep decoding garbage with a frozen
-position; their writes land in the trash page (paged) or their own
-about-to-be-overwritten row (contiguous), so no live state is ever
-visible through the masks.
+swap-out/in pair, ``verify_traces`` per verify bucket pair). Inactive
+slots keep decoding garbage with a frozen position; their writes land in
+the trash page (paged) or their own about-to-be-overwritten row
+(contiguous), so no live state is ever visible through the masks.
 """
 from __future__ import annotations
 
@@ -91,6 +113,7 @@ from repro.serve.cache import (
     insert_slot_leaf,
     scatter_pages_leaf,
 )
+from repro.serve.draft import Drafter, NgramDrafter
 from repro.serve.pages import (
     PageLayout,
     PagePool,
@@ -159,6 +182,14 @@ class SchedulerConfig:
     # scheduling over per-tenant weights (None -> exact FIFO).
     tenant_quota: int | None = None
     tenant_weights: dict[str, float] | None = None
+    # Speculative decoding: draft up to draft_k tokens per greedy ACTIVE
+    # slot and verify them in one all-position chunk call, emitting
+    # accepted+1 tokens per step (token-identical to plain greedy).
+    # drafter=None installs the self-speculative NgramDrafter; any
+    # Drafter instance (oracle, learned draft model wrapper) slots in.
+    speculative: bool = False
+    draft_k: int = 4
+    drafter: Drafter | None = None
 
 
 class Scheduler:
@@ -191,6 +222,18 @@ class Scheduler:
         # Chunked streaming handles token-only requests; modality prefixes
         # and enc-dec cross caches go through whole-prompt prefill.
         self._stream_capable = self._chunked and not cfg.enc_dec and not cfg.prefix_len
+        if sched.speculative and sched.draft_k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {sched.draft_k}")
+        # Speculation rides chunk_step, which (like streaming) handles
+        # token-only decoder stacks; enc-dec and modality-prefix models
+        # fall back to plain decoding. Per-request gating (greedy only,
+        # no extras) happens in _spec_step.
+        self._spec = sched.speculative and not cfg.enc_dec and not cfg.prefix_len
+        self._drafter: Drafter | None = None
+        if self._spec:
+            self._drafter = (
+                sched.drafter if sched.drafter is not None else NgramDrafter()
+            )
 
         span = model_page_span(cfg, sched.cache_len) if sched.paged else 0
         self._paged = span > 0
@@ -220,6 +263,15 @@ class Scheduler:
 
         kinds = set(cfg.block_pattern) | set(cfg.first_blocks)
         self._bucketed = sched.prefill_buckets and not (kinds & _RECURRENT_KINDS)
+        # Rejected draft positions leave inert garbage in dense / MLA
+        # caches (positional masks never read past the accepted position),
+        # but genuinely corrupt state that *advanced*: recurrent carries
+        # consumed the rejected tokens, and windowed ring caches fold
+        # rejected writes onto live window entries. Those archs roll back
+        # by replaying the accepted run from a pre-verify snapshot.
+        self._needs_replay = bool(kinds & _RECURRENT_KINDS) or (
+            "local_attn" in kinds
+        )
         # Prefix sharing needs every stateful leaf to live behind the page
         # table: windowed ring pages are position-folded (not prefix
         # content-addressable) and per-slot leaves (MLA ckv, recurrent
@@ -252,8 +304,14 @@ class Scheduler:
         self.chunk_traces = 0  # one per chunk bucket
         self.swap_traces = 0  # swap-out + swap-in programs
         self.cow_traces = 0  # copy-on-write fork programs (per fork count)
+        self.verify_traces = 0  # one per (k-bucket, page-bucket) pair
         self.total_decode_steps = 0
         self.total_chunk_steps = 0
+        self.total_spec_steps = 0  # verify calls (one slot each)
+        self.total_spec_replays = 0  # partial-accept rollback replays
+        self.spec_fallbacks = 0  # drafts dropped for lack of pages
+        self.drafted_tokens_total = 0
+        self.accepted_tokens_total = 0
         self.deferred_admissions = 0  # pool-backpressure events
         self.quota_deferrals = 0  # tenant-quota skip events
         self.preemptions_total = 0
@@ -357,7 +415,8 @@ class Scheduler:
         self._admit_jit = jax.jit(_admit_fn)
 
         # -- unified-step programs (chunk streaming, slot reset, swap) -------
-        def _chunk_body(layers, pos, tokens, slot, start, chunk_len, page_ids):
+        def _chunk_body(layers, pos, tokens, slot, start, chunk_len, page_ids,
+                        all_logits=False):
             c, template = _slot_surgery_trees()
             slot_layers = jax.tree.map(
                 lambda cap, full, t: full if cap else extract_slot_leaf(full, t, slot),
@@ -367,7 +426,8 @@ class Scheduler:
             if page_ids is not None:
                 states["page_table"] = page_ids[None, :]
             logits, new = lm.chunk_step(
-                self.params, self.cfg, states, tokens, chunk_len, self.sctx
+                self.params, self.cfg, states, tokens, chunk_len, self.sctx,
+                all_logits=all_logits,
             )
             new_layers = jax.tree.map(
                 lambda cap, full, s: s if cap else insert_slot_leaf(full, s, slot),
@@ -381,13 +441,33 @@ class Scheduler:
                 self.chunk_traces += 1
                 return _chunk_body(layers, pos, tokens, slot, start, chunk_len, page_ids)
 
+            def _verify_fn(layers, pos, tokens, slot, start, chunk_len, page_ids):
+                self.verify_traces += 1
+                return _chunk_body(
+                    layers, pos, tokens, slot, start, chunk_len, page_ids,
+                    all_logits=True,
+                )
+
         else:
 
             def _chunk_fn(layers, pos, tokens, slot, start, chunk_len):
                 self.chunk_traces += 1
                 return _chunk_body(layers, pos, tokens, slot, start, chunk_len, None)
 
+            def _verify_fn(layers, pos, tokens, slot, start, chunk_len):
+                self.verify_traces += 1
+                return _chunk_body(
+                    layers, pos, tokens, slot, start, chunk_len, None,
+                    all_logits=True,
+                )
+
         self._chunk_jit = jax.jit(_chunk_fn)
+        # Verify program for speculative decoding: the chunk body with
+        # logits at *every* position, so one call scores a whole draft.
+        self._verify_jit = jax.jit(_verify_fn)
+        # Position-only fixup for partial acceptance on archs whose caches
+        # tolerate garbage past the accepted position (dense / MLA).
+        self._setpos_jit = jax.jit(lambda pos, slot, val: pos.at[slot].set(val))
 
         def _reset_fn(layers, pos, slot, pos_val):
             # Reset the slot's per-slot leaves to the empty-recurrence state
@@ -479,6 +559,12 @@ class Scheduler:
     def reset_rng(self, seed: int) -> None:
         self._key = jax.random.PRNGKey(seed)
 
+    def set_drafter(self, drafter: Drafter) -> None:
+        """Swap the draft proposer (e.g. install a workload oracle for
+        benchmarking acceptance upper bounds). No-op with speculation off."""
+        if self._spec:
+            self._drafter = drafter
+
     @property
     def pending(self) -> int:
         return len(self._queue) + len(self._preempted)
@@ -529,24 +615,38 @@ class Scheduler:
     # -- one scheduling iteration ------------------------------------------
     def step(self) -> bool:
         """Admit/resume from the queues, stream at most one prefill chunk
-        (fixed power-of-two buckets up to the token budget), then run one
-        decode step over the decoding slots. Returns True if any model
-        program ran."""
+        (fixed power-of-two buckets up to the token budget), run per-slot
+        speculative verify steps (when enabled), then one decode step over
+        the remaining decoding slots. Returns True if any model program
+        ran."""
         self._admit_pending()
         ran = False
         if self._chunked:
             ran = self._prefill_chunk_step()
-        if not self._active_mask.any():
+        handled: set[int] = set()
+        if self._spec and self._active_mask.any():
+            handled = self._spec_step()
+            ran = ran or bool(handled)
+        # Slots that already emitted via verify sit out this decode: their
+        # cleared mask freezes pos and per-slot states exactly like a
+        # PREFILLING slot's, and their garbage writes are confined the
+        # same way (trash page / positions the next real write overwrites
+        # before any read).
+        mask = self._active_mask
+        if handled:
+            mask = mask.copy()
+            mask[list(handled)] = False
+        if not mask.any():
             return ran
         if self._paged:
-            self._grow_pages()
+            self._grow_pages(skip=handled)
             if self._sharing:
                 # CoW guard: decode writes one token per ACTIVE slot at its
                 # current position — fork first if that page is shared (the
                 # scheduler's write pattern keeps this a no-op, but the
                 # invariant is enforced here, not assumed).
                 for slot, rs in list(self._active.items()):
-                    if rs.status is RequestStatus.ACTIVE:
+                    if rs.status is RequestStatus.ACTIVE and slot not in handled:
                         p = int(self._pos_host[slot])
                         self._apply_cow(slot, self.pool.prepare_write(slot, p, p + 1))
             self._states["page_table"] = jnp.asarray(self._pt)
@@ -556,7 +656,7 @@ class Scheduler:
             self.params,
             self._states,
             jnp.asarray(self._tokens),
-            jnp.asarray(self._active_mask),
+            jnp.asarray(mask),
         )
         self.last_decode_logits = logits
         cols = np.asarray(self._sample(logits[:, -1, :], jnp.asarray(self._temps), sub))
@@ -564,8 +664,8 @@ class Scheduler:
 
         now = time.perf_counter()
         for slot, rs in list(self._active.items()):
-            if rs.status is not RequestStatus.ACTIVE:
-                continue  # still streaming its prompt in
+            if rs.status is not RequestStatus.ACTIVE or slot in handled:
+                continue  # still streaming its prompt in, or emitted via spec
             rs.decode_steps += 1
             self._pos_host[slot] += 1
             tok = int(cols[slot])
@@ -690,6 +790,170 @@ class Scheduler:
         self._active_mask[slot] = True
         self._maybe_finish(rs, now)
 
+    # -- speculative decoding -------------------------------------------------
+    def _spec_step(self) -> set[int]:
+        """Draft + verify for every eligible ACTIVE slot; returns the slots
+        that emitted tokens here (they sit out this step's decode).
+
+        Eligibility is per request: greedy only (acceptance compares the
+        model's argmax — a sampled token has no "the" correct value), no
+        modality extras (chunk_step is token-only), and at least one token
+        of budget beyond this step's guaranteed emission. A slot whose
+        draft can't get page backing falls back to plain decoding for this
+        step rather than stalling (``spec_fallbacks``)."""
+        handled: set[int] = set()
+        for slot in sorted(self._active):
+            rs = self._active.get(slot)
+            if rs is None or rs.status is not RequestStatus.ACTIVE:
+                continue  # may have been preempted by an earlier verify
+            req = rs.request
+            if req.temperature > 0.0 or req.extras:
+                continue
+            budget = req.max_new_tokens - len(rs.tokens) - 1
+            if budget < 1:
+                continue
+            ctx = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(rs.tokens, np.int32)]
+            )
+            k = min(self.sched.draft_k, budget)
+            draft = np.asarray(
+                self._drafter.propose(ctx, k), np.int32
+            ).reshape(-1)[:k]
+            if draft.size == 0:
+                continue
+            if self._verify_slot(slot, rs, draft):
+                handled.add(slot)
+        return handled
+
+    def _verify_slot(self, slot: int, rs: RequestState, draft: np.ndarray) -> bool:
+        """Score ``[pending token, draft...]`` in one all-logits chunk call
+        and emit the longest greedy-matching run plus the model's own next
+        token. Returns False (no tokens emitted; slot decodes plainly this
+        step) only when the draft can't get page backing.
+
+        The invariant in and out: the cache holds ``prompt + generated - 1``
+        tokens and ``_tokens[slot]`` is the last generated token, not yet
+        fed. Verify feeds it along with the draft at positions ``start..``;
+        greedy logits at chunk index ``i`` answer "what follows token i",
+        so ``accepted`` counts matching draft positions and index
+        ``accepted`` supplies the bonus/correction token — between 1 and
+        ``k + 1`` tokens per call, token-identical to plain decoding."""
+        k = len(draft)
+        n_real = k + 1
+        # Fixed bucket set: pow2 of the verify length, capped at the
+        # configured maximum — one compile per (k-bucket, page-bucket).
+        bucket = min(_pow2_ceil(n_real), _pow2_ceil(self.sched.draft_k + 1))
+        start = int(self._pos_host[slot])
+        page_ids = None
+        need = 0
+        if self._paged:
+            need = self.pages.pages_for_len(start + n_real)
+            held = len(self.pool.allocated(slot))
+            if need > held:
+                if not self._ensure_pages(slot, need, rid=rs.rid):
+                    self.spec_fallbacks += 1
+                    return False
+                self._pt[slot, held:need] = self.pool.grow_to(slot, need)
+            if self._sharing:
+                # Defensive CoW guard, like the decode step's: the verify
+                # range starts at/after the first generated position, past
+                # any shared prompt page, so this is a steady-state no-op.
+                self._apply_cow(
+                    slot, self.pool.prepare_write(slot, start, start + n_real)
+                )
+            n_lp = min(_pow2_ceil(max(need, 1)), self.pages.max_pages)
+            page_ids = jnp.asarray(self._pt[slot, :n_lp])
+
+        # Pre-verify snapshot for rollback-by-replay (recurrent carries,
+        # windowed ring folds). Taken *after* CoW so forked pages are in
+        # it; JAX array immutability makes this a free reference, not a
+        # copy — it only pins memory until the verify result replaces it.
+        snap = self._states["layers"] if self._needs_replay else None
+
+        toks = np.zeros(bucket, np.int32)
+        toks[0] = self._tokens[slot, 0]
+        toks[1:n_real] = draft
+        toks_dev = jnp.asarray(toks)[None, :]
+        slot_t = jnp.asarray(slot, jnp.int32)
+        start_t = jnp.asarray(start, jnp.int32)
+        args = [
+            self._states["layers"], self._states["pos"], toks_dev,
+            slot_t, start_t, jnp.asarray(n_real, jnp.int32),
+        ]
+        if self._paged:
+            args.append(page_ids)
+        logits, layers, pos = self._verify_jit(*args)
+
+        # Greedy acceptance on host, matching _sample_fn's cast + argmax.
+        lg = np.asarray(logits[0, :n_real, : self.cfg.vocab_size]).astype(np.float32)
+        greedy = lg.argmax(axis=-1).astype(np.int32)
+        accept = 0
+        while accept < k and greedy[accept] == draft[accept]:
+            accept += 1
+        emitted = [int(t) for t in draft[:accept]] + [int(greedy[accept])]
+        n_new = accept + 1  # tokens the cache should have gained
+
+        if accept == k:
+            # Full acceptance: the verify pass already cached exactly the
+            # accepted run and set pos = start + n_real.
+            self._states["layers"] = layers
+            self._states["pos"] = pos
+        else:
+            if self._paged:
+                # Return the pages grown for rejected positions (always
+                # private: sharing only covers the prompt prefix). Under
+                # worst-case reservations the backing stays owed to this
+                # slot; reservation-free, it returns to the pool.
+                keep = self.pages.pages_for_len(start + n_new)
+                removed = self.pool.truncate_to(
+                    slot, keep, keep_reservation=self.sched.preemption == "off"
+                )
+                if removed:
+                    self._pt[slot, keep : keep + len(removed)] = self.pages.trash
+                    n_lp = min(_pow2_ceil(max(keep, 1)), self.pages.max_pages)
+                    page_ids = jnp.asarray(self._pt[slot, :n_lp])
+            if self._needs_replay:
+                # State advanced through rejected tokens (recurrence) or
+                # rejected writes folded onto live ring entries: re-run the
+                # accepted run from the snapshot through the chunk program
+                # (same shapes as verify, so no fresh compile per accept
+                # count — chunk_len is a traced scalar).
+                rargs = [
+                    snap, self._states["pos"], toks_dev, slot_t, start_t,
+                    jnp.asarray(n_new, jnp.int32),
+                ]
+                if self._paged:
+                    rargs.append(page_ids)
+                _, rlayers, rpos = self._chunk_jit(*rargs)
+                self._states["layers"] = rlayers
+                self._states["pos"] = rpos
+                self.total_spec_replays += 1
+            else:
+                # Dense/MLA: garbage past the accepted position is inert
+                # under positional masks; only the position needs fixing.
+                self._states["layers"] = layers
+                self._states["pos"] = self._setpos_jit(
+                    pos, slot_t, jnp.asarray(start + n_new, jnp.int32)
+                )
+
+        self._pos_host[slot] = start + n_new
+        rs.spec_steps += 1
+        rs.drafted += k
+        rs.accepted += accept
+        self.total_spec_steps += 1
+        self.drafted_tokens_total += k
+        self.accepted_tokens_total += accept
+        now = time.perf_counter()
+        for tok in emitted:
+            rs.tokens.append(tok)
+            rs.t_tokens.append(now)
+            self._tokens[slot, 0] = tok
+            self._maybe_finish(rs, now)
+            if rs.done:
+                break  # stop token mid-run: drop the rest, as plain decode would
+        return True
+
     # -- pages: growth, reservation-free accounting, preemption --------------
     def _apply_cow(self, slot: int, forks: list[tuple[int, int, int]]) -> None:
         """Materialise ``prepare_write`` forks: re-point the host page-table
@@ -715,15 +979,18 @@ class Scheduler:
                 return False
         return True
 
-    def _grow_pages(self) -> None:
+    def _grow_pages(self, skip: set[int] = frozenset()) -> None:
         """Allocate the page backing the position each decoding slot writes
         this step. Worst-case reservations guarantee this; reservation-free
         admission may have to preempt first — including the growing slot
         *itself* when everyone else's pages are pinned (e.g. an *older*
         PREFILLING streamer holds the pool; only younger streamers are
-        victims): the grower is parked and resumes once pages free up."""
+        victims): the grower is parked and resumes once pages free up.
+        ``skip`` names slots sitting out this decode (already emitted via
+        speculative verify): they write nothing, so growing for them now
+        would only add pool pressure."""
         for slot, rs in list(self._active.items()):
-            if rs.status is not RequestStatus.ACTIVE:
+            if rs.status is not RequestStatus.ACTIVE or slot in skip:
                 continue
             need = self.pages.pages_for_len(int(self._pos_host[slot]) + 1)
             held = len(self.pool.allocated(slot))
@@ -1211,12 +1478,18 @@ class Scheduler:
             "retained": len(self._finished),
             "decode_steps": self.total_decode_steps,
             "chunk_steps": self.total_chunk_steps,
+            "spec_steps": self.total_spec_steps,
+            "spec_replays": self.total_spec_replays,
+            "spec_fallbacks": self.spec_fallbacks,
+            "drafted_tokens": self.drafted_tokens_total,
+            "accepted_tokens": self.accepted_tokens_total,
             "decode_traces": self.decode_traces,
             "prefill_traces": self.prefill_traces,
             "admit_traces": self.admit_traces,
             "chunk_traces": self.chunk_traces,
             "swap_traces": self.swap_traces,
             "cow_traces": self.cow_traces,
+            "verify_traces": self.verify_traces,
             "pending": self.pending,
             "active": self.num_active,
             "deferred_admissions": self.deferred_admissions,

@@ -164,6 +164,124 @@ class TestClaimRaces:
         assert left == [], f"leftover claim-dir entries: {left}"
 
 
+def _backdate(path, age_s):
+    t = time.time() - age_s
+    os.utime(path, (t, t))
+
+
+class TestGC:
+    """``FileQueue.gc``: stale attempt records and orphaned lease debris."""
+
+    def test_fail_records_purged_for_done_and_aged_tasks(self, tmp_path):
+        q = FileQueue(tmp_path, lease_s=60, owner="h")
+        specs = _matrix(3).task_list()
+        q.publish(specs)
+        done_k, aged_k, live_k = (s.key for s in specs)
+        q.record_failure(done_k, "boom")
+        q.record_failure(done_k, "boom again")
+        q.mark_done(done_k, "failed")
+        q.record_failure(aged_k, "old boom")
+        for p in (tmp_path / "fails").glob(f"{aged_k}.*.json"):
+            _backdate(p, 10 * 86400)
+        q.record_failure(live_k, "fresh boom")
+
+        out = q.gc(max_age_s=7 * 86400)
+        assert out["fails_purged"] == 3
+        # the done task's budget can never be consulted again; the aged
+        # record crossed max_age_s; the fresh one still counts
+        assert q.failure_records(done_k) == []
+        assert q.failure_records(aged_k) == []
+        assert len(q.failure_records(live_k)) == 1
+
+    def test_orphan_tombstones_audited(self, tmp_path):
+        q = FileQueue(tmp_path, lease_s=60, owner="h")
+        specs = _matrix(2).task_list()
+        q.publish(specs)
+        k_dead, k_live = specs[0].key, specs[1].key
+        claims = tmp_path / "claims"
+
+        # Expired-claim tombstone from a host that died mid-break: retired.
+        dead = claims / f".{k_dead}.deadbeef.tomb"
+        dead.write_text(json.dumps({"owner": "x", "expires_unix": time.time() - 5}))
+        _backdate(dead, 300)
+        # Live-claim tombstone whose restore never ran (host died between
+        # rename and link) and whose claim file is gone: restored, not lost.
+        live = claims / f".{k_live}.cafef00d.tomb"
+        live.write_text(
+            json.dumps({"owner": "h2", "expires_unix": time.time() + 3600})
+        )
+        _backdate(live, 300)
+        # A young tombstone is someone's in-flight steal: untouchable.
+        young = claims / f".{k_dead}.0badcafe.tomb"
+        young.write_text(json.dumps({"owner": "y", "expires_unix": 0}))
+
+        out = q.gc()
+        assert out["tombs_retired"] == 1
+        assert out["tombs_restored"] == 1
+        assert not dead.exists()
+        assert not live.exists()
+        assert young.exists()
+        assert _claim_owner(tmp_path, k_live) == "h2"
+        # restored claim is live again: not claimable until it expires
+        assert not FileQueue(tmp_path, owner="h3").try_claim(k_live)
+
+    def test_scratch_purged_and_dry_run(self, tmp_path):
+        q = FileQueue(tmp_path, lease_s=60, owner="h")
+        q.publish(_matrix(1).task_list())
+        old_tmp = tmp_path / "tasks" / ".x.h.tmp"
+        old_tmp.write_text("{}")
+        _backdate(old_tmp, 300)
+        old_renew = tmp_path / "claims" / "k.renew"
+        old_renew.write_text("{}")
+        _backdate(old_renew, 300)
+        fresh_tmp = tmp_path / "done" / ".y.h.tmp"
+        fresh_tmp.write_text("{}")
+
+        dry = q.gc(dry_run=True)
+        assert dry["scratch_purged"] == 2
+        assert old_tmp.exists() and old_renew.exists()
+        out = q.gc()
+        assert out["scratch_purged"] == 2
+        assert not old_tmp.exists() and not old_renew.exists()
+        assert fresh_tmp.exists()
+        # task/claim/done records themselves were never candidates
+        assert q.pending_keys()
+
+    def test_cli_entrypoint(self, tmp_path):
+        import subprocess
+        import sys
+
+        q = FileQueue(tmp_path, lease_s=60, owner="h")
+        specs = _matrix(2).task_list()
+        q.publish(specs)
+        q.record_failure(specs[0].key, "boom")
+        q.mark_done(specs[0].key, "ok")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [str(Path(__file__).resolve().parent.parent / "src"),
+             env.get("PYTHONPATH", "")]
+        )
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.core.filequeue", "gc", str(tmp_path)],
+            capture_output=True, text=True, env=env, timeout=60,
+        )
+        assert r.returncode == 0, r.stderr
+        assert "fails_purged=1" in r.stdout
+        assert q.failure_records(specs[0].key) == []
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.core.filequeue", "stats", str(tmp_path)],
+            capture_output=True, text=True, env=env, timeout=60,
+        )
+        assert r.returncode == 0, r.stderr
+        assert "total=2" in r.stdout and "done=1" in r.stdout
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.core.filequeue", "gc",
+             str(tmp_path / "nonexistent")],
+            capture_output=True, text=True, env=env, timeout=60,
+        )
+        assert r.returncode != 0
+
+
 class TestDrain:
     def test_drain_ignores_foreign_matrix_keys(self, tmp_path):
         """Keys published by a matrix version this worker doesn't know must
