@@ -33,9 +33,10 @@ caching/streaming/retries end-to-end, not hand-rolled loops):
 
 Prints ``name,us_per_call,derived`` CSV rows, and **persists** every run
 as a versioned record ``benchmarks/records/BENCH_<n>.json`` (rows + git
-commit + timestamp + mode) — the repo's queryable perf trajectory. After
-writing, the run is auto-diffed against the latest committed record of
-the same mode and ``WARN,...`` lines flag >30% tok/s regressions.
+commit + timestamp + mode) — the repo's queryable perf trajectory (see
+``repro.analysis.trajectory``). After writing, the run is auto-diffed
+against the latest same-mode record on the current commit's *lineage*
+and ``WARN,...`` lines flag >30% tok/s regressions.
 Identity rows (B11/B13/B14 token mismatches) make the process exit
 nonzero so CI cannot silently pass on corrupted outputs.
 
@@ -46,7 +47,6 @@ CI end-to-end exercise of the experiment *and* serving layers.
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
 import re
@@ -138,43 +138,28 @@ def write_records(mode: str, records_dir: str | None = None) -> str | None:
 
 
 def diff_records(new_path: str, records_dir: str | None = None) -> list[str]:
-    """Compare ``new_path`` against the latest earlier record of the same
-    mode; returns ``WARN,...`` lines for >30% tok/s regressions (rows are
-    matched by name; rows without a tok/s figure are skipped)."""
-    d = records_dir or _RECORDS_DIR
-    with open(new_path) as f:
-        new = json.load(f)
-    prev = None
-    for p in sorted(
-        glob.glob(os.path.join(d, "BENCH_*.json")),
-        key=lambda p: int(re.search(r"BENCH_(\d+)", p).group(1)),
-        reverse=True,
-    ):
-        if os.path.abspath(p) == os.path.abspath(new_path):
-            continue
-        with open(p) as f:
-            cand = json.load(f)
-        if cand.get("mode") == new.get("mode") and cand.get("record", 0) < new.get(
-            "record", 0
-        ):
-            prev = cand
-            break
-    if prev is None:
-        return []
-    old_tok = {r["name"]: r["tok_s"] for r in prev["rows"] if "tok_s" in r}
-    warnings = []
-    for r in new["rows"]:
-        tok = r.get("tok_s")
-        old = old_tok.get(r["name"])
-        if tok is None or not old:
-            continue
-        ratio = tok / old
-        if ratio < 0.7:
-            warnings.append(
-                f"WARN,{r['name']},tok/s {old:.1f} -> {tok:.1f} "
-                f"({ratio:.2f}x vs record {prev['record']}, >30% regression)"
-            )
-    return warnings
+    """Diff ``new_path`` against its baseline; returns ``WARN,...`` lines
+    for >30% tok/s regressions.
+
+    Delegates to ``repro.analysis.trajectory`` so these verdicts and the
+    ``python -m repro.analysis regressions`` CLI are identical by
+    construction. The baseline is the latest earlier record of the same mode
+    whose commit is on the current commit's lineage — a record produced on a
+    diverged branch is never the comparison point. Rows are matched by name;
+    rows where *either* side has no extracted tok/s figure are skipped, so a
+    baseline without the metric can't fabricate a WARN.
+    """
+    from repro.analysis.trajectory import (
+        BenchRecord,
+        Trajectory,
+        detect_regressions,
+        find_baseline,
+    )
+
+    new = BenchRecord.load(new_path)
+    traj = Trajectory.load(records_dir or _RECORDS_DIR)
+    baseline = find_baseline(traj, new)
+    return [r.warn_line() for r in detect_regressions(new, baseline)]
 
 
 def _value(result):

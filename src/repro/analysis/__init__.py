@@ -1,0 +1,53 @@
+"""repro.analysis — the Examiner-style analytics layer over Memento results.
+
+Results used to dead-end at ``ResultSet.pivot()/to_csv()``; this package is
+the insight layer the related work converges on (mlrunner's Examiner,
+MLXP's result queries, NSML's live monitoring):
+
+* :mod:`repro.analysis.metrics` — declarative metric extraction: pull named
+  metrics out of ``ResultSet`` rows, file-queue ``done/`` records, and raw
+  log text via regex/callable :class:`MetricSpec`\\ s, normalized into typed
+  :class:`MetricFrame` records (metric, value, params, host, timestamp,
+  commit).
+* :mod:`repro.analysis.tables` — grouped comparison tables over sweep
+  results: ``compare(frame, rows=..., cols=..., agg=..., baseline=...)``
+  with delta/ratio columns and markdown/CSV renderers.
+* :mod:`repro.analysis.trajectory` — a queryable store over the versioned
+  ``benchmarks/records/BENCH_<n>.json`` perf records: filter by
+  mode/benchmark, extract series across records, and detect regressions
+  against the same-commit-lineage baseline with per-metric thresholds.
+* :mod:`repro.analysis.dash` — a stdlib-only live dashboard
+  (:class:`Dashboard`, ``http.server`` + JSON/SSE endpoints) fed by
+  :class:`AnalysisNotificationProvider`, which tees ``Memento.stream`` /
+  ``queue_progress`` events into a JSONL journal and live aggregates
+  (per-host throughput, queue depth, ETA, failure drill-down with real
+  tracebacks).
+
+CLI: ``python -m repro.analysis {table,trajectory,regressions,dash}``.
+"""
+from .dash import AnalysisNotificationProvider, Dashboard
+from .metrics import Examiner, MetricFrame, MetricRecord, MetricSpec
+from .tables import Table, compare
+from .trajectory import (
+    BenchRecord,
+    Regression,
+    RegressionPolicy,
+    Trajectory,
+    detect_regressions,
+)
+
+__all__ = [
+    "AnalysisNotificationProvider",
+    "BenchRecord",
+    "Dashboard",
+    "Examiner",
+    "MetricFrame",
+    "MetricRecord",
+    "MetricSpec",
+    "Regression",
+    "RegressionPolicy",
+    "Table",
+    "Trajectory",
+    "compare",
+    "detect_regressions",
+]

@@ -1,0 +1,247 @@
+"""``python -m repro.analysis`` — tables, trajectories, regressions, dash.
+
+Subcommands:
+
+* ``table``       render a grouped comparison table from a results CSV
+                  (``ResultSet.to_csv``) or the latest benchmark record
+* ``trajectory``  list benchmark records, or one metric's series across them
+* ``regressions`` diff a benchmark record against its lineage baseline;
+                  ``--strict`` exits nonzero when regressions exist (CI)
+* ``dash``        serve the live dashboard over an event journal
+
+Output is plain text/markdown/CSV on stdout — the table renderers are the
+same code the Python API uses, so CLI output and ``compare(...)`` output are
+identical token for token.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any
+
+from .metrics import MetricFrame, _as_float
+from .tables import AGGREGATORS, compare
+from .trajectory import (
+    DEFAULT_POLICIES,
+    DEFAULT_RECORDS_DIR,
+    RegressionPolicy,
+    Trajectory,
+    diff_latest,
+)
+
+
+def _coerce(label: str) -> Any:
+    """CLI strings match numeric column labels by value (2 == "2")."""
+    num = _as_float(label)
+    if num is None:
+        return label
+    return int(num) if num == int(num) else num
+
+
+def _resolve_baseline(baseline: str | None, col_labels: list[Any]) -> Any:
+    if baseline is None:
+        return None
+    for cand in (baseline, _coerce(baseline)):
+        if cand in col_labels:
+            return cand
+    raise SystemExit(
+        f"error: baseline {baseline!r} is not a column: {col_labels}"
+    )
+
+
+def _render(table: Any, fmt: str) -> str:
+    if fmt == "md":
+        return table.to_markdown()
+    if fmt == "csv":
+        return table.to_csv()
+    return str(table)
+
+
+def cmd_table(args: argparse.Namespace) -> int:
+    if bool(args.csv) == bool(args.latest):
+        raise SystemExit("error: pass exactly one of --csv PATH or --latest")
+    if args.csv:
+        frame = MetricFrame.from_results_csv(args.csv)
+        default_rows = None
+    else:
+        traj = Trajectory.load(args.records_dir)
+        latest = traj.latest(args.mode or None)
+        if latest is None:
+            raise SystemExit(f"error: no records in {args.records_dir}")
+        frame = Trajectory([latest]).to_frame(
+            metrics=tuple(args.metric) if args.metric else ("tok_s", "wall_s")
+        )
+        default_rows = ["benchmark"]
+        if not args.title:
+            args.title = (
+                f"Benchmark record {latest.record} "
+                f"({latest.mode}, {latest.commit[:12]})"
+            )
+    rows = args.rows or default_rows
+    if not rows:
+        raise SystemExit("error: --rows is required with --csv")
+    metric = None
+    if args.metric and (args.cols or len(args.metric) == 1):
+        metric = args.metric[0]
+    table = compare(
+        frame,
+        rows=rows,
+        cols=args.cols or None,
+        metric=metric,
+        agg=args.agg,
+        title=args.title,
+    )
+    table.baseline = _resolve_baseline(args.baseline, table.col_labels)
+    print(_render(table, args.format))
+    return 0
+
+
+def cmd_trajectory(args: argparse.Namespace) -> int:
+    traj = Trajectory.load(args.records_dir).filter(
+        mode=args.mode or None, benchmark=args.benchmark or None
+    )
+    if not len(traj):
+        print(f"no records in {args.records_dir}", file=sys.stderr)
+        return 1
+    if args.series:
+        pts = traj.series(args.series, metric=args.metric_name)
+        if args.json:
+            print(json.dumps(
+                {"name": args.series, "metric": args.metric_name,
+                 "series": [{"record": n, "value": v} for n, v in pts]}
+            ))
+        else:
+            print(f"{args.series} {args.metric_name}:")
+            for n, v in pts:
+                print(f"  record {n}: {v:g}")
+        return 0
+    if args.json:
+        print(json.dumps([
+            {"record": r.record, "mode": r.mode, "commit": r.commit,
+             "timestamp": r.timestamp, "rows": len(r.rows)}
+            for r in traj
+        ]))
+    else:
+        for r in traj:
+            print(
+                f"record {r.record}  mode={r.mode}  commit={r.commit[:12]}  "
+                f"rows={len(r.rows)}  {r.timestamp}"
+            )
+    return 0
+
+
+def _policies(args: argparse.Namespace) -> tuple[RegressionPolicy, ...]:
+    if not args.policy:
+        return DEFAULT_POLICIES
+    out = []
+    for p in args.policy:
+        # metric[:max_drop[:lower_is_better]] e.g. tok_s:0.3 or itl_p50_s:0.5:lower
+        parts = p.split(":")
+        out.append(
+            RegressionPolicy(
+                metric=parts[0],
+                max_drop=float(parts[1]) if len(parts) > 1 else 0.30,
+                higher_is_better=not (len(parts) > 2 and parts[2] == "lower"),
+            )
+        )
+    return tuple(out)
+
+
+def cmd_regressions(args: argparse.Namespace) -> int:
+    new, base, regs = diff_latest(
+        args.records_dir, record=args.record, policies=_policies(args)
+    )
+    if new is None:
+        print(f"no records in {args.records_dir}", file=sys.stderr)
+        return 1
+    if base is None:
+        print(f"record {new.record}: no comparable baseline (first of its "
+              f"mode, or every earlier record is from a diverged branch)")
+        return 0
+    for r in regs:
+        print(r.warn_line())
+    if not regs:
+        print(f"record {new.record} vs record {base.record}: no regressions")
+    return 1 if (regs and args.strict) else 0
+
+
+def cmd_dash(args: argparse.Namespace) -> int:
+    from .dash import serve_journal
+
+    dash, prov = serve_journal(
+        args.journal, host=args.host, port=args.port,
+        follow=not args.no_follow, total=args.total,
+    )
+    print(f"dashboard: {dash.url}  (journal: {args.journal})")
+    try:
+        import time
+
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        dash.stop()
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Analysis over Memento results and benchmark records.",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("table", help="grouped comparison table")
+    t.add_argument("--csv", help="ResultSet.to_csv file to analyze")
+    t.add_argument("--latest", action="store_true",
+                   help="use the latest benchmark record instead of a CSV")
+    t.add_argument("--records-dir", default=DEFAULT_RECORDS_DIR)
+    t.add_argument("--mode", default="", help="with --latest: restrict mode")
+    t.add_argument("--rows", nargs="+", help="param keys for table rows")
+    t.add_argument("--cols", nargs="+", help="param keys for table columns "
+                   "(default: one column per metric)")
+    t.add_argument("--metric", nargs="+", help="metric name(s) to include")
+    t.add_argument("--agg", default="mean", choices=sorted(AGGREGATORS),
+                   help="cell aggregator (default: mean)")
+    t.add_argument("--baseline", help="column label to diff the others against")
+    t.add_argument("--title", default="")
+    t.add_argument("--format", default="md", choices=("md", "csv", "text"))
+    t.set_defaults(fn=cmd_table)
+
+    tr = sub.add_parser("trajectory", help="query benchmark records")
+    tr.add_argument("--records-dir", default=DEFAULT_RECORDS_DIR)
+    tr.add_argument("--mode", default="")
+    tr.add_argument("--benchmark", default="",
+                    help="restrict to rows whose name starts with this")
+    tr.add_argument("--series", help="print one benchmark row's series")
+    tr.add_argument("--metric", dest="metric_name", default="tok_s")
+    tr.add_argument("--json", action="store_true")
+    tr.set_defaults(fn=cmd_trajectory)
+
+    rg = sub.add_parser("regressions", help="diff a record vs its baseline")
+    rg.add_argument("--records-dir", default=DEFAULT_RECORDS_DIR)
+    rg.add_argument("--record", type=int, help="record number (default: latest)")
+    rg.add_argument("--policy", nargs="+",
+                    help="metric[:max_drop[:lower]] e.g. tok_s:0.3 itl_p50_s:0.5:lower")
+    rg.add_argument("--strict", action="store_true",
+                    help="exit 1 when regressions are found (CI gate)")
+    rg.set_defaults(fn=cmd_regressions)
+
+    d = sub.add_parser("dash", help="serve the live dashboard over a journal")
+    d.add_argument("--journal", required=True, help="event journal (JSONL)")
+    d.add_argument("--host", default="127.0.0.1")
+    d.add_argument("--port", type=int, default=8321)
+    d.add_argument("--total", type=int, help="expected task total (for ETA)")
+    d.add_argument("--no-follow", action="store_true",
+                   help="replay once, don't tail the journal")
+    d.set_defaults(fn=cmd_dash)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

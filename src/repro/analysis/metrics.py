@@ -1,0 +1,390 @@
+"""Examiner-style metric extraction into typed, queryable records.
+
+A :class:`MetricSpec` names one metric and says how to pull it out of a raw
+source — a capture-group regex for log text, a callable or dict key for
+structured rows. :class:`Examiner` applies a set of specs to the three
+sources the framework produces:
+
+* ``ResultSet`` / ``TaskResult`` iterables (sweep results; params, host and
+  timing ride along from the spec/result),
+* file-queue ``done/`` records (who finished what, where, how long),
+* raw log/CSV text (benchmark output, training logs).
+
+Everything lands as :class:`MetricRecord` rows inside a :class:`MetricFrame`
+— a small, pandas-free frame with ``where``/``group``/``values`` queries
+that :mod:`repro.analysis.tables` renders into comparison tables.
+"""
+from __future__ import annotations
+
+import json
+import re
+import time
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+_NUMBER = r"[-+]?[0-9]*\.?[0-9]+(?:[eE][-+]?[0-9]+)?"
+
+
+def _as_float(v: Any) -> float | None:
+    if isinstance(v, bool) or v is None:
+        return None
+    if isinstance(v, (int, float)):
+        return float(v)
+    try:
+        return float(str(v))
+    except (TypeError, ValueError):
+        return None
+
+
+@dataclass(frozen=True)
+class MetricSpec:
+    """How to extract one named metric.
+
+    Exactly one extraction route applies per source kind:
+
+    * ``pattern`` — regex with one capture group, run over text (every match
+      yields a record). ``{num}`` in the pattern expands to a float regex.
+    * ``extract`` — callable over a structured row (a result-value mapping or
+      a done-record dict); return a number or ``None`` to skip.
+    * neither — the metric name itself (or ``key``) is looked up as a dict
+      key in the structured row.
+    """
+
+    name: str
+    pattern: str | None = None
+    extract: Callable[[Mapping[str, Any]], Any] | None = None
+    key: str | None = None
+    unit: str = ""
+
+    def _regex(self) -> re.Pattern[str]:
+        assert self.pattern is not None
+        return re.compile(self.pattern.replace("{num}", f"({_NUMBER})"))
+
+    def from_row(self, row: Mapping[str, Any]) -> float | None:
+        if self.extract is not None:
+            try:
+                return _as_float(self.extract(row))
+            except (KeyError, IndexError, TypeError, ZeroDivisionError):
+                return None
+        return _as_float(row.get(self.key or self.name))
+
+
+def as_specs(
+    specs: Sequence[MetricSpec | str] | Mapping[str, Any],
+) -> list[MetricSpec]:
+    """Normalize the convenience spellings into :class:`MetricSpec` objects.
+
+    A plain string is a dict-key lookup of that name; a mapping maps metric
+    name -> regex string (contains a capture group or ``{num}``) or callable.
+    """
+    out: list[MetricSpec] = []
+    if isinstance(specs, Mapping):
+        for name, how in specs.items():
+            if callable(how):
+                out.append(MetricSpec(name, extract=how))
+            elif isinstance(how, str):
+                out.append(MetricSpec(name, pattern=how))
+            else:
+                raise TypeError(f"spec for {name!r} must be a regex or callable")
+        return out
+    for s in specs:
+        out.append(MetricSpec(s) if isinstance(s, str) else s)
+    return out
+
+
+@dataclass(frozen=True)
+class MetricRecord:
+    """One extracted observation: a metric value plus its provenance."""
+
+    metric: str
+    value: float
+    params: Mapping[str, Any] = field(default_factory=dict)
+    unit: str = ""
+    host: str = ""
+    timestamp: float | None = None
+    commit: str = ""
+    source: str = ""  # "result" | "done" | "text" | "csv" | "journal"
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "metric": self.metric,
+            "value": self.value,
+            "params": dict(self.params),
+            "unit": self.unit,
+            "host": self.host,
+            "timestamp": self.timestamp,
+            "commit": self.commit,
+            "source": self.source,
+        }
+
+
+class MetricFrame:
+    """An ordered collection of :class:`MetricRecord` with small queries.
+
+    Frames concatenate with ``+`` and filter with :meth:`where`; grouping for
+    table rendering lives in :meth:`group`.
+    """
+
+    def __init__(self, records: Iterable[MetricRecord] = ()):
+        self.records: list[MetricRecord] = list(records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __add__(self, other: "MetricFrame") -> "MetricFrame":
+        return MetricFrame(self.records + list(other))
+
+    def __repr__(self) -> str:
+        return f"MetricFrame({len(self.records)} records, metrics={self.metrics()})"
+
+    # -- queries ------------------------------------------------------------
+    def metrics(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for r in self.records:
+            seen.setdefault(r.metric)
+        return list(seen)
+
+    def where(
+        self,
+        pred: Callable[[MetricRecord], bool] | None = None,
+        metric: str | None = None,
+        **params: Any,
+    ) -> "MetricFrame":
+        """Filter records: by metric name, by param equality, and/or by an
+        arbitrary predicate — all conditions must hold."""
+
+        def keep(r: MetricRecord) -> bool:
+            if metric is not None and r.metric != metric:
+                return False
+            if any(r.params.get(k) != v for k, v in params.items()):
+                return False
+            return pred is None or bool(pred(r))
+
+        return MetricFrame(r for r in self.records if keep(r))
+
+    def values(self, metric: str | None = None) -> list[float]:
+        return [r.value for r in self.records if metric is None or r.metric == metric]
+
+    def param_values(self, key: str) -> list[Any]:
+        """Distinct values of one param key, in first-seen order."""
+        seen: dict[Any, None] = {}
+        for r in self.records:
+            if key in r.params:
+                seen.setdefault(r.params[key])
+        return list(seen)
+
+    def group(
+        self, by: Sequence[str], metric: str | None = None
+    ) -> dict[tuple[Any, ...], list[float]]:
+        """Group values by a tuple of param keys (``"metric"`` and ``"host"``
+        are accepted as pseudo-keys), preserving first-seen group order."""
+        out: dict[tuple[Any, ...], list[float]] = {}
+        for r in self.records:
+            if metric is not None and r.metric != metric:
+                continue
+            key = tuple(
+                r.metric if k == "metric" else r.host if k == "host" else r.params.get(k)
+                for k in by
+            )
+            out.setdefault(key, []).append(r.value)
+        return out
+
+    # -- IO -----------------------------------------------------------------
+    def to_csv(self, path: str | Path | None = None) -> str:
+        import csv
+        import io
+
+        pkeys: dict[str, None] = {}
+        for r in self.records:
+            for k in r.params:
+                pkeys.setdefault(k)
+        buf = io.StringIO()
+        w = csv.writer(buf, lineterminator="\n")
+        w.writerow(["metric", "value", "unit", "host", "timestamp", "commit",
+                    "source", *pkeys])
+        for r in self.records:
+            w.writerow(
+                [r.metric, r.value, r.unit, r.host,
+                 "" if r.timestamp is None else r.timestamp, r.commit, r.source]
+                + [r.params.get(k, "") for k in pkeys]
+            )
+        text = buf.getvalue()
+        if path is not None:
+            Path(path).write_text(text)
+        return text
+
+    @classmethod
+    def from_results_csv(cls, path: str | Path) -> "MetricFrame":
+        """Parse a ``ResultSet.to_csv()`` file back into a frame.
+
+        The CSV layout is ``<param cols...>, status, attempts, wall_s,
+        <value cols...>``; every numeric value column becomes a metric (plus
+        ``wall_s``), keyed by the row's params. Failed rows contribute no
+        value metrics but keep their ``wall_s``.
+        """
+        import csv
+
+        with open(path, newline="") as f:
+            reader = csv.reader(f)
+            header = next(reader)
+            if "status" not in header:
+                raise ValueError(f"{path}: not a ResultSet.to_csv file (no status column)")
+            split = header.index("status")
+            pkeys = header[:split]
+            vkeys = header[split + 3:]  # after status, attempts, wall_s
+            records: list[MetricRecord] = []
+            for row in reader:
+                params: dict[str, Any] = {}
+                for k, cell in zip(pkeys, row[:split]):
+                    num = _as_float(cell)
+                    params[k] = cell if num is None else num
+                wall = _as_float(row[split + 2])
+                if wall is not None:
+                    records.append(MetricRecord("wall_s", wall, params=params,
+                                                unit="s", source="csv"))
+                if row[split] not in ("ok", "cached"):
+                    continue
+                for k, cell in zip(vkeys, row[split + 3:]):
+                    num = _as_float(cell)
+                    if num is not None:
+                        records.append(
+                            MetricRecord(k, num, params=params, source="csv")
+                        )
+        return cls(records)
+
+
+class Examiner:
+    """Applies a set of :class:`MetricSpec` to results, records, and text.
+
+    >>> ex = Examiner(["tokens_per_s", MetricSpec("itl_p50_ms",
+    ...               extract=lambda v: v["itl_p50_s"] * 1e3)])
+    >>> frame = ex.examine_results(memento.run(matrix))
+    """
+
+    def __init__(self, specs: Sequence[MetricSpec | str] | Mapping[str, Any]):
+        self.specs = as_specs(specs)
+
+    def _row_specs(self) -> list[MetricSpec]:
+        return [s for s in self.specs if s.pattern is None]
+
+    def _text_specs(self) -> list[MetricSpec]:
+        return [s for s in self.specs if s.pattern is not None]
+
+    # -- sources ------------------------------------------------------------
+    def examine_results(
+        self, results: Iterable[Any], commit: str = ""
+    ) -> MetricFrame:
+        """Pull metrics out of ``TaskResult`` rows (a ResultSet, a live
+        ``Memento.stream``, or any iterable). Failed tasks are skipped;
+        params/host/timestamp come from the result."""
+        records: list[MetricRecord] = []
+        for r in results:
+            if not getattr(r, "ok", False):
+                continue
+            value = r.value
+            row = value if isinstance(value, Mapping) else {"value": value}
+            for spec in self._row_specs():
+                v = spec.from_row(row)
+                if v is None:
+                    continue
+                records.append(
+                    MetricRecord(
+                        spec.name, v, params=dict(r.spec.params), unit=spec.unit,
+                        host=r.host, timestamp=r.started_unix or None,
+                        commit=commit, source="result",
+                    )
+                )
+        return MetricFrame(records)
+
+    def examine_rows(
+        self,
+        rows: Iterable[Mapping[str, Any]],
+        params_keys: Sequence[str] = (),
+        commit: str = "",
+        source: str = "rows",
+    ) -> MetricFrame:
+        """Plain structured rows (dicts): ``params_keys`` name the entries
+        that identify a row rather than measure it."""
+        records: list[MetricRecord] = []
+        for row in rows:
+            params = {k: row.get(k) for k in params_keys if k in row}
+            for spec in self._row_specs():
+                v = spec.from_row(row)
+                if v is not None:
+                    records.append(
+                        MetricRecord(spec.name, v, params=params, unit=spec.unit,
+                                     commit=commit, source=source)
+                    )
+        return MetricFrame(records)
+
+    def examine_text(
+        self,
+        text: str,
+        params: Mapping[str, Any] | None = None,
+        commit: str = "",
+        host: str = "",
+    ) -> MetricFrame:
+        """Run every regex spec over raw log text; each match is a record."""
+        records: list[MetricRecord] = []
+        for spec in self._text_specs():
+            for m in spec._regex().finditer(text):
+                group = m.group(1) if m.groups() else m.group(0)
+                v = _as_float(group)
+                if v is not None:
+                    records.append(
+                        MetricRecord(spec.name, v, params=dict(params or {}),
+                                     unit=spec.unit, host=host, commit=commit,
+                                     source="text")
+                    )
+        return MetricFrame(records)
+
+    def examine_done_dir(self, queue_dir: str | Path) -> MetricFrame:
+        """File-queue ``done/`` records: per-task wall time and status by
+        owning host — the fleet-level view of who ran what, how long.
+
+        Row specs apply to each record dict (``wall_s`` and ``attempts`` are
+        present on normally-finished tasks); a synthetic ``failed`` 0/1
+        metric is always emitted so failure rates aggregate per host.
+        """
+        done = Path(queue_dir) / "done"
+        records: list[MetricRecord] = []
+        for p in sorted(done.glob("*.json")):
+            try:
+                rec = json.loads(p.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue
+            host = str(rec.get("owner", ""))
+            ts = rec.get("finished_unix") or None
+            params = {"key": rec.get("key", p.stem)}
+            for spec in self._row_specs():
+                v = spec.from_row(rec)
+                if v is not None:
+                    records.append(
+                        MetricRecord(spec.name, v, params=params, unit=spec.unit,
+                                     host=host, timestamp=ts, source="done")
+                    )
+            records.append(
+                MetricRecord(
+                    "failed", 0.0 if rec.get("status") == "ok" else 1.0,
+                    params=params, host=host, timestamp=ts, source="done",
+                )
+            )
+        return MetricFrame(records)
+
+
+def _scalar_metrics(value: Any) -> dict[str, float]:
+    """The numeric scalar entries of a result value — what travels in
+    structured ``task_finished`` event payloads and the dashboard."""
+    if not isinstance(value, Mapping):
+        v = _as_float(value)
+        return {} if v is None else {"value": v}
+    out: dict[str, float] = {}
+    for k, v in value.items():
+        f = _as_float(v) if not isinstance(v, str) else None
+        if f is not None:
+            out[k] = f
+    return out

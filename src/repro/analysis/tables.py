@@ -1,0 +1,247 @@
+"""Grouped comparison tables over sweep results.
+
+``compare(frame, rows=..., cols=..., agg=..., baseline=...)`` replaces the
+ad-hoc ``ResultSet.pivot`` dance for benchmark and sweep analysis: group a
+:class:`~repro.analysis.metrics.MetricFrame` by param axes, aggregate each
+cell explicitly (mean/median/p95/...), and render markdown or CSV — with
+delta/ratio columns against a named baseline column for A/B sweeps.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+from .metrics import MetricFrame
+
+
+def _percentile(values: list[float], q: float) -> float:
+    if not values:
+        raise ValueError("no values")
+    vs = sorted(values)
+    idx = (len(vs) - 1) * q
+    lo, hi = int(idx), min(int(idx) + 1, len(vs) - 1)
+    return vs[lo] + (vs[hi] - vs[lo]) * (idx - lo)
+
+
+AGGREGATORS: dict[str, Callable[[list[float]], float]] = {
+    "mean": statistics.fmean,
+    "median": statistics.median,
+    "min": min,
+    "max": max,
+    "sum": sum,
+    "count": len,
+    "first": lambda vs: vs[0],
+    "last": lambda vs: vs[-1],
+    "p50": lambda vs: _percentile(vs, 0.50),
+    "p90": lambda vs: _percentile(vs, 0.90),
+    "p95": lambda vs: _percentile(vs, 0.95),
+    "p99": lambda vs: _percentile(vs, 0.99),
+}
+
+
+def resolve_agg(agg: str | Callable[[list[float]], float]) -> Callable[[list[float]], float]:
+    if callable(agg):
+        return agg
+    try:
+        return AGGREGATORS[agg]
+    except KeyError:
+        raise ValueError(
+            f"unknown agg {agg!r}; one of {sorted(AGGREGATORS)} or a callable"
+        ) from None
+
+
+def _fmt_value(v: Any) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _label(v: Any) -> str:
+    return getattr(v, "__name__", None) or str(v)
+
+
+@dataclass
+class Table:
+    """A rendered-agnostic grid: row label tuples x column labels.
+
+    ``cells[i][j]`` is the aggregated value (None for empty cells). When a
+    ``baseline`` column is set, the non-baseline columns carry
+    ``delta/ratio`` annotations against it in every renderer.
+    """
+
+    row_keys: list[str]
+    col_labels: list[Any]
+    row_labels: list[tuple[Any, ...]]
+    cells: list[list[float | None]]
+    baseline: Any = None
+    title: str = ""
+    fmt: Callable[[Any], str] = field(default=_fmt_value)
+
+    def _baseline_index(self) -> int | None:
+        if self.baseline is None:
+            return None
+        for j, c in enumerate(self.col_labels):
+            if c == self.baseline:
+                return j
+        raise ValueError(
+            f"baseline {self.baseline!r} is not a column: {self.col_labels}"
+        )
+
+    def _annotate(self, v: float | None, base: float | None) -> str:
+        cell = self.fmt(v)
+        if v is None or base is None or base == 0:
+            return cell
+        ratio = v / base
+        delta = (ratio - 1.0) * 100.0
+        return f"{cell} ({ratio:.2f}x, {delta:+.1f}%)"
+
+    def _grid(self) -> tuple[list[str], list[list[str]]]:
+        """Headers + stringified body shared by every renderer."""
+        bj = self._baseline_index()
+        headers = list(self.row_keys)
+        for j, c in enumerate(self.col_labels):
+            name = _label(c)
+            if bj is not None and j != bj:
+                name += f" (vs {_label(self.col_labels[bj])})"
+            headers.append(name)
+        body: list[list[str]] = []
+        for labels, row in zip(self.row_labels, self.cells):
+            line = [_label(v) for v in labels]
+            for j, v in enumerate(row):
+                if bj is None or j == bj:
+                    line.append(self.fmt(v))
+                else:
+                    line.append(self._annotate(v, row[bj]))
+            body.append(line)
+        return headers, body
+
+    def to_markdown(self) -> str:
+        headers, body = self._grid()
+        lines = []
+        if self.title:
+            lines.append(f"### {self.title}")
+            lines.append("")
+        lines.append("| " + " | ".join(headers) + " |")
+        lines.append("|" + "|".join(" --- " for _ in headers) + "|")
+        for line in body:
+            lines.append("| " + " | ".join(line) + " |")
+        return "\n".join(lines)
+
+    def to_csv(self) -> str:
+        import csv
+        import io
+
+        headers, body = self._grid()
+        buf = io.StringIO()
+        w = csv.writer(buf, lineterminator="\n")
+        w.writerow(headers)
+        w.writerows(body)
+        return buf.getvalue()
+
+    def __str__(self) -> str:
+        headers, body = self._grid()
+        widths = [
+            max(len(line[i]) for line in [headers] + body)
+            for i in range(len(headers))
+        ]
+        out = []
+        if self.title:
+            out.append(self.title)
+        out.append("  ".join(h.rjust(w) for h, w in zip(headers, widths)))
+        for line in body:
+            out.append("  ".join(c.rjust(w) for c, w in zip(line, widths)))
+        return "\n".join(out)
+
+
+def compare(
+    frame: MetricFrame,
+    rows: str | Sequence[str],
+    cols: str | Sequence[str] | None = None,
+    metric: str | None = None,
+    agg: str | Callable[[list[float]], float] = "mean",
+    baseline: Any = None,
+    title: str = "",
+    fmt: Callable[[Any], str] | None = None,
+) -> Table:
+    """Build a grouped comparison table from a metric frame.
+
+    ``rows``/``cols`` are param keys (``"metric"`` and ``"host"`` work as
+    pseudo-keys); with ``cols=None`` the columns are the frame's metric
+    names. Every cell aggregates all records landing in it with ``agg``
+    (explicit — no silent last-wins). ``baseline`` names one column label;
+    the other columns then render as ``value (ratio x, delta %)`` against it.
+
+    >>> compare(frame, rows="arch", cols="n_slots", metric="tokens_per_s",
+    ...         agg="median", baseline=2)
+    """
+    row_keys = [rows] if isinstance(rows, str) else list(rows)
+    if not row_keys:
+        raise ValueError("rows must name at least one key")
+    agg_fn = resolve_agg(agg)
+
+    if cols is None:
+        metric_names = frame.metrics() if metric is None else [metric]
+        col_of = lambda r: r.metric  # noqa: E731
+        col_labels_all = metric_names
+        sel = frame.where(metric=metric) if metric is not None else frame
+    else:
+        col_keys = [cols] if isinstance(cols, str) else list(cols)
+        if metric is None:
+            names = frame.metrics()
+            if len(names) != 1:
+                raise ValueError(
+                    f"frame has metrics {names}; pass metric=... to pick one"
+                )
+            metric = names[0]
+        sel = frame.where(metric=metric)
+
+        def col_of(r):
+            vals = tuple(
+                r.host if k == "host" else r.params.get(k) for k in col_keys
+            )
+            return vals[0] if len(vals) == 1 else vals
+
+        col_labels_all = None  # discovered in frame order
+
+    def row_of(r):
+        return tuple(
+            r.metric if k == "metric" else r.host if k == "host" else r.params.get(k)
+            for k in row_keys
+        )
+
+    row_labels: list[tuple[Any, ...]] = []
+    col_labels: list[Any] = list(col_labels_all or [])
+    cells: dict[tuple[int, int], list[float]] = {}
+
+    def index(labels: list[Any], v: Any) -> int:
+        for i, existing in enumerate(labels):
+            if existing is v or existing == v:
+                return i
+        labels.append(v)
+        return len(labels) - 1
+
+    for r in sel:
+        i = index(row_labels, row_of(r))
+        c = col_of(r)
+        if col_labels_all is not None and c not in col_labels:
+            continue
+        j = index(col_labels, c)
+        cells.setdefault((i, j), []).append(r.value)
+
+    grid: list[list[float | None]] = [
+        [agg_fn(cells[i, j]) if (i, j) in cells else None
+         for j in range(len(col_labels))]
+        for i in range(len(row_labels))
+    ]
+    return Table(
+        row_keys=row_keys,
+        col_labels=col_labels,
+        row_labels=row_labels,
+        cells=grid,
+        baseline=baseline,
+        title=title,
+        fmt=fmt or _fmt_value,
+    )

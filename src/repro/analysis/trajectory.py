@@ -1,0 +1,333 @@
+"""Queryable perf trajectory over ``benchmarks/records/BENCH_<n>.json``.
+
+``benchmarks/run.py`` persists every benchmark run as a versioned record
+(rows + extracted metrics + git commit + timestamp + mode). This module is
+the query/diff layer over those records:
+
+* :class:`Trajectory` loads a records directory and answers filter/series
+  questions ("B13 warm TTFT across the last 10 smoke runs"),
+* :func:`find_baseline` picks the record a new run should be diffed
+  against — the latest earlier record of the same mode whose git commit is
+  an *ancestor* of the new run's commit (same-commit-lineage, so a record
+  from a diverged branch is never the comparison point), falling back to
+  plain latest-earlier-same-mode when commit lineage is unknowable,
+* :func:`detect_regressions` generalizes the benchmark harness's hardcoded
+  ">30% tok/s" diff into per-metric :class:`RegressionPolicy` thresholds;
+  rows whose baseline has no extracted value for the metric are skipped,
+  never compared against ``None``/0.
+
+``benchmarks/run.py`` delegates its post-run diff here, so CLI verdicts
+(``python -m repro.analysis regressions``) and the harness's ``WARN,...``
+lines are identical by construction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import subprocess
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+from .metrics import MetricFrame, MetricRecord
+
+DEFAULT_RECORDS_DIR = os.path.join("benchmarks", "records")
+
+
+@dataclass(frozen=True)
+class BenchRecord:
+    """One persisted benchmark run (``BENCH_<n>.json``)."""
+
+    record: int
+    mode: str
+    commit: str
+    timestamp: str
+    rows: tuple[Mapping[str, Any], ...]
+    path: str = ""
+
+    @classmethod
+    def load(cls, path: str | Path) -> "BenchRecord":
+        with open(path) as f:
+            data = json.load(f)
+        return cls(
+            record=int(data.get("record", 0)),
+            mode=str(data.get("mode", "")),
+            commit=str(data.get("git_commit", "unknown")),
+            timestamp=str(data.get("timestamp", "")),
+            rows=tuple(data.get("rows", ())),
+            path=str(path),
+        )
+
+    def row(self, name: str) -> Mapping[str, Any] | None:
+        for r in self.rows:
+            if r.get("name") == name:
+                return r
+        return None
+
+    def metric(self, name: str, metric: str = "tok_s") -> float | None:
+        r = self.row(name)
+        v = None if r is None else r.get(metric)
+        return float(v) if isinstance(v, (int, float)) and not isinstance(v, bool) else None
+
+    def names(self, metric: str | None = None) -> list[str]:
+        return [
+            str(r.get("name"))
+            for r in self.rows
+            if metric is None or isinstance(r.get(metric), (int, float))
+        ]
+
+
+def _git_is_ancestor(old: str, new: str, cwd: str | None = None) -> bool | None:
+    """True/False when git can decide whether ``old`` is an ancestor of (or
+    equal to) ``new``; None when lineage is unknowable (no git, unknown
+    commits, shallow clone missing the objects)."""
+    if not old or not new or "unknown" in (old, new):
+        return None
+    if old == new:
+        return True
+    try:
+        out = subprocess.run(
+            ["git", "merge-base", "--is-ancestor", old, new],
+            cwd=cwd, capture_output=True, timeout=10,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if out.returncode == 0:
+        return True
+    if out.returncode == 1:
+        return False
+    return None  # git error: commit unknown to this clone
+
+
+class Trajectory:
+    """The ordered sequence of benchmark records, oldest first."""
+
+    def __init__(self, records: Iterable[BenchRecord]):
+        self.records = sorted(records, key=lambda r: r.record)
+
+    @classmethod
+    def load(cls, records_dir: str | Path | None = None) -> "Trajectory":
+        d = str(records_dir or DEFAULT_RECORDS_DIR)
+        records = []
+        for p in glob.glob(os.path.join(d, "BENCH_*.json")):
+            if re.fullmatch(r"BENCH_\d+\.json", os.path.basename(p)):
+                try:
+                    records.append(BenchRecord.load(p))
+                except (OSError, json.JSONDecodeError, ValueError):
+                    continue  # half-written or foreign file; not a record
+        return cls(records)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def modes(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for r in self.records:
+            seen.setdefault(r.mode)
+        return list(seen)
+
+    def filter(
+        self, mode: str | None = None, benchmark: str | None = None
+    ) -> "Trajectory":
+        """Restrict to one mode and/or to rows whose name starts with
+        ``benchmark`` (e.g. ``"B13"``); row-filtering keeps record metadata."""
+        out = []
+        for r in self.records:
+            if mode is not None and r.mode != mode:
+                continue
+            rows = r.rows
+            if benchmark is not None:
+                rows = tuple(
+                    row for row in rows if str(row.get("name", "")).startswith(benchmark)
+                )
+                if not rows:
+                    continue
+            out.append(
+                r if rows is r.rows else
+                BenchRecord(r.record, r.mode, r.commit, r.timestamp, rows, r.path)
+            )
+        return Trajectory(out)
+
+    def latest(self, mode: str | None = None) -> BenchRecord | None:
+        for r in reversed(self.records):
+            if mode is None or r.mode == mode:
+                return r
+        return None
+
+    def get(self, record: int) -> BenchRecord | None:
+        for r in self.records:
+            if r.record == record:
+                return r
+        return None
+
+    def series(self, name: str, metric: str = "tok_s") -> list[tuple[int, float]]:
+        """(record number, value) for one benchmark row across all records
+        that carry the metric."""
+        out = []
+        for r in self.records:
+            v = r.metric(name, metric)
+            if v is not None:
+                out.append((r.record, v))
+        return out
+
+    def names(self, metric: str | None = None) -> list[str]:
+        seen: dict[str, None] = {}
+        for r in self.records:
+            for n in r.names(metric):
+                seen.setdefault(n)
+        return list(seen)
+
+    def to_frame(self, metrics: Sequence[str] = ("tok_s",)) -> MetricFrame:
+        """Flatten into a :class:`MetricFrame`: one record per (benchmark
+        row, metric) with params ``{benchmark, mode, record}`` — feeds
+        :func:`repro.analysis.tables.compare` directly."""
+        records = []
+        for rec in self.records:
+            for row in rec.rows:
+                name = str(row.get("name", ""))
+                for m in metrics:
+                    v = row.get(m)
+                    if isinstance(v, (int, float)) and not isinstance(v, bool):
+                        records.append(
+                            MetricRecord(
+                                m, float(v),
+                                params={"benchmark": name, "mode": rec.mode,
+                                        "record": rec.record},
+                                commit=rec.commit, source="trajectory",
+                            )
+                        )
+        return MetricFrame(records)
+
+
+def find_baseline(
+    trajectory: Trajectory,
+    new: BenchRecord,
+    is_ancestor: Callable[[str, str], bool | None] | None = None,
+) -> BenchRecord | None:
+    """The record ``new`` should be compared against.
+
+    Candidates are earlier records of the same mode, newest first. When
+    commit lineage is decidable, the first candidate whose commit is an
+    ancestor of (or equal to) ``new``'s commit wins — a record produced on a
+    diverged branch is skipped rather than used as a false baseline. When
+    lineage is unknowable for every candidate (no git, "unknown" commits),
+    fall back to the latest earlier same-mode record.
+    """
+    anc = is_ancestor or (
+        lambda old, cnew: _git_is_ancestor(
+            old, cnew, cwd=os.path.dirname(new.path) or None
+        )
+    )
+    candidates = [
+        r for r in reversed(trajectory.records)
+        if r.mode == new.mode and r.record < new.record
+    ]
+    fallback: BenchRecord | None = None
+    for r in candidates:
+        verdict = anc(r.commit, new.commit)
+        if verdict is True:
+            return r
+        if verdict is None and fallback is None:
+            fallback = r
+    # Every candidate decidably diverged (or none exist) -> no honest
+    # baseline; better no diff than a diff against another branch's numbers.
+    return fallback
+
+
+@dataclass(frozen=True)
+class RegressionPolicy:
+    """Per-metric regression threshold.
+
+    ``max_drop=0.3`` flags a >30% move in the bad direction; ``label`` is
+    how the metric renders in WARN lines (kept bit-compatible with the
+    historical harness output for ``tok_s``).
+    """
+
+    metric: str = "tok_s"
+    max_drop: float = 0.30
+    higher_is_better: bool = True
+    label: str = ""
+
+    @property
+    def display(self) -> str:
+        return self.label or ("tok/s" if self.metric == "tok_s" else self.metric)
+
+
+DEFAULT_POLICIES: tuple[RegressionPolicy, ...] = (RegressionPolicy(),)
+
+
+@dataclass(frozen=True)
+class Regression:
+    """One flagged row: the metric moved past the policy threshold."""
+
+    name: str
+    metric: str
+    old: float
+    new: float
+    ratio: float
+    baseline_record: int
+    policy: RegressionPolicy = field(default_factory=RegressionPolicy)
+
+    def warn_line(self) -> str:
+        return (
+            f"WARN,{self.name},{self.policy.display} "
+            f"{self.old:.1f} -> {self.new:.1f} "
+            f"({self.ratio:.2f}x vs record {self.baseline_record}, "
+            f">{self.policy.max_drop * 100:.0f}% regression)"
+        )
+
+
+def detect_regressions(
+    new: BenchRecord,
+    baseline: BenchRecord | None,
+    policies: Sequence[RegressionPolicy] = DEFAULT_POLICIES,
+) -> list[Regression]:
+    """Rows of ``new`` that regressed vs ``baseline`` under any policy.
+
+    Rows are matched by name. A row is only comparable when *both* records
+    carry an extracted value for the policy's metric and the baseline value
+    is nonzero — a baseline row without the metric is skipped (no silent
+    None/0 comparisons).
+    """
+    if baseline is None:
+        return []
+    out: list[Regression] = []
+    for pol in policies:
+        for row in new.rows:
+            name = str(row.get("name", ""))
+            v_new = new.metric(name, pol.metric)
+            v_old = baseline.metric(name, pol.metric)
+            if v_new is None or v_old is None or v_old == 0:
+                continue
+            ratio = v_new / v_old
+            bad = ratio < (1.0 - pol.max_drop) if pol.higher_is_better \
+                else ratio > (1.0 + pol.max_drop)
+            if bad:
+                out.append(
+                    Regression(
+                        name=name, metric=pol.metric, old=v_old, new=v_new,
+                        ratio=ratio, baseline_record=baseline.record, policy=pol,
+                    )
+                )
+    return out
+
+
+def diff_latest(
+    records_dir: str | Path | None = None,
+    record: int | None = None,
+    policies: Sequence[RegressionPolicy] = DEFAULT_POLICIES,
+    is_ancestor: Callable[[str, str], bool | None] | None = None,
+) -> tuple[BenchRecord | None, BenchRecord | None, list[Regression]]:
+    """Load a records dir and diff one record (default: the latest) against
+    its lineage baseline. Returns (record, baseline, regressions)."""
+    traj = Trajectory.load(records_dir)
+    new = traj.latest() if record is None else traj.get(record)
+    if new is None:
+        return None, None, []
+    base = find_baseline(traj, new, is_ancestor=is_ancestor)
+    return new, base, detect_regressions(new, base, policies)

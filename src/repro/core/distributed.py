@@ -148,6 +148,8 @@ def stream_distributed(
         "run_started",
         f"{len(order)} tasks, {workers} workers, distributed as {queue.owner}",
         owner=queue.owner,
+        total=len(order),
+        workers=workers,
     )
 
     # Phase 0: cache hits first. Also best-effort mark them done so the
@@ -196,6 +198,12 @@ def stream_distributed(
                 if queue.is_done(key):
                     continue  # a peer finished it; the poller will surface it
                 if queue.try_claim(key):
+                    if queue.is_done(key):
+                        # The owner finished + released between our is_done
+                        # check and this claim (done records are published
+                        # before release); leave it to the poller.
+                        queue.release(key)
+                        continue
                     got = key
                     break
             if got is None:
@@ -388,11 +396,18 @@ def stream_distributed(
                     f"{prog['done_by'].get(h, 0)} done"
                     for h in sorted(set(prog["claimed_by"]) | set(prog["done_by"]))
                 )
+                elapsed = now - t0
+                done_live = n_ok + n_failed
+                remaining = max(int(prog["total"]) - int(prog["done"]), 0)
+                eta = remaining * elapsed / done_live if done_live else None
                 _notify(
                     runner,
                     "queue_progress",
                     f"{prog['done']}/{prog['total']} done" + (f" ({hosts})" if hosts else ""),
                     **prog,
+                    owner=queue.owner,
+                    elapsed_s=round(elapsed, 3),
+                    eta_s=None if eta is None else round(eta, 3),
                 )
     finally:
         stop.set()

@@ -118,11 +118,29 @@ class FileQueue:
         except (OSError, json.JSONDecodeError):
             return None
 
-    def _write_claim_body(self, fd: int) -> None:
-        body = json.dumps(
-            {"owner": self.owner, "expires_unix": time.time() + self.lease_s}
+    def _create_claim(self, path: Path) -> bool:
+        """Atomically create ``path`` with a fully-written claim body; False
+        if a claim already exists.
+
+        Hard-linking a pre-written private file publishes existence and
+        content in one step. Creating the file first and writing the body
+        after (the old O_CREAT|O_EXCL approach) left a window where a peer
+        read an empty claim, judged it "unreadable", and broke a live lease
+        mid-claim — two hosts then drained the same key.
+        """
+        tmp = self.root / CLAIMS / f".{uuid.uuid4().hex[:8]}.new"
+        tmp.write_text(
+            json.dumps(
+                {"owner": self.owner, "expires_unix": time.time() + self.lease_s}
+            )
         )
-        os.write(fd, body.encode())
+        try:
+            os.link(tmp, path)
+            return True
+        except OSError:
+            return False
+        finally:
+            tmp.unlink(missing_ok=True)
 
     def _steal_claim(self, key: str) -> tuple[Path, dict[str, Any] | None] | None:
         """Atomically take ``key``'s claim file out of service.
@@ -158,33 +176,24 @@ class FileQueue:
     def try_claim(self, key: str) -> bool:
         """Claim ``key``; True on success. Breaks expired leases."""
         path = self._claim_path(key)
-        try:
-            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
-        except FileExistsError:
-            claim = self._read_claim(key)
-            if claim is not None and claim.get("expires_unix", 0) > time.time():
-                return False  # live claim held elsewhere
-            # Expired or unreadable: break the lease by *renaming* the claim
-            # to a tombstone. Re-check the tombstone's content — between our
-            # read above and the rename, the owner may have renewed or a
-            # faster host may have broken + re-claimed; a claim that is live
-            # again is restored, not destroyed.
-            stolen = self._steal_claim(key)
-            if stolen is not None:
-                tomb, content = stolen
-                if content is not None and content.get("expires_unix", 0) > time.time():
-                    self._restore_claim(key, tomb)
-                    return False
-                tomb.unlink(missing_ok=True)  # genuinely dead: lease broken
-            try:
-                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o644)
-            except FileExistsError:
-                return False  # someone else won the re-claim race
-        try:
-            self._write_claim_body(fd)
-        finally:
-            os.close(fd)
-        return True
+        if self._create_claim(path):
+            return True
+        claim = self._read_claim(key)
+        if claim is not None and claim.get("expires_unix", 0) > time.time():
+            return False  # live claim held elsewhere
+        # Expired or unreadable: break the lease by *renaming* the claim
+        # to a tombstone. Re-check the tombstone's content — between our
+        # read above and the rename, the owner may have renewed or a
+        # faster host may have broken + re-claimed; a claim that is live
+        # again is restored, not destroyed.
+        stolen = self._steal_claim(key)
+        if stolen is not None:
+            tomb, content = stolen
+            if content is not None and content.get("expires_unix", 0) > time.time():
+                self._restore_claim(key, tomb)
+                return False
+            tomb.unlink(missing_ok=True)  # genuinely dead: lease broken
+        return self._create_claim(path)
 
     def renew(self, key: str) -> None:
         """Heartbeat: extend the lease. Raises if we no longer own it.
@@ -550,6 +559,13 @@ def drain(
                 continue
             if not queue.try_claim(key):
                 continue
+            if queue.is_done(key):
+                # The previous owner finished and released between our
+                # is_done check and this claim (mark_done publishes the done
+                # record before releasing, so it is visible now). Don't
+                # re-run a completed task.
+                queue.release(key)
+                continue
             progressed = True
 
             def beat(k: str = key) -> None:
@@ -608,6 +624,10 @@ def _cli(argv: Sequence[str] | None = None) -> int:
     g.add_argument("--dry-run", action="store_true")
     s = sub.add_parser("stats", help="queue totals")
     s.add_argument("queue_dir")
+    s.add_argument(
+        "--json", action="store_true",
+        help="emit one JSON object (totals + per-host progress) for scripts",
+    )
     args = ap.parse_args(argv)
     if not os.path.isdir(args.queue_dir):
         ap.error(f"not a queue directory: {args.queue_dir}")
@@ -619,11 +639,24 @@ def _cli(argv: Sequence[str] | None = None) -> int:
         tag = " (dry run)" if args.dry_run else ""
         print(", ".join(f"{k}={v}" for k, v in out.items()) + tag)
     else:
-        st = FileQueue(args.queue_dir).stats()
-        print(
-            f"total={st.total} claimed={st.claimed} done={st.done} "
-            f"available={st.available}"
-        )
+        q = FileQueue(args.queue_dir)
+        st = q.stats()
+        if args.json:
+            prog = q.progress()
+            print(json.dumps({
+                "total": st.total,
+                "claimed": st.claimed,
+                "done": st.done,
+                "available": st.available,
+                "failed": prog.get("failed", 0),
+                "claimed_by": prog.get("claimed_by", {}),
+                "done_by": prog.get("done_by", {}),
+            }, sort_keys=True))
+        else:
+            print(
+                f"total={st.total} claimed={st.claimed} done={st.done} "
+                f"available={st.available}"
+            )
     return 0
 
 

@@ -19,13 +19,40 @@ from typing import Any, Callable, TextIO
 from .task import TaskResult
 
 
+def _scalar_metrics(value: Any) -> dict[str, float]:
+    """Numeric scalar entries of a result value — the metrics that travel in
+    structured ``task_finished`` payloads (and feed ``repro.analysis``; the
+    analysis layer keeps its own copy since core never imports it)."""
+    if not isinstance(value, dict):
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            return {}
+        return {"value": float(value)}
+    out: dict[str, float] = {}
+    for k, v in value.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[str(k)] = float(v)
+    return out
+
+
 @dataclass
 class Event:
     kind: str  # task_started | task_finished | task_failed | task_retry |
-    #            straggler_respawned | run_started | run_finished
+    #            straggler_respawned | run_started | run_finished |
+    #            queue_progress | task_dry
     message: str
     unix_time: float = field(default_factory=time.time)
     payload: dict[str, Any] = field(default_factory=dict)
+
+    def to_record(self) -> dict[str, Any]:
+        """Flat JSON-safe record — the JSONL journal schema shared by
+        :class:`FileNotificationProvider` and the analysis dashboard:
+        ``{"t", "kind", "message", **payload}``."""
+        return {
+            "t": self.unix_time,
+            "kind": self.kind,
+            "message": self.message,
+            **self.payload,
+        }
 
 
 class NotificationProvider:
@@ -50,11 +77,25 @@ class NotificationProvider:
         )
 
     def task_finished(self, result: TaskResult) -> None:
+        payload: dict[str, Any] = {
+            "key": result.spec.key,
+            "status": result.status,
+            "params": dict(result.spec.params),
+            "host": result.host,
+            "wall_s": result.wall_s,
+            "attempts": result.attempts,
+            "cached": result.status == "cached",
+        }
+        if result.ok:
+            payload["metrics"] = _scalar_metrics(result.value)
+        else:
+            payload["error"] = result.error
+            payload["traceback"] = result.traceback_str
         self.notify(
             Event(
                 kind="task_finished" if result.ok else "task_failed",
                 message=result.summary(),
-                payload={"key": result.spec.key, "status": result.status},
+                payload=payload,
             )
         )
 
@@ -93,12 +134,7 @@ class FileNotificationProvider(NotificationProvider):
         self._lock = threading.Lock()
 
     def notify(self, event: Event) -> None:
-        rec = {
-            "t": event.unix_time,
-            "kind": event.kind,
-            "message": event.message,
-            **event.payload,
-        }
+        rec = event.to_record()
         with self._lock, open(self.path, "a") as f:
             f.write(json.dumps(rec, default=str) + "\n")
 

@@ -183,7 +183,11 @@ class Runner:
         t_run0 = time.time()
         self.stats = {}
         self._notify(
-            "run_started", f"{len(specs)} tasks, {cfg.resolved_workers()} workers"
+            "run_started",
+            f"{len(specs)} tasks, {cfg.resolved_workers()} workers",
+            total=len(specs),
+            workers=cfg.resolved_workers(),
+            mode=cfg.mode,
         )
 
         n_ok = n_failed = n_cached = 0

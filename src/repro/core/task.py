@@ -10,6 +10,7 @@ from __future__ import annotations
 import os
 import pickle
 import socket
+import statistics
 import tempfile
 import time
 import traceback
@@ -248,6 +249,31 @@ class Pivot:
         return "\n".join([fmt(header)] + [fmt(line) for line in body])
 
 
+_PIVOT_AGGS: dict[str, Callable[[list[Any]], Any]] = {
+    "mean": lambda vs: sum(vs) / len(vs),
+    "median": statistics.median,
+    "min": min,
+    "max": max,
+    "sum": sum,
+    "count": len,
+    "first": lambda vs: vs[0],
+    "last": lambda vs: vs[-1],
+}
+
+
+def _resolve_pivot_agg(
+    agg: str | Callable[[list[Any]], Any] | None,
+) -> Callable[[list[Any]], Any] | None:
+    if agg is None or callable(agg):
+        return agg
+    try:
+        return _PIVOT_AGGS[agg]
+    except KeyError:
+        raise ValueError(
+            f"unknown agg {agg!r}; one of {sorted(_PIVOT_AGGS)} or a callable"
+        ) from None
+
+
 class ResultSet:
     """Ordered collection of task results with paper-style conveniences.
 
@@ -310,18 +336,22 @@ class ResultSet:
         rows: str,
         cols: str,
         value_fn: Callable[[TaskResult], Any] | None = None,
+        agg: str | Callable[[list[Any]], Any] | None = None,
     ) -> Pivot:
         """Pivot successful results over two parameter axes.
 
         ``value_fn`` maps a TaskResult to the cell value (default:
         ``r.value``). When several tasks land in one cell (other axes vary),
-        the last by task index wins — narrow first with a composable matrix
-        or ``value_fn``.
+        the ambiguity is an error unless ``agg`` says how to combine them:
+        a callable over the cell's values (in task-index order), or one of
+        ``"mean" | "median" | "min" | "max" | "sum" | "count" | "first" |
+        "last"``.
         """
         value_fn = value_fn or (lambda r: r.value)
+        agg_fn = _resolve_pivot_agg(agg)
         row_labels: list[Any] = []
         col_labels: list[Any] = []
-        cells: dict[tuple[int, int], Any] = {}
+        cells: dict[tuple[int, int], list[Any]] = {}
 
         def _index(labels: list[Any], v: Any) -> int:
             for i, existing in enumerate(labels):
@@ -336,9 +366,21 @@ class ResultSet:
             p = r.spec.params
             if rows not in p or cols not in p:
                 continue
-            cells[_index(row_labels, p[rows]), _index(col_labels, p[cols])] = value_fn(r)
+            ij = _index(row_labels, p[rows]), _index(col_labels, p[cols])
+            cells.setdefault(ij, []).append(value_fn(r))
+        if agg_fn is None:
+            for (i, j), vs in cells.items():
+                if len(vs) > 1:
+                    raise ValueError(
+                        f"pivot cell ({row_labels[i]!r}, {col_labels[j]!r}) is "
+                        f"ambiguous: {len(vs)} tasks land in it (other axes "
+                        f"vary); pass agg='mean'/'last'/... or a callable, or "
+                        f"narrow the matrix"
+                    )
+            agg_fn = lambda vs: vs[0]  # noqa: E731
         grid = [
-            [cells.get((i, j)) for j in range(len(col_labels))]
+            [agg_fn(cells[i, j]) if (i, j) in cells else None
+             for j in range(len(col_labels))]
             for i in range(len(row_labels))
         ]
         return Pivot(row_axis=rows, col_axis=cols, rows=row_labels, cols=col_labels,

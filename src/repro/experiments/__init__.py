@@ -16,10 +16,12 @@ results, and resume for free instead of hand-rolled loops.
 (process-mode safe); ``serve_matrix`` / ``train_matrix`` build the matching
 ``ConfigMatrix`` — compose further with ``+``/``*``/``where``/``derive``.
 """
-from .serve import serve_matrix, serve_sweep, serve_sweep_distributed
-from .train import train_matrix, train_sweep
+from .serve import SERVE_METRIC_SPECS, serve_matrix, serve_sweep, serve_sweep_distributed
+from .train import TRAIN_METRIC_SPECS, train_matrix, train_sweep
 
 __all__ = [
+    "SERVE_METRIC_SPECS",
+    "TRAIN_METRIC_SPECS",
     "serve_sweep",
     "serve_matrix",
     "serve_sweep_distributed",

@@ -58,11 +58,38 @@ from typing import Any
 
 import numpy as np
 
+from repro.analysis.metrics import MetricSpec
 from repro.configs.registry import get_config
 from repro.core.task import Context
 from repro.serve.request import Request
 from repro.serve.scheduler import Scheduler, SchedulerConfig, _pow2_ceil
 from repro.sharding.rules import ShardingCtx
+
+# Declarative registration for repro.analysis: the serve metrics worth
+# extracting from sweep results (``Examiner(SERVE_METRIC_SPECS)``). Raw keys
+# of the serve_sweep result dict plus derived ms-scale latencies.
+SERVE_METRIC_SPECS: tuple[MetricSpec, ...] = (
+    MetricSpec("tokens_per_s", unit="tok/s"),
+    MetricSpec("wall_s", unit="s"),
+    MetricSpec("latency_p50_s", unit="s"),
+    MetricSpec("latency_p95_s", unit="s"),
+    MetricSpec("ttft_p50_s", unit="s"),
+    MetricSpec("itl_p50_s", unit="s"),
+    MetricSpec("itl_p95_s", unit="s"),
+    MetricSpec("accept_rate"),
+    MetricSpec("tokens_per_model_step", unit="tok/step"),
+    MetricSpec("peak_cache_bytes", unit="B"),
+    MetricSpec(
+        "itl_p50_ms", unit="ms",
+        extract=lambda v: None if v.get("itl_p50_s") is None
+        else v["itl_p50_s"] * 1e3,
+    ),
+    MetricSpec(
+        "ttft_p50_ms", unit="ms",
+        extract=lambda v: None if v.get("ttft_p50_s") is None
+        else v["ttft_p50_s"] * 1e3,
+    ),
+)
 
 
 def _opt(ctx: Context, name: str, default: Any) -> Any:

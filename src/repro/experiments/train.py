@@ -32,7 +32,22 @@ from repro.sharding.rules import ShardingCtx
 from repro.train.loop import TrainRunConfig, train_run
 from repro.train.optimizer import AdamWConfig, Schedule
 
+from repro.analysis.metrics import MetricSpec
+
 from .serve import _opt
+
+# Declarative registration for repro.analysis: the train metrics worth
+# extracting from sweep results (``Examiner(TRAIN_METRIC_SPECS)``).
+TRAIN_METRIC_SPECS: tuple[MetricSpec, ...] = (
+    MetricSpec("tokens_per_s", unit="tok/s"),
+    MetricSpec("wall_s", unit="s"),
+    MetricSpec("loss_first"),
+    MetricSpec("loss_last"),
+    MetricSpec(
+        "loss_drop",
+        extract=lambda v: v["loss_first"] - v["loss_last"],
+    ),
+)
 
 
 def train_matrix(archs, lrs, int8=(False,), **settings: Any):

@@ -1,0 +1,487 @@
+"""repro.analysis: metric extraction, comparison tables, perf trajectory,
+regression policies, the event-fed dashboard, and the CLI."""
+import json
+import os
+import subprocess
+import sys
+import urllib.request
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    AnalysisNotificationProvider,
+    BenchRecord,
+    Dashboard,
+    Examiner,
+    MetricFrame,
+    MetricRecord,
+    MetricSpec,
+    RegressionPolicy,
+    Trajectory,
+    compare,
+    detect_regressions,
+)
+from repro.analysis.trajectory import find_baseline
+from repro.core import ConfigMatrix, FileQueue, Memento, RunnerConfig
+from repro.core.notifications import Event
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([SRC, env.get("PYTHONPATH", "")])
+    return env
+
+
+def _cli(*args, cwd=None):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=_env(), cwd=cwd,
+    )
+
+
+def _sweep(ctx):
+    return {
+        "tokens_per_s": 100.0 * ctx["n"] + ctx["seed"],
+        "wall_s": 0.5,
+        "itl_p50_s": 0.004,
+    }
+
+
+def _run_sweep():
+    return Memento(
+        _sweep,
+        runner_config=RunnerConfig(max_workers=2, enable_speculation=False),
+    ).run({"parameters": {"n": [1, 2], "seed": [0, 10]}})
+
+
+class TestMetrics:
+    def test_examine_results_params_and_host_ride_along(self):
+        res = _run_sweep()
+        frame = Examiner(["tokens_per_s", "wall_s"]).examine_results(res)
+        assert len(frame) == 8  # 4 tasks x 2 metrics
+        assert set(frame.metrics()) == {"tokens_per_s", "wall_s"}
+        r = frame.where(metric="tokens_per_s", n=2, seed=10).records[0]
+        assert r.value == 210.0
+        assert r.host and r.source == "result"
+
+    def test_spec_extract_and_failed_tasks_skipped(self):
+        def sometimes(ctx):
+            if ctx["i"] == 1:
+                raise RuntimeError("boom")
+            return {"itl_p50_s": 0.004 * (ctx["i"] + 1)}
+
+        res = Memento(
+            sometimes,
+            runner_config=RunnerConfig(max_workers=2, retries=0,
+                                       enable_speculation=False),
+        ).run({"parameters": {"i": [0, 1, 2]}})
+        ex = Examiner([
+            MetricSpec("itl_p50_ms", extract=lambda v: v["itl_p50_s"] * 1e3,
+                       unit="ms"),
+        ])
+        frame = ex.examine_results(res)
+        assert sorted(frame.values()) == [4.0, 12.0]
+        assert all(r.unit == "ms" for r in frame)
+
+    def test_examine_text_regex_num_placeholder(self):
+        ex = Examiner({"tok_s": r"({num}) tok/s", "p95_ms": r"p95=({num})ms"})
+        frame = ex.examine_text("run A: 42.5 tok/s p95=17ms\nrun B: 99 tok/s")
+        assert frame.where(metric="tok_s").values() == [42.5, 99.0]
+        assert frame.where(metric="p95_ms").values() == [17.0]
+
+    def test_examine_done_dir(self, tmp_path):
+        def f(ctx):
+            return ctx["i"]
+
+        eng = Memento(f, workdir=tmp_path / "w")
+        eng.run_distributed({"parameters": {"i": [0, 1]}},
+                            queue_dir=tmp_path / "q", owner="hostA")
+        frame = Examiner(["wall_s", "attempts"]).examine_done_dir(tmp_path / "q")
+        assert "failed" in frame.metrics()  # synthetic 0/1 failure metric
+        assert set(frame.values("failed")) == {0.0}
+        assert all(r.host == "hostA" for r in frame.where(metric="failed"))
+
+    def test_frame_roundtrip_results_csv(self, tmp_path):
+        res = _run_sweep()
+        path = tmp_path / "r.csv"
+        res.to_csv(path)
+        frame = MetricFrame.from_results_csv(path)
+        assert set(frame.metrics()) == {"wall_s", "tokens_per_s", "itl_p50_s"}
+        assert frame.where(metric="tokens_per_s", n=2.0, seed=10.0).values() == [210.0]
+        assert frame.param_values("n") == [1.0, 2.0]
+
+    def test_frame_csv_failed_rows_keep_wall_only(self, tmp_path):
+        def sometimes(ctx):
+            if ctx["i"]:
+                raise RuntimeError("boom")
+            return {"m": 1.0}
+
+        res = Memento(
+            sometimes,
+            runner_config=RunnerConfig(retries=0, enable_speculation=False),
+        ).run({"parameters": {"i": [0, 1]}})
+        path = tmp_path / "r.csv"
+        res.to_csv(path)
+        frame = MetricFrame.from_results_csv(path)
+        assert len(frame.where(metric="m")) == 1
+        assert len(frame.where(metric="wall_s")) == 2
+
+    def test_group_and_where_pred(self):
+        frame = MetricFrame([
+            MetricRecord("m", 1.0, params={"a": 1}, host="h1"),
+            MetricRecord("m", 3.0, params={"a": 1}, host="h2"),
+            MetricRecord("m", 5.0, params={"a": 2}, host="h1"),
+        ])
+        assert frame.group(["a"], metric="m") == {(1,): [1.0, 3.0], (2,): [5.0]}
+        assert frame.group(["host"]) == {("h1",): [1.0, 5.0], ("h2",): [3.0]}
+        assert frame.where(pred=lambda r: r.value > 2).values() == [3.0, 5.0]
+
+
+class TestTables:
+    def _frame(self):
+        recs = []
+        for a in ("x", "y"):
+            for b in (1, 2):
+                for rep in range(2):
+                    recs.append(MetricRecord(
+                        "tok_s", {"x": 10.0, "y": 20.0}[a] * b + rep,
+                        params={"arch": a, "slots": b},
+                    ))
+        return MetricFrame(recs)
+
+    def test_compare_grouped_agg(self):
+        t = compare(self._frame(), rows="arch", cols="slots", agg="mean")
+        assert t.row_labels == [("x",), ("y",)]
+        assert t.col_labels == [1, 2]
+        assert t.cells == [[10.5, 20.5], [20.5, 40.5]]
+
+    def test_compare_agg_variants(self):
+        t = compare(self._frame(), rows="arch", cols="slots", agg="max")
+        assert t.cells[0] == [11.0, 21.0]
+        t = compare(self._frame(), rows="arch", cols="slots", agg="count")
+        assert t.cells == [[2, 2], [2, 2]]
+        t = compare(self._frame(), rows="arch", cols="slots", agg="p95")
+        assert t.cells[1][1] == pytest.approx(40.95)
+
+    def test_compare_metrics_as_columns(self):
+        frame = MetricFrame([
+            MetricRecord("tok_s", 10.0, params={"a": 1}),
+            MetricRecord("wall_s", 0.5, params={"a": 1}),
+        ])
+        t = compare(frame, rows="a")
+        assert t.col_labels == ["tok_s", "wall_s"]
+        assert t.cells == [[10.0, 0.5]]
+
+    def test_compare_multiple_metrics_with_cols_requires_pick(self):
+        frame = MetricFrame([
+            MetricRecord("m1", 1.0, params={"a": 1, "b": 1}),
+            MetricRecord("m2", 2.0, params={"a": 1, "b": 1}),
+        ])
+        with pytest.raises(ValueError, match="pass metric="):
+            compare(frame, rows="a", cols="b")
+
+    def test_baseline_annotations_in_every_renderer(self):
+        t = compare(self._frame(), rows="arch", cols="slots", agg="mean",
+                    baseline=1)
+        md, csv, txt = t.to_markdown(), t.to_csv(), str(t)
+        for out in (md, csv, txt):
+            assert "2 (vs 1)" in out
+            assert "(1.95x, +95.2%)" in out  # x-row: 10.5 -> 20.5
+        assert md.splitlines()[1].startswith("| ---")
+
+    def test_baseline_must_be_a_column(self):
+        t = compare(self._frame(), rows="arch", cols="slots")
+        t.baseline = 99
+        with pytest.raises(ValueError, match="not a column"):
+            t.to_markdown()
+
+
+def _write_record(d: Path, n: int, mode: str, commit: str, rows):
+    d.mkdir(parents=True, exist_ok=True)
+    (d / f"BENCH_{n}.json").write_text(json.dumps({
+        "schema": 1, "record": n, "mode": mode, "git_commit": commit,
+        "timestamp": f"2026-08-0{min(n, 9)}T00:00:00+00:00", "rows": rows,
+    }))
+
+
+class TestTrajectory:
+    def test_load_filter_series(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "c1",
+                      [{"name": "B9", "tok_s": 10.0}, {"name": "B10", "tok_s": 5.0}])
+        _write_record(tmp_path, 2, "full", "c2", [{"name": "B9", "tok_s": 50.0}])
+        _write_record(tmp_path, 3, "smoke", "c3", [{"name": "B9", "tok_s": 12.0}])
+        traj = Trajectory.load(tmp_path)
+        assert [r.record for r in traj] == [1, 2, 3]
+        assert traj.modes() == ["smoke", "full"]
+        assert traj.filter(mode="smoke").series("B9") == [(1, 10.0), (3, 12.0)]
+        assert traj.latest("smoke").record == 3
+        assert traj.filter(benchmark="B10").names() == ["B10"]
+        frame = traj.to_frame()
+        assert frame.where(benchmark="B9", mode="smoke").values() == [10.0, 12.0]
+
+    def test_half_written_and_foreign_files_skipped(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "c1", [{"name": "B9", "tok_s": 1.0}])
+        (tmp_path / "BENCH_2.json").write_text("{ truncated")
+        (tmp_path / "BENCH_x.json").write_text("{}")
+        assert len(Trajectory.load(tmp_path)) == 1
+
+    def test_find_baseline_prefers_lineage_ancestor(self, tmp_path):
+        # record 2 is on a diverged branch; record 1 is an ancestor.
+        _write_record(tmp_path, 1, "smoke", "main1", [])
+        _write_record(tmp_path, 2, "smoke", "branch", [])
+        _write_record(tmp_path, 3, "smoke", "main2", [])
+        traj = Trajectory.load(tmp_path)
+        lineage = {("main1", "main2"): True, ("branch", "main2"): False}
+        base = find_baseline(traj, traj.get(3),
+                             is_ancestor=lambda o, n: lineage[(o, n)])
+        assert base.record == 1
+
+    def test_find_baseline_fallback_when_lineage_unknowable(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "a", [])
+        _write_record(tmp_path, 2, "smoke", "b", [])
+        traj = Trajectory.load(tmp_path)
+        base = find_baseline(traj, traj.get(2), is_ancestor=lambda o, n: None)
+        assert base.record == 1
+
+    def test_find_baseline_none_when_all_diverged_or_other_mode(self, tmp_path):
+        _write_record(tmp_path, 1, "full", "a", [])
+        _write_record(tmp_path, 2, "smoke", "b", [])
+        _write_record(tmp_path, 3, "smoke", "c", [])
+        traj = Trajectory.load(tmp_path)
+        assert find_baseline(traj, traj.get(3),
+                             is_ancestor=lambda o, n: False) is None
+
+    def test_detect_regressions_policy_and_skips(self, tmp_path):
+        base_rows = [
+            {"name": "B9", "tok_s": 100.0},
+            {"name": "B10"},  # no tok_s on the baseline: must be skipped
+            {"name": "B11", "tok_s": 0.0},  # zero baseline: skipped
+            {"name": "B12", "tok_s": 10.0, "itl_ms": 4.0},
+        ]
+        new_rows = [
+            {"name": "B9", "tok_s": 60.0},  # 0.60x -> flagged
+            {"name": "B10", "tok_s": 1.0},
+            {"name": "B11", "tok_s": 5.0},
+            {"name": "B12", "tok_s": 9.0, "itl_ms": 9.0},  # itl worse 2.25x
+        ]
+        _write_record(tmp_path, 1, "smoke", "c1", base_rows)
+        _write_record(tmp_path, 2, "smoke", "c1", new_rows)
+        traj = Trajectory.load(tmp_path)
+        regs = detect_regressions(traj.get(2), traj.get(1))
+        assert [r.name for r in regs] == ["B9"]
+        assert regs[0].warn_line() == (
+            "WARN,B9,tok/s 100.0 -> 60.0 (0.60x vs record 1, >30% regression)"
+        )
+        both = detect_regressions(
+            traj.get(2), traj.get(1),
+            policies=(RegressionPolicy(),
+                      RegressionPolicy("itl_ms", max_drop=0.5,
+                                       higher_is_better=False)),
+        )
+        assert {(r.name, r.metric) for r in both} == {("B9", "tok_s"),
+                                                      ("B12", "itl_ms")}
+
+    def test_run_py_diff_delegates_and_matches_cli(self, tmp_path):
+        """The harness's WARN lines and the CLI's are identical verdicts."""
+        _write_record(tmp_path, 1, "smoke", "unknown",
+                      [{"name": "B9", "tok_s": 100.0},
+                       {"name": "B10"}])
+        _write_record(tmp_path, 2, "smoke", "unknown",
+                      [{"name": "B9", "tok_s": 50.0},
+                       {"name": "B10", "tok_s": 9.9}])
+        import importlib.util
+
+        run_path = Path(__file__).parent.parent / "benchmarks" / "run.py"
+        spec = importlib.util.spec_from_file_location("bench_run", run_path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        harness_lines = mod.diff_records(
+            str(tmp_path / "BENCH_2.json"), str(tmp_path)
+        )
+        out = _cli("regressions", "--records-dir", str(tmp_path))
+        cli_lines = [ln for ln in out.stdout.splitlines()
+                     if ln.startswith("WARN,")]
+        assert harness_lines == cli_lines == [
+            "WARN,B9,tok/s 100.0 -> 50.0 (0.50x vs record 1, >30% regression)"
+        ]
+
+    def test_cli_regressions_strict_gates(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "unknown",
+                      [{"name": "B9", "tok_s": 100.0}])
+        _write_record(tmp_path, 2, "smoke", "unknown",
+                      [{"name": "B9", "tok_s": 50.0}])
+        assert _cli("regressions", "--records-dir", str(tmp_path)).returncode == 0
+        strict = _cli("regressions", "--records-dir", str(tmp_path), "--strict")
+        assert strict.returncode == 1
+        # no regression -> strict passes
+        _write_record(tmp_path / "ok", 1, "smoke", "unknown",
+                      [{"name": "B9", "tok_s": 100.0}])
+        _write_record(tmp_path / "ok", 2, "smoke", "unknown",
+                      [{"name": "B9", "tok_s": 95.0}])
+        assert _cli("regressions", "--records-dir", str(tmp_path / "ok"),
+                    "--strict").returncode == 0
+
+
+def _event(kind, t=1000.0, **payload):
+    return Event(kind=kind, message="", unix_time=t, payload=payload)
+
+
+class TestDashboardProvider:
+    def _feed(self, prov):
+        prov.notify(_event("run_started", t=1000.0, total=4, workers=2))
+        prov.notify(_event(
+            "task_finished", t=1001.0, key="k1", status="ok",
+            params={"i": 0}, host="h1", wall_s=1.0, attempts=1, cached=False,
+            metrics={"tokens_per_s": 50.0, "generated_tokens": 64.0,
+                     "accept_rate": 0.9},
+        ))
+        prov.notify(_event(
+            "task_failed", t=1002.0, key="k2", status="failed",
+            params={"i": 1}, host="h2", wall_s=0.5, attempts=2, cached=False,
+            error="RuntimeError: boom", traceback="Traceback ... boom",
+        ))
+        prov.notify(_event(
+            "queue_progress", t=1002.5, total=4, done=2, failed=1,
+            claimed_by={"h1": 1}, done_by={"h1": 1, "h2": 1},
+            owner="h1", elapsed_s=2.5, eta_s=2.5,
+        ))
+
+    def test_aggregates_and_failure_drilldown(self):
+        prov = AnalysisNotificationProvider()
+        self._feed(prov)
+        s = prov.state()
+        assert s["total"] == 4 and s["done"] == 2 and s["failed"] == 1
+        assert s["queue"]["claimed_by"] == {"h1": 1}
+        assert set(s["hosts"]) == {"h1", "h2"}
+        assert s["hosts"]["h1"]["tokens_per_s"] == 64.0  # 64 tokens / 1.0s
+        assert s["hosts"]["h1"]["metrics"]["accept_rate"] == 0.9
+        assert s["serve"]["accept_rate"] == 0.9
+        [fail] = s["failures"]
+        assert fail["error"] == "RuntimeError: boom"
+        assert "boom" in fail["traceback"]
+        assert fail["host"] == "h2" and fail["params"] == {"i": 1}
+        assert s["eta_s"] is not None and s["eta_s"] >= 0
+
+    def test_journal_write_and_replay(self, tmp_path):
+        journal = tmp_path / "events.jsonl"
+        prov = AnalysisNotificationProvider(journal_path=journal)
+        self._feed(prov)
+        lines = journal.read_text().strip().splitlines()
+        assert len(lines) == 4
+        assert json.loads(lines[0])["kind"] == "run_started"
+
+        fresh = AnalysisNotificationProvider()
+        offset = fresh.replay_journal(journal)
+        assert offset == len(journal.read_bytes())
+        assert fresh.state()["done"] == prov.state()["done"]
+        assert fresh.state()["failures"] == prov.state()["failures"]
+        # replay does not re-append to a journal
+        prov2 = AnalysisNotificationProvider(journal_path=journal)
+        prov2.replay_journal(journal)
+        assert len(journal.read_text().strip().splitlines()) == 4
+
+    def test_events_since_cursor(self):
+        prov = AnalysisNotificationProvider()
+        self._feed(prov)
+        cursor, events = prov.events_since(0)
+        assert cursor == 4 and len(events) == 4
+        cursor2, tail = prov.events_since(cursor)
+        assert cursor2 == 4 and tail == []
+
+    def test_track_and_notify_double_report_deduped(self):
+        prov = AnalysisNotificationProvider()
+        eng = Memento(
+            lambda ctx: {"tokens_per_s": 1.0},
+            notification_provider=prov,
+            runner_config=RunnerConfig(max_workers=2, enable_speculation=False),
+        )
+        results = list(prov.track(eng.stream(
+            ConfigMatrix.from_dict({"parameters": {"i": [0, 1, 2]}})
+        )))
+        assert len(results) == 3
+        assert prov.state()["done"] == 3  # not 6
+
+    def test_http_endpoints(self):
+        prov = AnalysisNotificationProvider()
+        self._feed(prov)
+        dash = Dashboard(prov)  # port=0: ephemeral
+        url = dash.start()
+        try:
+            with urllib.request.urlopen(f"{url}/api/state", timeout=5) as r:
+                state = json.loads(r.read())
+            assert state["done"] == 2 and "h1" in state["hosts"]
+            with urllib.request.urlopen(f"{url}/api/events?since=0",
+                                        timeout=5) as r:
+                ev = json.loads(r.read())
+            assert ev["next"] == 4 and len(ev["events"]) == 4
+            with urllib.request.urlopen(url, timeout=5) as r:
+                page = r.read().decode()
+            assert "memento fleet" in page and "/api/state" in page
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(f"{url}/api/nope", timeout=5)
+        finally:
+            dash.stop()
+
+
+class TestCLI:
+    def test_table_cli_identical_to_api(self, tmp_path):
+        res = _run_sweep()
+        csv_path = tmp_path / "r.csv"
+        res.to_csv(csv_path)
+        frame = MetricFrame.from_results_csv(csv_path)
+        api = compare(frame, rows="n", cols="seed", metric="tokens_per_s",
+                      agg="mean", baseline=0).to_markdown()
+        out = _cli("table", "--csv", str(csv_path), "--rows", "n",
+                   "--cols", "seed", "--metric", "tokens_per_s",
+                   "--agg", "mean", "--baseline", "0")
+        assert out.returncode == 0, out.stderr
+        assert out.stdout.strip() == api
+
+    def test_table_latest_record(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "c1",
+                      [{"name": "B9", "tok_s": 10.0}])
+        out = _cli("table", "--latest", "--records-dir", str(tmp_path))
+        assert out.returncode == 0, out.stderr
+        assert "| B9 | 10 |" in out.stdout
+        assert "Benchmark record 1" in out.stdout
+
+    def test_trajectory_cli_json(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "c1",
+                      [{"name": "B9", "tok_s": 10.0}])
+        _write_record(tmp_path, 2, "smoke", "c2",
+                      [{"name": "B9", "tok_s": 12.0}])
+        out = _cli("trajectory", "--records-dir", str(tmp_path),
+                   "--series", "B9", "--json")
+        assert out.returncode == 0, out.stderr
+        data = json.loads(out.stdout)
+        assert data["series"] == [{"record": 1, "value": 10.0},
+                                  {"record": 2, "value": 12.0}]
+
+    def test_filequeue_stats_json(self, tmp_path):
+        q = FileQueue(tmp_path / "q", owner="me")
+        specs = ConfigMatrix.from_dict(
+            {"parameters": {"i": [0, 1, 2]}}
+        ).task_list()
+        q.publish(specs)
+        assert q.try_claim(specs[0].key)
+        q.mark_done(specs[1].key, "ok", {"wall_s": 0.1})
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.core.filequeue", "stats",
+             str(tmp_path / "q"), "--json"],
+            capture_output=True, text=True, env=_env(),
+        )
+        assert out.returncode == 0, out.stderr
+        data = json.loads(out.stdout)
+        assert data["total"] == 3 and data["claimed"] == 1
+        assert data["done"] == 1 and data["available"] == 1
+        assert data["done_by"] == {"me": 1}
+        # the human format still works
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.core.filequeue", "stats",
+             str(tmp_path / "q")],
+            capture_output=True, text=True, env=_env(),
+        )
+        assert "total=3 claimed=1 done=1 available=1" in out.stdout

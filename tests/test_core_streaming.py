@@ -124,6 +124,35 @@ class TestResultSetV2:
         p = res.pivot("i", "i", value_fn=lambda r: r.wall_s >= 0)
         assert all(p.cells[i][i] for i in range(4))
 
+    def _seeded(self):
+        # Two tasks land in every (a, b) cell: the seed axis varies.
+        def cell(ctx):
+            return ctx["a"] * 10 + ctx["seed"]
+
+        return Memento(cell).run(
+            {"parameters": {"a": [1, 2], "b": [3], "seed": [0, 4]}}
+        )
+
+    def test_pivot_ambiguous_cells_raise_by_default(self):
+        res = self._seeded()
+        with pytest.raises(ValueError, match="ambiguous"):
+            res.pivot("a", "b")
+
+    def test_pivot_agg_resolves_duplicates(self):
+        res = self._seeded()
+        assert res.pivot("a", "b", agg="mean").cells == [[12.0], [22.0]]
+        assert res.pivot("a", "b", agg="max").cells == [[14], [24]]
+        assert res.pivot("a", "b", agg="count").cells == [[2], [2]]
+        # "last" reproduces the historical last-task-index-wins behavior
+        assert res.pivot("a", "b", agg="last").cells == [[14], [24]]
+        # a callable aggregates the raw cell values in task-index order
+        assert res.pivot("a", "b", agg=lambda vs: vs[0]).cells == [[10], [20]]
+
+    def test_pivot_agg_unknown_name_raises(self):
+        res = self._seeded()
+        with pytest.raises(ValueError, match="unknown agg"):
+            res.pivot("a", "b", agg="p99")
+
     def test_to_csv_scalar_and_dict_values(self, tmp_path):
         res = self._results()
         text = res.to_csv(tmp_path / "out.csv")

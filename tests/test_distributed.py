@@ -594,6 +594,30 @@ class TestDistributedRuntime:
         assert prog
         assert prog[-1].payload["total"] == 3
         assert "claimed_by" in prog[-1].payload and "done_by" in prog[-1].payload
+        # structured-event schema: every queue_progress snapshot carries the
+        # fleet fields the dashboard consumes
+        for e in prog:
+            p = e.payload
+            assert set(p) >= {"total", "done", "failed", "claimed_by",
+                              "done_by", "owner", "elapsed_s", "eta_s"}
+            assert p["owner"] == "me"
+            assert p["elapsed_s"] >= 0.0
+            assert p["eta_s"] is None or p["eta_s"] >= 0.0
+        # run_started announces the matrix size for ETA math downstream
+        started = [e for e in rec.events if e.kind == "run_started"]
+        assert started and started[0].payload["total"] == 3
+        assert started[0].payload["workers"] == 2
+        # task_finished events carry host/wall_s/params/metrics
+        fin = [e for e in rec.events if e.kind == "task_finished"]
+        assert fin
+        for e in fin:
+            p = e.payload
+            assert set(p) >= {"key", "status", "params", "host", "wall_s",
+                              "attempts", "cached", "metrics"}
+            assert p["host"]
+            assert "i" in p["params"]
+        rec_dict = fin[0].to_record()
+        assert rec_dict["kind"] == "task_finished" and rec_dict["key"]
         # ProgressNotificationProvider renders the per-host queue line
         buf = io.StringIO()
         prov = ProgressNotificationProvider(total=3, stream=buf)
