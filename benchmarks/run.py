@@ -139,27 +139,34 @@ def write_records(mode: str, records_dir: str | None = None) -> str | None:
 
 def diff_records(new_path: str, records_dir: str | None = None) -> list[str]:
     """Diff ``new_path`` against its baseline; returns ``WARN,...`` lines
-    for >30% tok/s regressions.
+    for regressions under the checked-in policy thresholds.
 
     Delegates to ``repro.analysis.trajectory`` so these verdicts and the
     ``python -m repro.analysis regressions`` CLI are identical by
-    construction. The baseline is the latest earlier record of the same mode
-    whose commit is on the current commit's lineage — a record produced on a
-    diverged branch is never the comparison point. Rows are matched by name;
-    rows where *either* side has no extracted tok/s figure are skipped, so a
-    baseline without the metric can't fabricate a WARN.
+    construction. Thresholds come from ``benchmarks/policy.json`` (falling
+    back to the built-in >30% tok/s rule if it's gone), so tightening a
+    bound is a reviewed diff on the policy file, not a CI-config edit. The
+    baseline is the latest earlier record of the same mode whose commit is
+    on the current commit's lineage — a record produced on a diverged
+    branch is never the comparison point. Rows are matched by name; rows
+    where *either* side has no extracted value for a policy's metric are
+    skipped, so a baseline without the metric can't fabricate a WARN.
     """
     from repro.analysis.trajectory import (
         BenchRecord,
         Trajectory,
         detect_regressions,
         find_baseline,
+        load_policies,
     )
 
     new = BenchRecord.load(new_path)
     traj = Trajectory.load(records_dir or _RECORDS_DIR)
     baseline = find_baseline(traj, new)
-    return [r.warn_line() for r in detect_regressions(new, baseline)]
+    policies = load_policies(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "policy.json")
+    )
+    return [r.warn_line() for r in detect_regressions(new, baseline, policies)]
 
 
 def _value(result):
@@ -611,6 +618,88 @@ def bench_serve_spec(smoke: bool = False) -> None:
         )
 
 
+def bench_serve_sharded(smoke: bool = False) -> None:
+    """B15: tensor-parallel sharded stepping vs the single-device step.
+
+    One Memento matrix with ``mesh_shape`` as the axis replays the same
+    greedy workload on 1 device and on a (1, model) test mesh (forced host
+    devices off-TPU). Greedy token identity across meshes is asserted —
+    sharded stepping must be a pure layout change — along with unchanged
+    decode/chunk trace counts (one compile per bucket, never per mesh).
+    Each row reports measured inter-token latency next to the analytic
+    roofline prediction for that mesh (launch/roofline.py): on forced host
+    devices the measured/predicted ratio is meaningless in magnitude, but
+    the per-mesh predictions are exactly what a real v5e run would be
+    gated on.
+    """
+    from repro.core import Memento, RunnerConfig
+    from repro.experiments import serve_matrix, serve_sweep
+    from repro.launch.mesh import devices_required
+
+    model = 2 if smoke else 4
+    if not devices_required(model):
+        _row(
+            "B15_serve_sharded", 0.0,
+            f"skipped: needs {model} XLA devices, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={model} "
+            "before running (CI sharded-smoke lane does)",
+        )
+        return
+    if smoke:
+        cache_len, page, budget, max_new = 96, 8, 16, 8
+        prompts = (6, 20, 9, 14)
+    else:
+        cache_len, page, budget, max_new = 512, 16, 64, 16
+        prompts = (16, 48, 24, 96, 32, 8)
+    meshes = ["1x1", f"1x{model}"]
+    matrix = serve_matrix(
+        ["llama3.2-3b"], backends=["xla"],
+        scheduler={"mesh_shape": meshes},
+        cache_len=cache_len, n_slots=4, page_size=page, chunk_budget=budget,
+        n_requests=len(prompts), prompt_lens=prompts,
+        max_new_tokens=max_new, warmup=True,
+    )
+    eng = Memento(
+        serve_sweep, namespace="serve",
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    rows = {}
+    for r in eng.run(matrix, cache=False):
+        v = _value(r)
+        rows[v["mesh"]] = v
+        _row(
+            f"B15_serve_sharded_{v['mesh']}",
+            v["wall_s"] * 1e6,
+            f"{v['tokens_per_s']:.1f} tok/s "
+            f"itl_p50={v['itl_p50_s']*1e3:.1f}ms "
+            f"pred={v['predicted_step_ms']:.3f}ms "
+            f"({v['predicted_bottleneck']}-bound) "
+            f"ratio={v['itl_p50_s']*1e3/v['predicted_step_ms']:.0f}x "
+            f"decode_traces={v['decode_traces']} "
+            f"chunk_traces={v['chunk_traces']} devices={v['mesh_devices']}",
+        )
+    if len(rows) == len(meshes):
+        base = rows[meshes[0]]
+        sharded = rows[meshes[1]]
+        if base["tokens"] != sharded["tokens"]:
+            _row("B15_sharded_token_identity", 0.0,
+                 f"MISMATCH between {meshes[0]} and {meshes[1]}", ok=False)
+        else:
+            _row("B15_sharded_token_identity", 0.0,
+                 f"identical tokens across {' vs '.join(meshes)}")
+        traces_ok = (
+            base["decode_traces"] == sharded["decode_traces"]
+            and base["chunk_traces"] == sharded["chunk_traces"]
+        )
+        _row(
+            "B15_sharded_trace_bound", 0.0,
+            f"decode_traces {base['decode_traces']}=={sharded['decode_traces']} "
+            f"chunk_traces {base['chunk_traces']}=={sharded['chunk_traces']} "
+            "(one compile per bucket, never per mesh)",
+            ok=traces_ok,
+        )
+
+
 def bench_serve_smoke() -> None:
     """Tiny B9/B10/B11 rows for CI: one smoke-scale model, second-scale
     workloads, still through Memento + serve_sweep end-to-end."""
@@ -840,6 +929,7 @@ def main(smoke: bool = False) -> None:
     bench_serve_chunked()
     bench_serve_prefix()
     bench_serve_spec()
+    bench_serve_sharded()
     bench_roofline_summary()
 
 
@@ -854,6 +944,11 @@ if __name__ == "__main__":
         help="tiny B12 only: 1/2-process file-queue drain + kill-recovery row",
     )
     ap.add_argument(
+        "--sharded-smoke", action="store_true",
+        help="tiny B15 only: sharded vs 1-device stepping (needs forced "
+        "host devices: XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+    )
+    ap.add_argument(
         "--records-dir", default=None,
         help="where BENCH_<n>.json records land (default: benchmarks/records)",
     )
@@ -866,6 +961,10 @@ if __name__ == "__main__":
         print("name,us_per_call,derived")
         bench_distributed(smoke=True)
         mode = "distributed-smoke"
+    elif args.sharded_smoke:
+        print("name,us_per_call,derived")
+        bench_serve_sharded(smoke=True)
+        mode = "sharded-smoke"
     else:
         main(smoke=args.smoke)
         mode = "smoke" if args.smoke else "full"

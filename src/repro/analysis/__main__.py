@@ -23,11 +23,11 @@ from typing import Any
 from .metrics import MetricFrame, _as_float
 from .tables import AGGREGATORS, compare
 from .trajectory import (
-    DEFAULT_POLICIES,
     DEFAULT_RECORDS_DIR,
     RegressionPolicy,
     Trajectory,
     diff_latest,
+    load_policies,
 )
 
 
@@ -133,7 +133,10 @@ def cmd_trajectory(args: argparse.Namespace) -> int:
 
 def _policies(args: argparse.Namespace) -> tuple[RegressionPolicy, ...]:
     if not args.policy:
-        return DEFAULT_POLICIES
+        # No CLI overrides: thresholds come from the checked-in policy
+        # file (benchmarks/policy.json by default), falling back to the
+        # built-in >30% tok/s rule when no file exists.
+        return load_policies(getattr(args, "policy_file", None))
     out = []
     for p in args.policy:
         # metric[:max_drop[:lower_is_better]] e.g. tok_s:0.3 or itl_p50_s:0.5:lower
@@ -223,6 +226,9 @@ def build_parser() -> argparse.ArgumentParser:
     rg.add_argument("--record", type=int, help="record number (default: latest)")
     rg.add_argument("--policy", nargs="+",
                     help="metric[:max_drop[:lower]] e.g. tok_s:0.3 itl_p50_s:0.5:lower")
+    rg.add_argument("--policy-file",
+                    help="JSON policy file (default: benchmarks/policy.json "
+                    "when present); --policy flags override it")
     rg.add_argument("--strict", action="store_true",
                     help="exit 1 when regressions are found (CI gate)")
     rg.set_defaults(fn=cmd_regressions)

@@ -260,6 +260,35 @@ class RegressionPolicy:
 
 DEFAULT_POLICIES: tuple[RegressionPolicy, ...] = (RegressionPolicy(),)
 
+# Checked-in policy file: thresholds live next to the records they gate so
+# a tightened bound rides the same PR as the change it protects, instead of
+# drifting in CI job definitions. Repo-relative; resolved against cwd.
+DEFAULT_POLICY_FILE = os.path.join("benchmarks", "policy.json")
+
+
+def load_policies(path: str | Path | None = None) -> tuple[RegressionPolicy, ...]:
+    """Read RegressionPolicies from a JSON policy file.
+
+    Schema: ``{"policies": [{"metric": "tok_s", "max_drop": 0.30,
+    "higher_is_better": true, "label": ""}, ...]}`` — every field optional
+    with the dataclass defaults. A missing file (or ``path=None`` with no
+    checked-in default) falls back to ``DEFAULT_POLICIES``; a present but
+    malformed file raises, so a typo can't silently disable the gate.
+    """
+    p = Path(path) if path is not None else Path(DEFAULT_POLICY_FILE)
+    if not p.exists():
+        return DEFAULT_POLICIES
+    with open(p) as fh:
+        doc = json.load(fh)
+    entries = doc["policies"]
+    out = []
+    for e in entries:
+        unknown = set(e) - {"metric", "max_drop", "higher_is_better", "label"}
+        if unknown:
+            raise ValueError(f"{p}: unknown policy fields {sorted(unknown)}")
+        out.append(RegressionPolicy(**e))
+    return tuple(out) or DEFAULT_POLICIES
+
 
 @dataclass(frozen=True)
 class Regression:

@@ -46,6 +46,12 @@ Axes/settings understood by :func:`serve_sweep`:
   max_new_tokens         per-request decode budget (default 8)
   temperature            0 => greedy (default)
   arrival_rate_hz        Poisson arrival rate; 0/absent => offline batch
+  mesh_shape             sharded stepping: (data, model) devices, as a
+                         tuple/list or a "1x2" string (default None ->
+                         single device). Needs that many visible XLA
+                         devices (see launch/mesh.py)
+  sharding_profile       ShardingProfile for the mesh (default
+                         "decode_default")
   reduced                use the smoke-scale config copy (default True)
   warmup                 pre-compile per prompt bucket before timing (default True)
   seed                   workload RNG seed (default 0)
@@ -89,7 +95,30 @@ SERVE_METRIC_SPECS: tuple[MetricSpec, ...] = (
         extract=lambda v: None if v.get("ttft_p50_s") is None
         else v["ttft_p50_s"] * 1e3,
     ),
+    MetricSpec("predicted_step_ms", unit="ms"),
+    # Measured inter-token latency over the analytic roofline bound: how
+    # far the smoke-scale CPU run sits above the v5e prediction. Only the
+    # *trend across meshes* is meaningful off-TPU, not the magnitude.
+    MetricSpec(
+        "roofline_ratio",
+        extract=lambda v: (
+            None
+            if not v.get("predicted_step_ms") or v.get("itl_p50_s") is None
+            else v["itl_p50_s"] * 1e3 / v["predicted_step_ms"]
+        ),
+    ),
 )
+
+
+def _mesh_shape_opt(value: Any) -> tuple[int, int] | None:
+    """Normalize a mesh_shape knob: None, (d, m), [d, m], or "dxm"."""
+    if value is None:
+        return None
+    if isinstance(value, str):
+        d, m = value.lower().split("x")
+        return (int(d), int(m))
+    d, m = value
+    return (int(d), int(m))
 
 
 def _opt(ctx: Context, name: str, default: Any) -> Any:
@@ -175,6 +204,7 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
 
     params = init_params(lm.model_schema(cfg), jax.random.PRNGKey(_opt(ctx, "seed", 0)))
     chunk_budget = _opt(ctx, "chunk_budget", None) or None
+    mesh_shape = _mesh_shape_opt(_opt(ctx, "mesh_shape", None))
     sched_cfg = SchedulerConfig(
         n_slots=int(_opt(ctx, "n_slots", 4)),
         cache_len=int(_opt(ctx, "cache_len", 128)),
@@ -191,6 +221,8 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         speculative=bool(_opt(ctx, "speculative", False)),
         draft_k=int(_opt(ctx, "draft_k", 4)),
         seed=int(_opt(ctx, "seed", 0)),
+        mesh_shape=mesh_shape,
+        sharding_profile=str(_opt(ctx, "sharding_profile", "decode_default")),
     )
     drafter_kind = str(_opt(ctx, "drafter", "ngram"))
     if drafter_kind not in ("ngram", "oracle"):
@@ -351,6 +383,18 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     # ~min(n_slots, live requests); speculation lifts it by accepted
     # tokens per verify.
     model_steps = decode_steps + spec_steps + spec_replays
+    # Analytic v5e roofline for one decode step at this batch and mesh —
+    # recorded next to the measured latencies so analysis can report the
+    # measured/predicted ratio per mesh (launch/roofline.py).
+    from repro.launch.roofline import predict_decode_step
+    from repro.models.schema import count_params
+
+    pred = predict_decode_step(
+        cfg,
+        count_params(lm.model_schema(cfg)),
+        batch=sched_cfg.n_slots,
+        mesh_shape=mesh_shape or (1, 1),
+    )
     return {
         "arch": arch,
         "attn_backend": backend,
@@ -387,6 +431,13 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         ),
         "peak_cache_bytes": cache_bytes["peak_bytes"],
         "contiguous_cache_bytes": cache_bytes["contiguous_bytes"],
+        "cache_bytes_per_page_per_device": cache_bytes[
+            "bytes_per_page_per_device"
+        ],
+        "mesh": "1x1" if mesh_shape is None else f"{mesh_shape[0]}x{mesh_shape[1]}",
+        "mesh_devices": sched.sctx.device_count(),
+        "predicted_step_ms": pred.step_time_lower_bound * 1e3,
+        "predicted_bottleneck": pred.bottleneck,
         "paged": sched_cfg.paged,
         "chunk_budget": sched_cfg.chunk_budget,
         "preemption": sched_cfg.preemption,

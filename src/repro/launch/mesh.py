@@ -31,6 +31,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
+def devices_required(n: int) -> bool:
+    """True when at least ``n`` XLA devices are visible.
+
+    Multi-device tests gate on this to *skip* (not fail) on 1-device CI:
+    ``pytest.mark.skipif(not devices_required(2), ...)``. The CI
+    sharded-smoke lane sets ``--xla_force_host_platform_device_count=8``
+    so the same tests run there for real.
+    """
+    return len(jax.devices()) >= n
+
+
 def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0) -> Mesh:
     """Small mesh over however many devices exist (CPU tests: 1x1)."""
     shape = (pod, data, model) if pod else (data, model)
@@ -38,7 +49,14 @@ def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0) -> Mesh:
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) < n:
-        raise RuntimeError(f"test mesh {shape} needs {n} devices, have {len(devices)}")
+        raise RuntimeError(
+            f"test mesh {dict(zip(axes, shape))} needs {n} devices but only "
+            f"{len(devices)} are visible. Forcing host devices must happen "
+            "before the first jax import: set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} in the "
+            "environment (tests should gate on mesh.devices_required() to "
+            "skip instead of failing on 1-device CI)."
+        )
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 

@@ -326,6 +326,46 @@ def model_flops(cfg, shape, n_params_active: int) -> float:
     return 2.0 * n_params_active * shape.global_batch
 
 
+def predict_decode_step(
+    cfg,
+    n_params: int,
+    batch: int,
+    mesh_shape: tuple[int, int] = (1, 1),
+    dtype_bytes: int = 2,
+) -> Roofline:
+    """Analytic roofline for ONE sharded decode step (no HLO needed).
+
+    The serving sweep records this next to measured ``itl_p50`` so the
+    B15 benchmark can report measured/predicted ratios per mesh. Terms:
+
+      * compute — 2*N*B flops over ``data*model`` chips,
+      * memory  — every device streams its 1/model weight shard once per
+        step (decode is weight-bandwidth-bound; KV reads are second-order
+        at serving batch sizes and deliberately excluded from the bound),
+      * collective — tensor parallelism's two all-reduces per layer
+        (attention o-proj + mlp down-proj) of (B, d_model) activations,
+        ring cost ``2 * x * (model-1)/model`` each; zero at model=1.
+    """
+    data, model = (int(x) for x in mesh_shape)
+    chips = max(data * model, 1)
+    model = max(model, 1)
+    flops = 2.0 * n_params * batch / chips
+    weight_bytes = n_params * dtype_bytes / model
+    act = batch * cfg.d_model * dtype_bytes
+    coll = 2.0 * cfg.n_layers * (2.0 * act * (model - 1) / model)
+    return Roofline(
+        arch=cfg.name,
+        shape=f"decode_b{batch}",
+        mesh=f"{data}x{model}",
+        chips=chips,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=weight_bytes,
+        collective_bytes_per_device=coll,
+        model_flops=2.0 * n_params * batch,
+        per_device_memory_bytes=weight_bytes,
+    )
+
+
 def format_table(rows: list[Roofline]) -> str:
     hdr = (
         f"{'arch':26s} {'shape':12s} {'mesh':9s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "

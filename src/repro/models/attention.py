@@ -25,6 +25,15 @@ from repro.sharding.rules import ShardingCtx, constrain
 NEG_INF = -1e30
 
 
+def _pallas_ok(sctx: ShardingCtx) -> bool:
+    """Pallas kernels are only taken on a single device: GSPMD cannot
+    partition a pallas_call, so sharded stepping (mesh with > 1 device)
+    routes through the partitionable XLA gather/sdpa paths instead. Running
+    the kernels per-shard needs an explicit shard_map wrapper with
+    device-local page tables — tracked as a real-TPU follow-up."""
+    return sctx.device_count() == 1
+
+
 # ==========================================================================
 # Schemas
 # ==========================================================================
@@ -313,7 +322,7 @@ def _chunk_attend(
             off = qpos % page
             ck = cache.k.at[pid, off].set(k[0].astype(cache.k.dtype))
             cv = cache.v.at[pid, off].set(v[0].astype(cache.v.dtype))
-            if cfg.attn_backend == "pallas":
+            if cfg.attn_backend == "pallas" and _pallas_ok(sctx):
                 from repro.kernels import ops as _kops
 
                 out = _kops.paged_chunk_attention_op(
@@ -414,6 +423,7 @@ def gqa_attention(
     new_cache: KVCache | None = None
     use_pallas = (
         cfg.attn_backend == "pallas"
+        and _pallas_ok(sctx)
         and mode != "decode"
         and mask_kind in ("causal", "bidir")
         and not (cfg.prefix_lm and cfg.prefix_len)
@@ -471,7 +481,7 @@ def gqa_attention(
         # table entries — a bounded page working set regardless of how
         # wide the table is for dense layers.
         n_lp = min(-(-window // page), max_pages) if window else max_pages
-        if cfg.attn_backend == "pallas":
+        if cfg.attn_backend == "pallas" and _pallas_ok(sctx):
             from repro.kernels import ops as _kops
 
             out = _kops.paged_decode_attention_op(

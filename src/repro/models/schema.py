@@ -143,6 +143,35 @@ def pspec_tree(schema: Any, ctx: ShardingCtx, extra_leading: tuple[str | None, .
     return _map_specs(schema, one)
 
 
+def sharding_tree(schema: Any, ctx: ShardingCtx) -> Any:
+    """Per-leaf NamedShardings resolved from the schema's logical axes.
+
+    Returns None without a mesh — callers branch on that instead of
+    carrying a tree of placeholder leaves. This is the single resolution
+    point the serving scheduler uses to place its batched decode state
+    (and the page-pool leaves) and to pin every step program's output
+    layout, so state never silently drifts off its profile-resolved
+    sharding between steps.
+    """
+    if ctx.mesh is None:
+        return None
+    return _map_specs(
+        schema,
+        lambda spec: NamedSharding(
+            ctx.mesh, pspec_for(spec.shape, spec.axes, ctx.profile, ctx.mesh)
+        ),
+    )
+
+
+def shard_tree(tree: Any, schema: Any, ctx: ShardingCtx) -> Any:
+    """device_put materialised leaves at their schema-resolved shardings
+    (identity without a mesh). ``tree`` must be congruent with ``schema``."""
+    shardings = sharding_tree(schema, ctx)
+    if shardings is None:
+        return tree
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
 def abstract_params(schema: Any, ctx: ShardingCtx, dtype: Any = None) -> Any:
     """ShapeDtypeStructs with shardings attached — the dry-run's 'weights'."""
 

@@ -152,8 +152,34 @@ def graft_states(
     )
 
 
+def _batch_axis(
+    d_shape: tuple[int, ...],
+    s_shape: tuple[int, ...],
+    layout: LeafLayout | None,
+    what: str,
+) -> int:
+    """The batch axis of a per-slot leaf: taken from explicit
+    :class:`LeafLayout` metadata when supplied (sharded serving relies on
+    this — a leaf whose non-batch dim is mesh-sharded can otherwise alias
+    the shape-diff heuristic), else located as the single differing axis."""
+    if layout is not None and layout.batch_axis >= 0:
+        ax = layout.batch_axis
+        if s_shape[ax] != 1 or any(
+            d_shape[i] != s_shape[i] for i in range(len(d_shape)) if i != ax
+        ):
+            raise ValueError(f"cannot {what} slot state {s_shape} -> {d_shape}")
+        return ax
+    diff = [i for i in range(len(d_shape)) if d_shape[i] != s_shape[i]]
+    if len(diff) != 1 or s_shape[diff[0]] != 1:
+        raise ValueError(f"cannot {what} slot state {s_shape} -> {d_shape}")
+    return diff[0]
+
+
 def insert_slot_leaf(
-    dst: jax.Array, src: jax.Array, slot: jax.Array | int
+    dst: jax.Array,
+    src: jax.Array,
+    slot: jax.Array | int,
+    layout: LeafLayout | None = None,
 ) -> jax.Array:
     """Insert one batch-1 serving-length leaf at batch index ``slot``."""
     d, s = jnp.asarray(dst), jnp.asarray(src)
@@ -161,50 +187,67 @@ def insert_slot_leaf(
         return s.astype(d.dtype)
     if d.ndim != s.ndim:
         raise ValueError(f"cannot insert slot state {s.shape} -> {d.shape}")
-    diff = [i for i in range(d.ndim) if d.shape[i] != s.shape[i]]
-    if len(diff) != 1 or s.shape[diff[0]] != 1:
-        raise ValueError(f"cannot insert slot state {s.shape} -> {d.shape}")
-    ax = diff[0]  # the batch axis
+    ax = _batch_axis(d.shape, s.shape, layout, "insert")
     start = [0] * d.ndim
     start[ax] = slot
     return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), tuple(start))
 
 
-def insert_slot(full_layers: Any, slot_layers: Any, slot: jax.Array | int) -> Any:
+def insert_slot(
+    full_layers: Any, slot_layers: Any, slot: jax.Array | int, layouts: Any = None
+) -> Any:
     """Insert a batch-1 serving-length state pytree at batch index ``slot``.
 
     ``slot`` may be a traced scalar: admission re-uses one compiled program
-    for every slot index.
+    for every slot index. ``layouts`` (optional, congruent LeafLayout tree)
+    makes the batch axis explicit per leaf.
     """
+    if layouts is None:
+        return jax.tree.map(
+            lambda d, s: insert_slot_leaf(d, s, slot), full_layers, slot_layers
+        )
     return jax.tree.map(
-        lambda d, s: insert_slot_leaf(d, s, slot), full_layers, slot_layers
+        lambda d, s, lay: insert_slot_leaf(d, s, slot, lay),
+        full_layers, slot_layers, layouts,
     )
 
 
 def extract_slot_leaf(
-    full: jax.Array, template: jax.Array, slot: jax.Array | int
+    full: jax.Array,
+    template: jax.Array,
+    slot: jax.Array | int,
+    layout: LeafLayout | None = None,
 ) -> jax.Array:
     """Slice one batch row out of a batched serving leaf — the inverse of
     :func:`insert_slot_leaf`. ``template`` is a batch-1 leaf of the target
-    shape; the batch axis is located per-leaf by shape, so scan-stacked
-    group states need no special casing."""
+    shape; the batch axis comes from ``layout`` when supplied, else is
+    located per-leaf by shape, so scan-stacked group states need no
+    special casing."""
     f, t = jnp.asarray(full), jnp.asarray(template)
     if f.shape == t.shape:  # n_slots == 1
         return f
     if f.ndim != t.ndim:
         raise ValueError(f"cannot extract slot state {f.shape} -> {t.shape}")
-    diff = [i for i in range(f.ndim) if f.shape[i] != t.shape[i]]
-    if len(diff) != 1 or t.shape[diff[0]] != 1:
-        raise ValueError(f"cannot extract slot state {f.shape} -> {t.shape}")
+    ax = _batch_axis(f.shape, t.shape, layout, "extract")
     start = [0] * f.ndim
-    start[diff[0]] = slot
+    start[ax] = slot
     return jax.lax.dynamic_slice(f, tuple(start), t.shape)
 
 
-def extract_slot(full_layers: Any, template_layers: Any, slot: jax.Array | int) -> Any:
+def extract_slot(
+    full_layers: Any,
+    template_layers: Any,
+    slot: jax.Array | int,
+    layouts: Any = None,
+) -> Any:
     """Extract a batch-1 state pytree at batch index ``slot`` (traced OK)."""
+    if layouts is None:
+        return jax.tree.map(
+            lambda f, t: extract_slot_leaf(f, t, slot), full_layers, template_layers
+        )
     return jax.tree.map(
-        lambda f, t: extract_slot_leaf(f, t, slot), full_layers, template_layers
+        lambda f, t, lay: extract_slot_leaf(f, t, slot, lay),
+        full_layers, template_layers, layouts,
     )
 
 

@@ -47,6 +47,10 @@ class ServeConfig:
     speculative: bool = False  # drafted multi-token steps (greedy slots)
     draft_k: int = 4  # max draft tokens per verify call
     drafter: Any = None  # Drafter instance; None -> NgramDrafter
+    # Sharded stepping: (data, model) test-mesh shape the scheduler builds
+    # when the engine's own ShardingCtx has no mesh (None keeps it as-is).
+    mesh_shape: tuple[int, int] | None = None
+    sharding_profile: str = "decode_default"
 
 
 @dataclass
@@ -96,6 +100,8 @@ class Engine:
                     speculative=self.serve.speculative,
                     draft_k=self.serve.draft_k,
                     drafter=self.serve.drafter,
+                    mesh_shape=self.serve.mesh_shape,
+                    sharding_profile=self.serve.sharding_profile,
                 ),
             )
         return self._schedulers[n_slots]

@@ -99,7 +99,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models import blocks as blk
 from repro.models import lm
@@ -123,11 +125,12 @@ from repro.serve.pages import (
 )
 from repro.serve.request import Request, RequestState, RequestStatus
 from repro.serve.step import (
+    decode_state_shardings,
     fresh_slot_layers,
     init_decode_state,
     init_paged_decode_state,
 )
-from repro.sharding.rules import ShardingCtx
+from repro.sharding.rules import ShardingCtx, get_profile
 
 _RECURRENT_KINDS = {"rglru", "mlstm", "slstm"}
 
@@ -190,6 +193,15 @@ class SchedulerConfig:
     speculative: bool = False
     draft_k: int = 4
     drafter: Drafter | None = None
+    # Sharded multi-device stepping: lay the batched decode state — and the
+    # page-pool backing arrays — out over a ("data", "model") mesh built at
+    # construction (per-leaf PartitionSpecs resolved from the profile's
+    # logical-axis rules, replicated fallback when sizes don't divide).
+    # None keeps whatever ShardingCtx the caller passed (usually null); a
+    # (data, model) tuple builds a test mesh when the passed ctx has no
+    # mesh. Page *tables* and refcounts stay host-side either way.
+    mesh_shape: tuple[int, int] | None = None
+    sharding_profile: str = "decode_default"
 
 
 class Scheduler:
@@ -198,6 +210,15 @@ class Scheduler:
     ):
         self.cfg = cfg
         self.params = params
+        if sched.mesh_shape is not None and sctx.mesh is None:
+            d, m = (int(x) for x in sched.mesh_shape)
+            if d * m > 1:
+                from repro.launch.mesh import make_test_mesh
+
+                sctx = ShardingCtx(
+                    make_test_mesh(data=d, model=m),
+                    get_profile(sched.sharding_profile),
+                )
         self.sctx = sctx
         self.sched = sched
         n = sched.n_slots
@@ -247,14 +268,30 @@ class Scheduler:
                 page_size=sched.page_size, n_pages=n_pages, span=span
             )
             self.pool: PagePool | None = PagePool(self.pages)
-            state = init_paged_decode_state(cfg, n, sched.cache_len, self.pages)
+            state = init_paged_decode_state(cfg, n, sched.cache_len, self.pages, sctx=sctx)
             self._pt = np.full((n, self.pages.max_pages), self.pages.trash, np.int32)
-            state["page_table"] = jnp.asarray(self._pt)
         else:
             self.pages = None
             self.pool = None
-            state = init_decode_state(cfg, n, sched.cache_len)
+            state = init_decode_state(cfg, n, sched.cache_len, sctx=sctx)
             state["pos"] = jnp.zeros((n,), jnp.int32)
+        # Sharded stepping: pin every layer leaf (including the pool
+        # leaves, whose kv_heads/head_dim shard over "model" — each device
+        # owns its slice of every page) to its profile-resolved
+        # NamedSharding, place the weights the same way, and route every
+        # host-produced array (page table, token column, masks) through
+        # fully-replicated device_put so program input/output layouts are
+        # identical across steps — one trace per bucket, never per mesh.
+        self._layer_shardings = decode_state_shardings(
+            cfg, n, sched.cache_len, sctx, pages=self.pages if self._paged else None
+        )
+        self._replicated = sctx.replicated()
+        if self._layer_shardings is not None:
+            from repro.models.schema import shard_tree
+
+            self.params = shard_tree(params, lm.model_schema(cfg), sctx)
+        if self._paged:
+            state["page_table"] = self._put(self._pt)
         self._states: dict[str, Any] = state
         self._tokens = np.zeros((n, 1), np.int32)  # next input token per slot
         self._temps = np.zeros((n,), np.float32)
@@ -333,6 +370,8 @@ class Scheduler:
             c = caps if caps is not None else jax.tree.map(lambda _: 0, template)
             return c, template
 
+        self._layouts = layouts
+
         def _freeze_inactive(active, new_layers, old_layers):
             # Inactive slots (free, or PREFILLING between chunks) must keep
             # their per-slot states verbatim across other slots' decode
@@ -363,8 +402,8 @@ class Scheduler:
             # Freeze inactive slots in place (position and per-slot states).
             new_pos = jnp.where(active, new_states["pos"], states["pos"])
             out = {
-                "layers": _freeze_inactive(
-                    active, new_states["layers"], states["layers"]
+                "layers": self._constrain_layers(
+                    _freeze_inactive(active, new_states["layers"], states["layers"])
                 ),
                 "pos": new_pos,
             }
@@ -393,10 +432,12 @@ class Scheduler:
                             full, src, page_ids, prompt_len, lay.cap, page_size
                         )
                     return insert_slot_leaf(
-                        full, _graft_leaf(tgt, src, prompt_len, lay), slot
+                        full, _graft_leaf(tgt, src, prompt_len, lay), slot, lay
                     )
 
-                new_layers = jax.tree.map(leaf, layouts, layers, target, prefill_layers)
+                new_layers = self._constrain_layers(
+                    jax.tree.map(leaf, layouts, layers, target, prefill_layers)
+                )
                 return new_layers, pos.at[slot].set(prompt_len)
 
         else:
@@ -407,7 +448,9 @@ class Scheduler:
                 slot_layers = graft_states(
                     target["layers"], prefill_layers, prompt_len, layouts=layouts
                 )
-                new_layers = insert_slot(layers, slot_layers, slot)
+                new_layers = self._constrain_layers(
+                    insert_slot(layers, slot_layers, slot, layouts=layouts)
+                )
                 return new_layers, pos.at[slot].set(prompt_len)
 
         # slot and prompt_len are traced, so admission compiles once per
@@ -419,8 +462,10 @@ class Scheduler:
                         all_logits=False):
             c, template = _slot_surgery_trees()
             slot_layers = jax.tree.map(
-                lambda cap, full, t: full if cap else extract_slot_leaf(full, t, slot),
-                c, layers, template,
+                lambda lay, cap, full, t: (
+                    full if cap else extract_slot_leaf(full, t, slot, lay)
+                ),
+                layouts, c, layers, template,
             )
             states: dict[str, Any] = {"layers": slot_layers, "pos": start}
             if page_ids is not None:
@@ -429,9 +474,13 @@ class Scheduler:
                 self.params, self.cfg, states, tokens, chunk_len, self.sctx,
                 all_logits=all_logits,
             )
-            new_layers = jax.tree.map(
-                lambda cap, full, s: s if cap else insert_slot_leaf(full, s, slot),
-                c, layers, new["layers"],
+            new_layers = self._constrain_layers(
+                jax.tree.map(
+                    lambda lay, cap, full, s: (
+                        s if cap else insert_slot_leaf(full, s, slot, lay)
+                    ),
+                    layouts, c, layers, new["layers"],
+                )
             )
             return logits, new_layers, pos.at[slot].set(start + chunk_len)
 
@@ -479,9 +528,13 @@ class Scheduler:
             # garbage decode writes would land inside a shared page.
             c, _ = _slot_surgery_trees()
             fresh = fresh_slot_layers(self.cfg, self.sched.cache_len)
-            new_layers = jax.tree.map(
-                lambda cap, full, t: full if cap else insert_slot_leaf(full, t, slot),
-                c, layers, fresh,
+            new_layers = self._constrain_layers(
+                jax.tree.map(
+                    lambda lay, cap, full, t: (
+                        full if cap else insert_slot_leaf(full, t, slot, lay)
+                    ),
+                    layouts, c, layers, fresh,
+                )
             )
             return new_layers, pos.at[slot].set(pos_val)
 
@@ -489,21 +542,43 @@ class Scheduler:
 
         if self._paged:
 
+            def _copy_pages(full, src_ids, dst_ids):
+                if full.ndim == 5:  # stacked groups: leading layer axis
+                    return full.at[:, dst_ids].set(full[:, src_ids])
+                return full.at[dst_ids].set(full[src_ids])
+
             def _cow_fn(layers, src_ids, dst_ids):
                 # Fork shared pages: copy page contents src -> dst in every
                 # pool leaf (one program per fork count; essentially never
                 # runs — the scheduler's write pattern stays past adopted
-                # spans — but keeps CoW safety local to the pool).
+                # spans — but keeps CoW safety local to the pool). Sharded,
+                # the copy runs under shard_map per pool leaf: the page axis
+                # is never mesh-sharded, so every device owns its
+                # kv_heads/head_dim slice of both pages and forks them
+                # locally — no cross-device traffic, the device-local-pool
+                # property made executable.
                 self.cow_traces += 1
+                if self._layer_shardings is None:
+                    return jax.tree.map(
+                        lambda cap, full: (
+                            _copy_pages(full, src_ids, dst_ids) if cap else full
+                        ),
+                        caps, layers,
+                    )
 
-                def leaf(cap, full):
+                def leaf(cap, full, sh):
                     if not cap:
                         return full
-                    if full.ndim == 5:  # stacked groups: leading layer axis
-                        return full.at[:, dst_ids].set(full[:, src_ids])
-                    return full.at[dst_ids].set(full[src_ids])
+                    spec = sh.spec
+                    return shard_map(
+                        _copy_pages,
+                        mesh=self.sctx.mesh,
+                        in_specs=(spec, P(), P()),
+                        out_specs=spec,
+                        check=False,
+                    )(full, src_ids, dst_ids)
 
-                return jax.tree.map(leaf, caps, layers)
+                return jax.tree.map(leaf, caps, layers, self._layer_shardings)
 
             self._cow_jit = jax.jit(_cow_fn)
 
@@ -513,24 +588,26 @@ class Scheduler:
                 self.swap_traces += 1
                 c, template = _slot_surgery_trees()
                 return jax.tree.map(
-                    lambda cap, full, t: (
+                    lambda lay, cap, full, t: (
                         gather_pages_leaf(full, page_ids)
                         if cap
-                        else extract_slot_leaf(full, t, slot)
+                        else extract_slot_leaf(full, t, slot, lay)
                     ),
-                    c, layers, template,
+                    layouts, c, layers, template,
                 )
 
             def _swap_in_fn(layers, pos, snap, page_ids, slot, pos_val):
                 self.swap_traces += 1
                 c, _ = _slot_surgery_trees()
-                new_layers = jax.tree.map(
-                    lambda cap, full, s: (
-                        scatter_pages_leaf(full, s, page_ids)
-                        if cap
-                        else insert_slot_leaf(full, s, slot)
-                    ),
-                    c, layers, snap,
+                new_layers = self._constrain_layers(
+                    jax.tree.map(
+                        lambda lay, cap, full, s: (
+                            scatter_pages_leaf(full, s, page_ids)
+                            if cap
+                            else insert_slot_leaf(full, s, slot, lay)
+                        ),
+                        layouts, c, layers, snap,
+                    )
                 )
                 return new_layers, pos.at[slot].set(pos_val)
 
@@ -545,6 +622,24 @@ class Scheduler:
             return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
 
         self._sample = jax.jit(_sample_fn)
+
+    # -- sharded-stepping helpers -------------------------------------------
+    def _put(self, x):
+        """Host array -> device; fully replicated over the mesh when sharded
+        so every jit program sees one stable input layout per bucket."""
+        if self._replicated is None:
+            return jnp.asarray(x)
+        return jax.device_put(np.asarray(x), self._replicated)
+
+    def _constrain_layers(self, layers):
+        """Pin a step program's output layer tree to the profile-resolved
+        NamedShardings (identity without a mesh) — state placement can
+        never drift between steps, whatever XLA would have inferred."""
+        if self._layer_shardings is None:
+            return layers
+        return jax.tree.map(
+            jax.lax.with_sharding_constraint, layers, self._layer_shardings
+        )
 
     # -- client API ---------------------------------------------------------
     def submit(self, request: Request) -> int:
@@ -649,14 +744,14 @@ class Scheduler:
                     if rs.status is RequestStatus.ACTIVE and slot not in handled:
                         p = int(self._pos_host[slot])
                         self._apply_cow(slot, self.pool.prepare_write(slot, p, p + 1))
-            self._states["page_table"] = jnp.asarray(self._pt)
+            self._states["page_table"] = self._put(self._pt)
 
         self._key, sub = jax.random.split(self._key)
         logits, self._states = self._decode(
             self.params,
             self._states,
-            jnp.asarray(self._tokens),
-            jnp.asarray(mask),
+            self._put(self._tokens),
+            self._put(mask),
         )
         self.last_decode_logits = logits
         cols = np.asarray(self._sample(logits[:, -1, :], jnp.asarray(self._temps), sub))
@@ -729,13 +824,13 @@ class Scheduler:
             # width (one compile per (chunk, page) bucket pair — early
             # chunks of a long prompt stay cheap).
             n_lp = min(_pow2_ceil(max(need, 1)), self.pages.max_pages)
-            page_ids = jnp.asarray(self._pt[slot, :n_lp])
+            page_ids = self._put(self._pt[slot, :n_lp])
 
         toks = src[start : start + n_real].astype(np.int32)
         if n_real < bucket:
             toks = np.concatenate([toks, np.zeros(bucket - n_real, np.int32)])
         args = [
-            self._states["layers"], self._states["pos"], jnp.asarray(toks)[None, :],
+            self._states["layers"], self._states["pos"], self._put(toks[None, :]),
             jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32),
             jnp.asarray(n_real, jnp.int32),
         ]
@@ -863,7 +958,7 @@ class Scheduler:
                     slot, self.pool.prepare_write(slot, start, start + n_real)
                 )
             n_lp = min(_pow2_ceil(max(need, 1)), self.pages.max_pages)
-            page_ids = jnp.asarray(self._pt[slot, :n_lp])
+            page_ids = self._put(self._pt[slot, :n_lp])
 
         # Pre-verify snapshot for rollback-by-replay (recurrent carries,
         # windowed ring folds). Taken *after* CoW so forked pages are in
@@ -874,7 +969,7 @@ class Scheduler:
         toks = np.zeros(bucket, np.int32)
         toks[0] = self._tokens[slot, 0]
         toks[1:n_real] = draft
-        toks_dev = jnp.asarray(toks)[None, :]
+        toks_dev = self._put(toks[None, :])
         slot_t = jnp.asarray(slot, jnp.int32)
         start_t = jnp.asarray(start, jnp.int32)
         args = [
@@ -912,7 +1007,7 @@ class Scheduler:
                 if removed:
                     self._pt[slot, keep : keep + len(removed)] = self.pages.trash
                     n_lp = min(_pow2_ceil(max(keep, 1)), self.pages.max_pages)
-                    page_ids = jnp.asarray(self._pt[slot, :n_lp])
+                    page_ids = self._put(self._pt[slot, :n_lp])
             if self._needs_replay:
                 # State advanced through rejected tokens (recurrence) or
                 # rejected writes folded onto live ring entries: re-run the
@@ -1066,7 +1161,7 @@ class Scheduler:
         elif self.sched.preemption == "swap":
             snap = self._swap_out_jit(
                 self._states["layers"],
-                jnp.asarray(self._pt[slot]),
+                self._put(self._pt[slot]),
                 jnp.asarray(slot, jnp.int32),
             )
             rs.swap = (jax.tree.map(np.asarray, snap), int(self._pos_host[slot]))
@@ -1332,8 +1427,8 @@ class Scheduler:
                 self._pt[slot, :need] = self.pool.grow_to(slot, need)
             layers, pos = self._swap_in_jit(
                 self._states["layers"], self._states["pos"],
-                jax.tree.map(jnp.asarray, snap),
-                jnp.asarray(self._pt[slot]), jnp.asarray(slot, jnp.int32),
+                jax.tree.map(self._put, snap),
+                self._put(self._pt[slot]), jnp.asarray(slot, jnp.int32),
                 jnp.asarray(pos_v, jnp.int32),
             )
             self._states["layers"] = layers
@@ -1374,14 +1469,14 @@ class Scheduler:
             n_admit = self.pages.pages_for_len(prompt_len)
             self._pt[slot, :] = self.pages.trash
             self._pt[slot, :n_admit] = self.pool.grow_to(slot, n_admit)
-            page_ids_arr = jnp.asarray(self._pt[slot])
+            page_ids_arr = self._put(self._pt[slot])
 
         tok_len = req.prompt.shape[0]
         pad_to = self._bucket_len(tok_len)
         toks = np.asarray(req.prompt)
         if pad_to != tok_len:
             toks = np.concatenate([toks, np.zeros(pad_to - tok_len, np.int32)])
-        batch = {"tokens": jnp.asarray(toks)[None, :]}
+        batch = {"tokens": self._put(toks[None, :])}
         for k, v in req.extras.items():
             batch[k] = jnp.asarray(v)
         if self._bucketed:
@@ -1498,6 +1593,10 @@ class Scheduler:
             "prefix_hits": self.prefix_hits,
             "prefix_hit_tokens": self.prefix_hit_tokens,
         }
+        out["mesh"] = (
+            None if self.sctx.mesh is None else dict(self.sctx.mesh.shape)
+        )
+        out["mesh_devices"] = self.sctx.device_count()
         if self._paged:
             out["pages"] = self.pool.stats()
         return out
@@ -1507,25 +1606,48 @@ class Scheduler:
         """Actual (peak pages in use) vs contiguous-equivalent cache bytes
         for the paged KV leaves. Zeros when the model has no paged layer."""
         if not self._paged:
-            return {"bytes_per_page": 0, "peak_bytes": 0, "contiguous_bytes": 0}
+            return {
+                "bytes_per_page": 0,
+                "peak_bytes": 0,
+                "contiguous_bytes": 0,
+                "bytes_per_page_per_device": 0,
+            }
         # Bytes of one page summed across every paged leaf (a physical page
         # id addresses page-sized storage in every paged layer at once).
+        # Sharded, each leaf's per-device share divides by the product of
+        # mesh axes its resolved PartitionSpec actually uses (replicated
+        # leaves divide by 1) — the number the device-local pool holds.
         per_page = 0
+        per_page_dev = 0
         caps = blk.stack_paged_caps(self.cfg, self.sched.cache_len)
-        for cap, leafarr in zip(
-            jax.tree.leaves(caps), jax.tree.leaves(self._states["layers"])
-        ):
+        cap_leaves = jax.tree.leaves(caps)
+        arr_leaves = jax.tree.leaves(self._states["layers"])
+        sh_leaves = (
+            jax.tree.leaves(self._layer_shardings, is_leaf=lambda x: x is None)
+            if self._layer_shardings is not None
+            else [None] * len(arr_leaves)
+        )
+        mesh_axes = dict(self.sctx.mesh.shape) if self.sctx.mesh else {}
+        for cap, leafarr, sh in zip(cap_leaves, arr_leaves, sh_leaves):
             if not cap:
                 continue
             shape = leafarr.shape
             lead = len(shape) - 4  # stacked layer axis
             n_layers = shape[0] if lead else 1
             page_elems = int(np.prod(shape[lead + 1:]))  # page * kv * hd
-            per_page += n_layers * page_elems * jnp.dtype(leafarr.dtype).itemsize
+            leaf_bytes = n_layers * page_elems * jnp.dtype(leafarr.dtype).itemsize
+            per_page += leaf_bytes
+            div = 1
+            if sh is not None:
+                for ax in sh.spec:
+                    for a in ax if isinstance(ax, tuple) else ((ax,) if ax else ()):
+                        div *= mesh_axes.get(a, 1)
+            per_page_dev += leaf_bytes // div
         peak = self.pool.peak_in_use * per_page
         contiguous = self.sched.n_slots * self.pages.max_pages * per_page
         return {
             "bytes_per_page": int(per_page),
             "peak_bytes": int(peak),
             "contiguous_bytes": int(contiguous),
+            "bytes_per_page_per_device": int(per_page_dev),
         }

@@ -15,7 +15,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import lm
-from repro.models.schema import ParamSpec, abstract_params, init_params, is_spec
+from repro.models.schema import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    is_spec,
+    shard_tree,
+    sharding_tree,
+)
 from repro.sharding.rules import ShardingCtx, pspec_for
 
 
@@ -33,24 +40,53 @@ def decode_state_specs(
 
 
 def init_decode_state(
-    cfg: ModelConfig, batch: int, s_max: int, start_pos: int = 0
+    cfg: ModelConfig,
+    batch: int,
+    s_max: int,
+    start_pos: int = 0,
+    sctx: ShardingCtx | None = None,
 ) -> dict[str, Any]:
-    """Real zeroed decode state (smoke tests / serving engine)."""
+    """Real zeroed decode state (smoke tests / serving engine). With a
+    meshed ``sctx`` every layer leaf is placed at its profile-resolved
+    NamedSharding (heads/kv over model, replicated fallback)."""
     schema = lm.decode_state_schema(cfg, batch, s_max)
     state = init_params(schema, jax.random.PRNGKey(0))
+    if sctx is not None and sctx.mesh is not None:
+        state["layers"] = shard_tree(state["layers"], schema["layers"], sctx)
     state["pos"] = jnp.asarray(start_pos, jnp.int32)
     return state
 
 
 def init_paged_decode_state(
-    cfg: ModelConfig, batch: int, s_max: int, pages
+    cfg: ModelConfig,
+    batch: int,
+    s_max: int,
+    pages,
+    sctx: ShardingCtx | None = None,
 ) -> dict[str, Any]:
     """Decode state whose dense/windowed KV leaves are shared page pools
-    (``pages``: a serve.pages.PageLayout); other state kinds stay per-slot."""
+    (``pages``: a serve.pages.PageLayout); other state kinds stay per-slot.
+    With a meshed ``sctx`` the pool leaves shard on kv_heads/head_dim over
+    ``model`` (page axes replicated): every device owns its slice of every
+    page, so page-table indirection stays a device-local gather."""
     schema = lm.decode_state_schema(cfg, batch, s_max, pages=pages)
     state = init_params(schema, jax.random.PRNGKey(0))
+    if sctx is not None and sctx.mesh is not None:
+        state["layers"] = shard_tree(state["layers"], schema["layers"], sctx)
     state["pos"] = jnp.zeros((batch,), jnp.int32)
     return state
+
+
+def decode_state_shardings(
+    cfg: ModelConfig, batch: int, s_max: int, sctx: ShardingCtx, pages=None
+) -> Any:
+    """NamedShardings for the batched decode state's ``layers`` subtree
+    (None without a mesh) — the scheduler pins every step program's output
+    layout to these so state placement never drifts between steps."""
+    if sctx.mesh is None:
+        return None
+    schema = lm.decode_state_schema(cfg, batch, s_max, pages=pages)
+    return sharding_tree(schema["layers"], sctx)
 
 
 def fresh_slot_layers(cfg: ModelConfig, s_max: int) -> Any:

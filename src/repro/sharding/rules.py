@@ -349,6 +349,30 @@ class ShardingCtx:
             return P()
         return pspec_for(shape, logical_axes, self.profile, self.mesh)
 
+    def named(
+        self, shape: Sequence[int], logical_axes: Sequence[str | None]
+    ) -> NamedSharding | None:
+        """Resolved NamedSharding for one leaf (None without a mesh)."""
+        if self.mesh is None:
+            return None
+        return named_sharding(shape, logical_axes, self.profile, self.mesh)
+
+    def replicated(self) -> NamedSharding | None:
+        """Fully-replicated placement for host-produced scalars/tables
+        (page tables, token columns, masks) so every device sees the same
+        values without per-call resharding. None without a mesh."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P())
+
+    def device_count(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for s in self.mesh.shape.values():
+            n *= int(s)
+        return n
+
     def local_size(self, n: int, logical: str) -> int:
         """Per-shard extent of a dim of size ``n`` carrying ``logical`` axes
         (with the same divisibility fallbacks as pspec_for)."""

@@ -1,0 +1,364 @@
+"""Sharded multi-device serving: tensor-parallel stepping over a
+("data", "model") mesh must be a pure layout change.
+
+Greedy token identity sharded vs unsharded across the model zoo's state
+families, layout-aware hot-path features (CoW forks, preemption swap and
+recompute round-trips, speculative rollback) with pool conservation under
+a 2-device mesh, bounded compile counts independent of mesh size, the
+analytic decode roofline predictor, and the policy-file regression gate.
+
+Multi-device cases gate on ``mesh.devices_required(2)`` and *skip* on
+1-device CI; the sharded-smoke CI lane forces 8 host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) so they run for
+real there. Everything mesh-independent (predictor math, policy loading,
+mesh error messages) runs everywhere.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.launch import mesh as mesh_mod
+from repro.models import lm
+from repro.models.schema import count_params, init_params
+from repro.serve.request import Request
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.sharding.rules import ShardingCtx
+
+needs_2dev = pytest.mark.skipif(
+    not mesh_mod.devices_required(2),
+    reason="needs >=2 XLA devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+ARCHS = [
+    "llama3.2-3b",  # dense GQA, paged
+    "recurrentgemma-2b",  # windowed ring KV + RG-LRU hybrid
+    "deepseek-v2-236b",  # MLA compressed cache (per-slot path)
+    "xlstm-1.3b",  # pure recurrent (mLSTM + sLSTM), zero pages
+    "llama4-scout-17b-a16e",  # MoE, scan-stacked groups
+]
+
+
+def _params_for(name):
+    cfg = get_config(name).reduced()
+    return cfg, init_params(lm.model_schema(cfg), jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=p).astype(np.int32) for p in lengths]
+
+
+def _run(cfg, params, prompts, max_new=6, **sched_kw):
+    sched = Scheduler(
+        cfg, params, ShardingCtx.null(), SchedulerConfig(**sched_kw)
+    )
+    for p in prompts:
+        sched.submit(Request(prompt=p, max_new_tokens=max_new))
+    outs = [rs.tokens for rs in sched.run()]
+    return outs, sched
+
+
+# ==========================================================================
+# Token identity: sharded vs single-device, across state families
+# ==========================================================================
+class TestShardedTokenIdentity:
+    @needs_2dev
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_sharded_greedy_matches_unsharded(self, arch):
+        """The same workload on mesh (1, 2) must emit the same greedy
+        tokens as the 1-device step, with identical trace counts: sharding
+        changes array layouts, never the math or the compile cadence."""
+        cfg, params = _params_for(arch)
+        prompts = _prompts(cfg, (8, 21, 13))
+        base, s0 = _run(
+            cfg, params, prompts, cache_len=64, chunk_budget=16, page_size=8
+        )
+        shd, s1 = _run(
+            cfg, params, prompts,
+            cache_len=64, chunk_budget=16, page_size=8, mesh_shape=(1, 2),
+        )
+        assert base == shd
+        assert s1.stats()["mesh"] == {"data": 1, "model": 2}
+        assert s1.stats()["mesh_devices"] == 2
+        assert (s0.decode_traces, s0.chunk_traces, s0.admit_traces) == (
+            s1.decode_traces, s1.chunk_traces, s1.admit_traces,
+        )
+
+    @needs_2dev
+    def test_sharded_state_actually_sharded(self):
+        """The resolved layer shardings place at least one leaf over the
+        model axis — the mesh isn't silently all-replicated."""
+        cfg, params = _params_for("llama3.2-3b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(n_slots=2, cache_len=64, mesh_shape=(1, 2)),
+        )
+        assert sched._layer_shardings is not None
+        specs = jax.tree.leaves(
+            jax.tree.map(lambda s: str(s.spec), sched._layer_shardings)
+        )
+        assert any("model" in s for s in specs), specs
+        b = sched.paged_cache_bytes()
+        assert 0 < b["bytes_per_page_per_device"] < b["bytes_per_page"]
+
+
+# ==========================================================================
+# Layout-aware hot-path features under a 2-device mesh
+# ==========================================================================
+class TestShardedHotPaths:
+    @needs_2dev
+    @pytest.mark.parametrize("policy", ["swap", "recompute"])
+    def test_preemption_roundtrip_identity_and_conservation(self, policy):
+        """A pool sized to force preemption: preempted-then-resumed requests
+        stay token-identical to the uncontended single-device run, and every
+        page returns to the pool on drain."""
+        cfg, params = _params_for("llama3.2-3b")
+        prompts = _prompts(cfg, (16, 18, 17, 20))
+        base, _ = _run(
+            cfg, params, prompts, max_new=10,
+            n_slots=3, cache_len=64, chunk_budget=16, page_size=4,
+        )
+        shd, sched = _run(
+            cfg, params, prompts, max_new=10,
+            n_slots=3, cache_len=64, chunk_budget=16, page_size=4,
+            n_pages=14, preemption=policy, mesh_shape=(1, 2),
+        )
+        assert base == shd
+        assert sched.preemptions_total > 0, "pool never ran dry; tighten it"
+        assert sched.pool.in_use == 0
+        assert sched.pool.available() == sched.pages.n_pages
+
+    @needs_2dev
+    def test_cow_fork_shard_map_under_mesh(self):
+        """Prefix sharing + a second writer: the shard_map CoW program forks
+        shared pages device-locally and the fork is observable (cow_traces)
+        without breaking greedy identity."""
+        cfg, params = _params_for("llama3.2-3b")
+        rng = np.random.default_rng(3)
+        shared = rng.integers(0, cfg.vocab_size, size=17).astype(np.int32)
+        prompts = [
+            np.concatenate([shared, rng.integers(0, cfg.vocab_size, size=t).astype(np.int32)])
+            for t in (5, 9)
+        ]
+        kw = dict(
+            n_slots=2, cache_len=64, chunk_budget=16, page_size=8,
+            prefix_sharing=True,
+        )
+        base, s0 = _run(cfg, params, prompts, **kw)
+        shd, s1 = _run(cfg, params, prompts, mesh_shape=(1, 2), **kw)
+        assert base == shd
+        assert s1.prefix_hits == s0.prefix_hits
+        # Force a fork through the CoW program directly so the shard_map
+        # copy itself is exercised even when the scheduler's write pattern
+        # keeps steady-state CoW a no-op: real KV data lands in page 0
+        # during the run, then page 0 is forked into page 1.
+        from repro.models import blocks
+
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(mesh_shape=(1, 2), **kw),
+        )
+        sched.submit(Request(prompt=prompts[0], max_new_tokens=2))
+        sched.run()
+        layers = sched._states["layers"]
+        src = jax.numpy.asarray([0], jax.numpy.int32)
+        dst = jax.numpy.asarray([1], jax.numpy.int32)
+        forked = sched._cow_jit(layers, src, dst)
+        assert sched.cow_traces >= 1
+        caps = blocks.stack_paged_caps(cfg, kw["cache_len"])
+        for cap, old, new in zip(
+            jax.tree.leaves(caps),
+            jax.tree.leaves(layers),
+            jax.tree.leaves(forked),
+        ):
+            if not cap:
+                continue
+            old_np, new_np = np.asarray(old), np.asarray(new)
+            if old_np.ndim == 5:
+                np.testing.assert_array_equal(new_np[:, 1], old_np[:, 0])
+            else:
+                np.testing.assert_array_equal(new_np[1], old_np[0])
+
+    @needs_2dev
+    def test_speculative_rollback_identity_under_mesh(self):
+        """Oracle-quality and garbage drafts: verify, partial-accept
+        rollback (pos fixup for dense) and page truncation all run sharded
+        and stay token-identical."""
+        cfg, params = _params_for("llama3.2-3b")
+        p = np.array([5, 6, 7, 8, 5, 6, 7, 8, 5, 6], np.int32)
+        kw = dict(
+            n_slots=2, cache_len=64, chunk_budget=16, page_size=8,
+            speculative=True, draft_k=4,
+        )
+        base, s0 = _run(cfg, params, [p, p[1:]], max_new=8, **kw)
+        shd, s1 = _run(cfg, params, [p, p[1:]], max_new=8, mesh_shape=(1, 2), **kw)
+        assert base == shd
+        assert s1.total_spec_steps == s0.total_spec_steps
+        assert s1.verify_traces == s0.verify_traces
+        assert s1.accepted_tokens_total == s0.accepted_tokens_total
+
+    @needs_2dev
+    def test_recurrent_replay_rollback_under_mesh(self):
+        """Archs whose state advances through rejected tokens roll back by
+        snapshot replay — sharded, that replay must also stay identical."""
+        cfg, params = _params_for("recurrentgemma-2b")
+        p = np.array([3, 9, 4, 3, 9, 4, 3, 9], np.int32)
+        kw = dict(
+            n_slots=2, cache_len=64, chunk_budget=16, page_size=8,
+            speculative=True, draft_k=3,
+        )
+        base, s0 = _run(cfg, params, [p], max_new=7, **kw)
+        shd, s1 = _run(cfg, params, [p], max_new=7, mesh_shape=(1, 2), **kw)
+        assert base == shd
+        assert s1.total_spec_replays == s0.total_spec_replays
+
+
+# ==========================================================================
+# Mesh plumbing and failure modes (run everywhere)
+# ==========================================================================
+class TestMeshPlumbing:
+    def test_make_test_mesh_fails_loudly_naming_the_flag(self):
+        n = len(jax.devices()) + 1
+        with pytest.raises(RuntimeError) as e:
+            mesh_mod.make_test_mesh(data=1, model=n)
+        msg = str(e.value)
+        assert "--xla_force_host_platform_device_count" in msg
+        assert "devices_required" in msg
+
+    def test_devices_required(self):
+        assert mesh_mod.devices_required(1)
+        assert not mesh_mod.devices_required(len(jax.devices()) + 1)
+
+    def test_scheduler_mesh_shape_1x1_is_noop(self):
+        cfg, params = _params_for("llama3.2-3b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(n_slots=2, cache_len=64, mesh_shape=(1, 1)),
+        )
+        assert sched.sctx.mesh is None
+        assert sched._layer_shardings is None
+        assert sched.stats()["mesh"] is None
+        assert sched.stats()["mesh_devices"] == 1
+
+    def test_serve_sweep_mesh_shape_knob_normalizes(self):
+        from repro.experiments.serve import _mesh_shape_opt
+
+        assert _mesh_shape_opt(None) is None
+        assert _mesh_shape_opt("1x2") == (1, 2)
+        assert _mesh_shape_opt("2X4") == (2, 4)
+        assert _mesh_shape_opt((1, 2)) == (1, 2)
+        assert _mesh_shape_opt([2, 2]) == (2, 2)
+
+
+# ==========================================================================
+# Analytic decode roofline predictor
+# ==========================================================================
+class TestDecodeRoofline:
+    def test_predictor_terms(self):
+        from repro.launch.roofline import HBM_BW, ICI_BW, predict_decode_step
+
+        cfg = get_config("llama3.2-3b").reduced()
+        n = count_params(lm.model_schema(cfg))
+        one = predict_decode_step(cfg, n, batch=4, mesh_shape=(1, 1))
+        tp = predict_decode_step(cfg, n, batch=4, mesh_shape=(1, 2))
+        # Single device: no collective term, memory = full weights.
+        assert one.t_collective == 0.0
+        assert one.hlo_bytes_per_device == n * 2
+        assert one.step_time_lower_bound > 0
+        # TP=2 halves per-device weight traffic and adds an all-reduce term.
+        assert tp.hlo_bytes_per_device == n  # n * 2 bytes / 2 devices
+        assert tp.t_collective > 0
+        exp_coll = 2 * cfg.n_layers * (2 * 4 * cfg.d_model * 2 * 0.5)
+        assert tp.collective_bytes_per_device == pytest.approx(exp_coll)
+        assert tp.t_memory == pytest.approx((n / HBM_BW))
+        assert tp.t_collective == pytest.approx(exp_coll / ICI_BW)
+        assert tp.chips == 2
+
+    def test_serve_sweep_emits_prediction(self, tmp_path):
+        import repro.core as memento
+        from repro.experiments import serve_matrix, serve_sweep
+
+        matrix = serve_matrix(
+            ["llama3.2-3b"], backends=["xla"], scheduler={"n_slots": [2]},
+            cache_len=64, n_requests=2, prompt_lens=(4, 6),
+            max_new_tokens=3, warmup=False,
+        )
+        eng = memento.Memento(
+            serve_sweep, memento.RecordingProvider(), workdir=tmp_path,
+            namespace="sharded-pred",
+            runner_config=memento.RunnerConfig(
+                max_workers=1, retries=0, enable_speculation=False
+            ),
+        )
+        (r,) = eng.run(matrix)
+        assert r.status == "ok"
+        v = r.value
+        assert v["predicted_step_ms"] > 0
+        assert v["mesh"] == "1x1"
+        assert v["mesh_devices"] == 1
+        assert v["predicted_bottleneck"] in ("compute", "memory", "collective")
+
+    def test_roofline_ratio_metric(self):
+        from repro.analysis.metrics import MetricSpec
+
+        from repro.experiments.serve import SERVE_METRIC_SPECS
+
+        spec = {s.name: s for s in SERVE_METRIC_SPECS}["roofline_ratio"]
+        assert spec.from_row(
+            {"itl_p50_s": 0.002, "predicted_step_ms": 1.0}
+        ) == pytest.approx(2.0)
+        assert spec.from_row({"itl_p50_s": 0.002, "predicted_step_ms": 0}) is None
+        assert spec.from_row({"predicted_step_ms": 1.0}) is None
+
+
+# ==========================================================================
+# Policy-file regression gate
+# ==========================================================================
+class TestPolicyFile:
+    def test_load_policies_roundtrip(self, tmp_path):
+        from repro.analysis.trajectory import RegressionPolicy, load_policies
+
+        p = tmp_path / "policy.json"
+        p.write_text(json.dumps({
+            "policies": [
+                {"metric": "tok_s", "max_drop": 0.25, "label": "tok/s"},
+                {"metric": "itl_p50_ms", "max_drop": 0.5,
+                 "higher_is_better": False},
+            ]
+        }))
+        pols = load_policies(p)
+        assert pols == (
+            RegressionPolicy(metric="tok_s", max_drop=0.25, label="tok/s"),
+            RegressionPolicy(
+                metric="itl_p50_ms", max_drop=0.5, higher_is_better=False
+            ),
+        )
+
+    def test_load_policies_missing_file_falls_back(self, tmp_path):
+        from repro.analysis.trajectory import DEFAULT_POLICIES, load_policies
+
+        assert load_policies(tmp_path / "nope.json") == DEFAULT_POLICIES
+
+    def test_load_policies_malformed_raises(self, tmp_path):
+        from repro.analysis.trajectory import load_policies
+
+        p = tmp_path / "policy.json"
+        p.write_text(json.dumps({"policies": [{"metrik": "tok_s"}]}))
+        with pytest.raises(ValueError, match="unknown policy fields"):
+            load_policies(p)
+
+    def test_checked_in_policy_file_loads(self):
+        import os
+
+        from repro.analysis.trajectory import load_policies
+
+        path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "benchmarks", "policy.json",
+        )
+        pols = load_policies(path)
+        assert any(p.metric == "tok_s" for p in pols)
