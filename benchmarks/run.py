@@ -30,6 +30,9 @@ caching/streaming/retries end-to-end, not hand-rolled loops):
       on the mixed-length Poisson workload — decode tokens per model step
       and inter-token latency, ``speculative`` as an axis, token identity
       asserted against the non-speculative row
+  B16 layered serving core: 1x1 vs (data)x1 step times with slot ranges
+      and pool slices partitioned across the data axis, plus the pure-host
+      plan layer's us/step (``plan_us_per_step``, gated by policy.json)
 
 Prints ``name,us_per_call,derived`` CSV rows, and **persists** every run
 as a versioned record ``benchmarks/records/BENCH_<n>.json`` (rows + git
@@ -75,7 +78,8 @@ _FAILED: list[str] = []
 _RECORDS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "records")
 
 
-def _row(name: str, us: float, derived: str = "", ok: bool = True) -> None:
+def _row(name: str, us: float, derived: str = "", ok: bool = True,
+         metrics: dict | None = None) -> None:
     print(f"{name},{us:.1f},{derived}")
     rec: dict = {
         "name": name,
@@ -86,10 +90,13 @@ def _row(name: str, us: float, derived: str = "", ok: bool = True) -> None:
     }
     # Examiner-style metric extraction: the throughput figure embedded in
     # the derived text becomes a first-class record field the perf diff
-    # can compare across runs.
+    # can compare across runs; ``metrics`` adds fields with no textual form
+    # (anything named in benchmarks/policy.json must land here).
     m = re.search(r"([0-9][0-9.]*) tok/s", derived)
     if m:
         rec["tok_s"] = float(m.group(1))
+    if metrics:
+        rec.update({k: v for k, v in metrics.items() if v is not None})
     _RECORDS.append(rec)
     if not ok:
         _FAILED.append(name)
@@ -700,6 +707,76 @@ def bench_serve_sharded(smoke: bool = False) -> None:
         )
 
 
+def bench_serve_layered(smoke: bool = False) -> None:
+    """B16: layered serving core — data-parallel slots + planner overhead.
+
+    One Memento matrix with ``mesh_shape`` as the axis replays the same
+    greedy workload on one device and on a (data, 1) mesh, where each data
+    shard owns a contiguous slot range and its own page-pool slice (the
+    layered core's data-axis partitioning; ``data > 1`` used to merely
+    replicate pool state). Greedy token identity across the two rows is
+    asserted — partitioning is a layout change, not a scheduling change —
+    and each row reports the pure-host plan layer's cost per scheduler
+    step next to the step time. ``plan_us_per_step`` is persisted as a
+    record field gated by benchmarks/policy.json: the planner must stay
+    microseconds against millisecond device steps, and a doubling is a
+    regression even when tok/s holds.
+    """
+    from repro.core import Memento, RunnerConfig
+    from repro.experiments import serve_matrix, serve_sweep
+    from repro.launch.mesh import devices_required
+
+    data = 2
+    if not devices_required(data):
+        _row(
+            "B16_serve_layered", 0.0,
+            f"skipped: needs {data} XLA devices, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data} "
+            "before running (CI sharded-smoke lane does)",
+        )
+        return
+    if smoke:
+        cache_len, page, budget, max_new = 96, 8, 16, 8
+        prompts = (6, 20, 9, 14)
+    else:
+        cache_len, page, budget, max_new = 512, 16, 64, 16
+        prompts = (16, 48, 24, 96, 32, 8)
+    meshes = ["1x1", f"{data}x1"]
+    matrix = serve_matrix(
+        ["llama3.2-3b"], backends=["xla"],
+        scheduler={"mesh_shape": meshes},
+        cache_len=cache_len, n_slots=4, page_size=page, chunk_budget=budget,
+        n_requests=len(prompts), prompt_lens=prompts,
+        max_new_tokens=max_new, warmup=True,
+    )
+    eng = Memento(
+        serve_sweep, namespace="serve",
+        runner_config=RunnerConfig(max_workers=1, enable_speculation=False, retries=0),
+    )
+    rows = {}
+    for r in eng.run(matrix, cache=False):
+        v = _value(r)
+        rows[v["mesh"]] = v
+        _row(
+            f"B16_serve_layered_{v['mesh']}",
+            v["wall_s"] * 1e6,
+            f"{v['tokens_per_s']:.1f} tok/s "
+            f"itl_p50={v['itl_p50_s']*1e3:.1f}ms "
+            f"plan={v['plan_us_per_step']:.0f}us/step "
+            f"({(v['plan_frac'] or 0.0)*100:.1f}% of wall) "
+            f"decode_traces={v['decode_traces']} devices={v['mesh_devices']}",
+            metrics={"plan_us_per_step": v["plan_us_per_step"]},
+        )
+    if len(rows) == len(meshes):
+        base, dp = rows[meshes[0]], rows[meshes[1]]
+        if base["tokens"] != dp["tokens"]:
+            _row("B16_layered_token_identity", 0.0,
+                 f"MISMATCH between {meshes[0]} and {meshes[1]}", ok=False)
+        else:
+            _row("B16_layered_token_identity", 0.0,
+                 f"identical tokens across {' vs '.join(meshes)}")
+
+
 def bench_serve_smoke() -> None:
     """Tiny B9/B10/B11 rows for CI: one smoke-scale model, second-scale
     workloads, still through Memento + serve_sweep end-to-end."""
@@ -930,6 +1007,7 @@ def main(smoke: bool = False) -> None:
     bench_serve_prefix()
     bench_serve_spec()
     bench_serve_sharded()
+    bench_serve_layered()
     bench_roofline_summary()
 
 
@@ -945,8 +1023,9 @@ if __name__ == "__main__":
     )
     ap.add_argument(
         "--sharded-smoke", action="store_true",
-        help="tiny B15 only: sharded vs 1-device stepping (needs forced "
-        "host devices: XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+        help="tiny B15+B16 only: sharded vs 1-device stepping and the "
+        "data-parallel layered core (needs forced host devices: "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8)",
     )
     ap.add_argument(
         "--records-dir", default=None,
@@ -964,6 +1043,7 @@ if __name__ == "__main__":
     elif args.sharded_smoke:
         print("name,us_per_call,derived")
         bench_serve_sharded(smoke=True)
+        bench_serve_layered(smoke=True)
         mode = "sharded-smoke"
     else:
         main(smoke=args.smoke)

@@ -11,7 +11,8 @@ MLXP's result queries, NSML's live monitoring):
   commit).
 * :mod:`repro.analysis.tables` — grouped comparison tables over sweep
   results: ``compare(frame, rows=..., cols=..., agg=..., baseline=...)``
-  with delta/ratio columns and markdown/CSV renderers.
+  with delta/ratio columns and markdown/CSV renderers, plus
+  ``compare_frames`` for cross-run A/B diffs (one column per run).
 * :mod:`repro.analysis.trajectory` — a queryable store over the versioned
   ``benchmarks/records/BENCH_<n>.json`` perf records: filter by
   mode/benchmark, extract series across records, and detect regressions
@@ -27,7 +28,7 @@ CLI: ``python -m repro.analysis {table,trajectory,regressions,dash}``.
 """
 from .dash import AnalysisNotificationProvider, Dashboard
 from .metrics import Examiner, MetricFrame, MetricRecord, MetricSpec
-from .tables import Table, compare
+from .tables import Table, compare, compare_frames
 from .trajectory import (
     BenchRecord,
     Regression,
@@ -49,5 +50,6 @@ __all__ = [
     "Table",
     "Trajectory",
     "compare",
+    "compare_frames",
     "detect_regressions",
 ]

@@ -3,7 +3,8 @@
 Subcommands:
 
 * ``table``       render a grouped comparison table from a results CSV
-                  (``ResultSet.to_csv``) or the latest benchmark record
+                  (``ResultSet.to_csv``) or the latest benchmark record;
+                  ``--diff R1 R2 ...`` diffs runs with ratio/delta columns
 * ``trajectory``  list benchmark records, or one metric's series across them
 * ``regressions`` diff a benchmark record against its lineage baseline;
                   ``--strict`` exits nonzero when regressions exist (CI)
@@ -17,11 +18,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 from typing import Any
 
 from .metrics import MetricFrame, _as_float
-from .tables import AGGREGATORS, compare
+from .tables import AGGREGATORS, compare, compare_frames
 from .trajectory import (
     DEFAULT_RECORDS_DIR,
     RegressionPolicy,
@@ -58,7 +60,60 @@ def _render(table: Any, fmt: str) -> str:
     return str(table)
 
 
+def _diff_frames(args: argparse.Namespace, metric: str):
+    """Resolve ``--diff`` run tokens into labeled frames.
+
+    A token of digits names a benchmark record in ``--records-dir``;
+    anything else is read as a ``ResultSet.to_csv`` file. Record frames
+    carry only ``metric``; CSV frames carry every metric in the file.
+    """
+    from .trajectory import Trajectory
+
+    traj = None
+    pairs: list[tuple[str, MetricFrame]] = []
+    all_records = True
+    for tok in args.diff:
+        if re.fullmatch(r"\d+", tok):
+            if traj is None:
+                traj = Trajectory.load(args.records_dir)
+            rec = traj.get(int(tok))
+            if rec is None:
+                raise SystemExit(
+                    f"error: no record {tok} in {args.records_dir}"
+                )
+            frame = Trajectory([rec]).to_frame(metrics=(metric,))
+            pairs.append((f"record {rec.record}", frame))
+        else:
+            all_records = False
+            pairs.append((tok, MetricFrame.from_results_csv(tok)))
+    return pairs, all_records
+
+
+def cmd_table_diff(args: argparse.Namespace) -> int:
+    if args.csv or args.latest:
+        raise SystemExit("error: --diff is exclusive with --csv/--latest")
+    if len(args.diff) < 2:
+        raise SystemExit("error: --diff needs at least two runs")
+    if args.metric and len(args.metric) > 1:
+        raise SystemExit("error: --diff compares exactly one metric")
+    metric = args.metric[0] if args.metric else "tok_s"
+    pairs, all_records = _diff_frames(args, metric)
+    rows = args.rows or (["benchmark"] if all_records else None)
+    if not rows:
+        raise SystemExit("error: --rows is required when --diff includes CSVs")
+    table = compare_frames(
+        pairs, rows=rows, metric=metric, agg=args.agg,
+        title=args.title or f"{metric}: " + " vs ".join(lb for lb, _ in pairs),
+    )
+    if args.baseline:
+        table.baseline = _resolve_baseline(args.baseline, table.col_labels)
+    print(_render(table, args.format))
+    return 0
+
+
 def cmd_table(args: argparse.Namespace) -> int:
+    if args.diff:
+        return cmd_table_diff(args)
     if bool(args.csv) == bool(args.latest):
         raise SystemExit("error: pass exactly one of --csv PATH or --latest")
     if args.csv:
@@ -175,6 +230,7 @@ def cmd_dash(args: argparse.Namespace) -> int:
     dash, prov = serve_journal(
         args.journal, host=args.host, port=args.port,
         follow=not args.no_follow, total=args.total,
+        records_dir=args.records_dir,
     )
     print(f"dashboard: {dash.url}  (journal: {args.journal})")
     try:
@@ -198,6 +254,10 @@ def build_parser() -> argparse.ArgumentParser:
     t.add_argument("--csv", help="ResultSet.to_csv file to analyze")
     t.add_argument("--latest", action="store_true",
                    help="use the latest benchmark record instead of a CSV")
+    t.add_argument("--diff", nargs="+", metavar="RUN",
+                   help="diff two or more runs (record numbers from "
+                   "--records-dir and/or ResultSet CSV paths): one column "
+                   "per run, ratio/delta vs the first")
     t.add_argument("--records-dir", default=DEFAULT_RECORDS_DIR)
     t.add_argument("--mode", default="", help="with --latest: restrict mode")
     t.add_argument("--rows", nargs="+", help="param keys for table rows")
@@ -238,6 +298,8 @@ def build_parser() -> argparse.ArgumentParser:
     d.add_argument("--host", default="127.0.0.1")
     d.add_argument("--port", type=int, default=8321)
     d.add_argument("--total", type=int, help="expected task total (for ETA)")
+    d.add_argument("--records-dir", default=DEFAULT_RECORDS_DIR,
+                   help="perf records dir backing /api/trajectory sparklines")
     d.add_argument("--no-follow", action="store_true",
                    help="replay once, don't tail the journal")
     d.set_defaults(fn=cmd_dash)

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import statistics
 from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from dataclasses import replace as _dc_replace
+from typing import Any, Callable, Mapping, Sequence
 
 from .metrics import MetricFrame
 
@@ -245,3 +246,57 @@ def compare(
         title=title,
         fmt=fmt or _fmt_value,
     )
+
+
+_FIRST = object()  # compare_frames default: baseline is the first frame
+
+
+def compare_frames(
+    frames: Mapping[Any, MetricFrame] | Sequence[tuple[Any, MetricFrame]],
+    rows: str | Sequence[str],
+    metric: str | None = None,
+    agg: str | Callable[[list[float]], float] = "mean",
+    baseline: Any = _FIRST,
+    title: str = "",
+    fmt: Callable[[Any], str] | None = None,
+) -> Table:
+    """Diff two or more frames: one column per run, annotated vs the first.
+
+    The cross-run counterpart of :func:`compare`: each frame (a benchmark
+    record, a sweep re-run, an A/B candidate) becomes one column, cells are
+    matched row-wise by the ``rows`` keys, and every non-baseline column
+    renders as ``value (ratio x, delta %)`` against the baseline run — the
+    first frame unless ``baseline`` names another label. A run with no
+    records landing in a row renders ``-`` there rather than dropping the
+    column, so a benchmark missing from one run stays visible.
+
+    Records are tagged with a ``run`` pseudo-param carrying the frame's
+    label (shadowing any pre-existing ``run`` param).
+
+    >>> compare_frames({"record 12": old, "record 13": new},
+    ...                rows="benchmark", metric="tok_s")
+    """
+    pairs = list(frames.items()) if isinstance(frames, Mapping) else list(frames)
+    if len(pairs) < 2:
+        raise ValueError("compare_frames needs at least two frames")
+    labels = [label for label, _ in pairs]
+    if len({str(lb) for lb in labels}) != len(labels):
+        raise ValueError(f"frame labels must be distinct: {labels}")
+    combined = MetricFrame(
+        _dc_replace(r, params={**r.params, "run": label})
+        for label, f in pairs
+        for r in f
+    )
+    table = compare(
+        combined, rows=rows, cols="run", metric=metric, agg=agg,
+        baseline=labels[0] if baseline is _FIRST else baseline,
+        title=title, fmt=fmt,
+    )
+    # A run whose frame carried no matching records still gets its (empty)
+    # column: "this run didn't measure that" must not read as "all equal".
+    for label in labels:
+        if label not in table.col_labels:
+            table.col_labels.append(label)
+            for row in table.cells:
+                row.append(None)
+    return table

@@ -68,7 +68,8 @@ from repro.analysis.metrics import MetricSpec
 from repro.configs.registry import get_config
 from repro.core.task import Context
 from repro.serve.request import Request
-from repro.serve.scheduler import Scheduler, SchedulerConfig, _pow2_ceil
+from repro.serve.plan import pow2_ceil
+from repro.serve.scheduler import Scheduler, SchedulerConfig
 from repro.sharding.rules import ShardingCtx
 
 # Declarative registration for repro.analysis: the serve metrics worth
@@ -269,15 +270,14 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
             wlen = max(shared_len + p for p in lens)
             seen: set[int] = set()
             for d in range(sched_cfg.draft_k, 0, -1):
-                b = _pow2_ceil(d + 1)
+                b = pow2_ceil(d + 1)
                 if b in seen:
                     continue
                 seen.add(b)
                 sched.set_drafter(ScriptDrafter([np.full(d, -2, np.int32)]))
                 sched.submit(Request(np.zeros(wlen, np.int32), max_new_tokens=d + 2))
                 sched.run()
-        if sched.pool is not None:
-            sched.pool.reset_peaks()
+        sched.mem.reset_peaks()
         sched.deferred_admissions = 0
 
     if sched_cfg.speculative:
@@ -309,8 +309,7 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
                 for i, rid in enumerate(ref_rids)
             ]
             sched.set_drafter(ReplayDrafter(seqs))
-            if sched.pool is not None:
-                sched.pool.reset_peaks()
+            sched.mem.reset_peaks()
         else:
             from repro.serve.draft import NgramDrafter
 
@@ -325,8 +324,7 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         while sched.pending or sched.num_active:
             sched.step()
         ttft_cold = sched.result(primer).ttft_s
-        if sched.pool is not None:
-            sched.pool.reset_peaks()
+        sched.mem.reset_peaks()
 
     rate = float(_opt(ctx, "arrival_rate_hz", 0.0) or 0.0)
     # Scope work counters past warmup (trace counters stay cumulative:
@@ -338,6 +336,7 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     hit_tokens_before = sched.prefix_hit_tokens
     spec_before = sched.total_spec_steps
     replays_before = sched.total_spec_replays
+    plan_before = sched.plan_time_s
     fallbacks_before = sched.spec_fallbacks
     drafted_before = sched.drafted_tokens_total
     accepted_before = sched.accepted_tokens_total
@@ -373,8 +372,14 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
     cache_bytes = sched.paged_cache_bytes()
     warm_ttft = np.array([rs.ttft_s for rs in done if rs.adopted_tokens > 0])
     decode_steps = sched.total_decode_steps - steps_before
+    chunk_steps = sched.total_chunk_steps - chunks_before
     spec_steps = sched.total_spec_steps - spec_before
     spec_replays = sched.total_spec_replays - replays_before
+    # Host-planner share: time spent in the pure plan layer (serve/plan.py)
+    # over every scheduler step the timed window paid — the layered core's
+    # overhead budget (microseconds against millisecond device steps).
+    plan_s = sched.plan_time_s - plan_before
+    plan_steps = decode_steps + chunk_steps + spec_steps + spec_replays
     drafted = sched.drafted_tokens_total - drafted_before
     accepted = sched.accepted_tokens_total - accepted_before
     # The headline speculation metric: generated tokens per model-step-
@@ -408,7 +413,7 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         "itl_p50_s": float(np.percentile(itl_a, 50)),
         "itl_p95_s": float(np.percentile(itl_a, 95)),
         "decode_steps": decode_steps,
-        "chunk_steps": sched.total_chunk_steps - chunks_before,
+        "chunk_steps": chunk_steps,
         "spec_steps": spec_steps,
         "spec_replays": spec_replays,
         "spec_fallbacks": sched.spec_fallbacks - fallbacks_before,
@@ -416,6 +421,9 @@ def serve_sweep(ctx: Context) -> dict[str, Any]:
         "accepted_tokens": accepted,
         "accept_rate": accepted / drafted if drafted else None,
         "tokens_per_model_step": toks / model_steps if model_steps else None,
+        "plan_time_s": plan_s,
+        "plan_us_per_step": plan_s * 1e6 / plan_steps if plan_steps else None,
+        "plan_frac": plan_s / wall if wall > 0 else None,
         "decode_traces": sched.decode_traces,
         "prefill_traces": sched.prefill_traces,
         "chunk_traces": sched.chunk_traces,

@@ -145,6 +145,93 @@ def paged_chunk_attention_op(
     return o.reshape(B, KV, C, G, D).transpose(0, 2, 1, 3, 4).reshape(B, C, H, D)
 
 
+# --------------------------------------------------------------------------
+# Paged kernels under a mesh: per-shard shard_map wrappers
+# --------------------------------------------------------------------------
+# GSPMD cannot partition a pallas_call, so under a multi-device mesh the
+# paged kernels run inside shard_map: each shard calls the single-device op
+# on its local q rows / head slice / pool slice. The caller (the attention
+# layer) resolves the PartitionSpecs from the actual operand shapes and
+# mesh; ``localize_pages`` is set only when the pool is truly partitioned
+# across data shards (host page ids are then global — shard d owns rows
+# [d * rows_local, (d + 1) * rows_local) of the pool, each block ending in
+# its own trash row — so the local table is ``global - d * rows_local``).
+def _localized(page_table: jax.Array, pool_rows_local: int) -> jax.Array:
+    d = jax.lax.axis_index("data").astype(jnp.int32)
+    return page_table - d * pool_rows_local
+
+
+def paged_decode_attention_sharded(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    cur_pos: jax.Array,
+    *,
+    n_lp: int,
+    window: int = 0,
+    mesh,
+    q_spec,
+    pool_spec,
+    table_spec,
+    vec_spec,
+    localize_pages: bool = False,
+) -> jax.Array:
+    """``paged_decode_attention_op`` run per-shard under ``mesh``."""
+    from repro.compat import shard_map
+
+    rows_local = k_pool.shape[0] // (
+        mesh.shape["data"] if localize_pages else 1
+    )
+
+    def body(qs, ks, vs, pt, pos):
+        if localize_pages:
+            pt = _localized(pt, rows_local)
+        return paged_decode_attention_op(
+            qs, ks, vs, pt, pos, n_lp=n_lp, window=window
+        )
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(q_spec, pool_spec, pool_spec, table_spec, vec_spec),
+        out_specs=q_spec,
+        check=False,
+    )(q, k_pool, v_pool, page_table, cur_pos)
+
+
+def paged_chunk_attention_sharded(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    start: jax.Array,
+    *,
+    n_lp: int,
+    mesh,
+    q_spec,
+    pool_spec,
+    table_spec,
+    vec_spec,
+) -> jax.Array:
+    """``paged_chunk_attention_op`` run per-shard under ``mesh``. Chunks
+    are single-slot (B == 1), so only the head/model axis partitions —
+    the caller falls back to the XLA gather path when the pool is
+    data-partitioned."""
+    from repro.compat import shard_map
+
+    def body(qs, ks, vs, pt, st):
+        return paged_chunk_attention_op(qs, ks, vs, pt, st, n_lp=n_lp)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(q_spec, pool_spec, pool_spec, table_spec, vec_spec),
+        out_specs=q_spec,
+        check=False,
+    )(q, k_pool, v_pool, page_table, start)
+
+
 # ==========================================================================
 # Recurrences
 # ==========================================================================

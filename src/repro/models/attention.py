@@ -26,12 +26,56 @@ NEG_INF = -1e30
 
 
 def _pallas_ok(sctx: ShardingCtx) -> bool:
-    """Pallas kernels are only taken on a single device: GSPMD cannot
-    partition a pallas_call, so sharded stepping (mesh with > 1 device)
-    routes through the partitionable XLA gather/sdpa paths instead. Running
-    the kernels per-shard needs an explicit shard_map wrapper with
-    device-local page tables — tracked as a real-TPU follow-up."""
+    """Single-device: Pallas kernels are called directly (GSPMD cannot
+    partition a pallas_call). Under a multi-device mesh the *paged*
+    kernels instead run per-shard via shard_map when the operands
+    partition cleanly (``_paged_kernel_specs``); other kernel call sites
+    (flash prefill) still route through the partitionable XLA paths."""
     return sctx.device_count() == 1
+
+
+def _paged_kernel_specs(
+    sctx: ShardingCtx, *, B: int, H: int, KV: int, total_pages: int,
+    batch_sharded: bool,
+):
+    """PartitionSpecs to run a paged Pallas kernel per-shard under the
+    current mesh, or None when the operands don't partition cleanly (the
+    XLA gather path handles those layouts through GSPMD).
+
+    The head axis splits over ``model`` when it divides both q and KV
+    heads. The batch axis (decode only: ``batch_sharded``) splits over
+    ``data`` together with the pool's page axis — but only when the pool
+    is *truly* partitioned (``sctx.pool_data_shards``), because only then
+    do host page ids localize per shard (shard-local sub-pools with their
+    own trash rows). A replicated pool under ``data > 1`` still works:
+    each data shard keeps the full pool and its slice of slots.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if sctx.mesh is None or sctx.device_count() == 1:
+        return None
+    msize, dsize = sctx.axis_size("model"), sctx.axis_size("data")
+    if sctx.device_count() != msize * dsize:
+        return None  # extra mesh axes (pod) in play — XLA path
+    if msize > 1 and (H % msize or KV % msize):
+        return None
+    m = "model" if msize > 1 else None
+    d = None
+    localize = False
+    if dsize > 1:
+        if not batch_sharded or B % dsize:
+            return None
+        d = "data"
+        localize = sctx.pool_data_shards == dsize and total_pages % dsize == 0
+    pages = "data" if localize else None
+    return {
+        "mesh": sctx.mesh,
+        "q_spec": P(d, None, m, None),
+        "pool_spec": P(pages, None, m, None),
+        "table_spec": P(d, None),
+        "vec_spec": P(d),
+        "localize_pages": localize,
+    }
 
 
 # ==========================================================================
@@ -322,12 +366,28 @@ def _chunk_attend(
             off = qpos % page
             ck = cache.k.at[pid, off].set(k[0].astype(cache.k.dtype))
             cv = cache.v.at[pid, off].set(v[0].astype(cache.v.dtype))
+            specs = None
+            if cfg.attn_backend == "pallas" and not _pallas_ok(sctx):
+                # Chunks are single-slot (B == 1): only the head axis can
+                # partition, so a data-partitioned pool falls back to XLA.
+                specs = _paged_kernel_specs(
+                    sctx, B=B, H=q.shape[2], KV=ck.shape[2],
+                    total_pages=ck.shape[0], batch_sharded=False,
+                )
             if cfg.attn_backend == "pallas" and _pallas_ok(sctx):
                 from repro.kernels import ops as _kops
 
                 out = _kops.paged_chunk_attention_op(
                     q, ck, cv, page_table, jnp.broadcast_to(start, (B,)),
                     n_lp=max_pages,
+                ).astype(dt)
+            elif specs is not None:
+                from repro.kernels import ops as _kops
+
+                specs.pop("localize_pages")
+                out = _kops.paged_chunk_attention_sharded(
+                    q, ck, cv, page_table, jnp.broadcast_to(start, (B,)),
+                    n_lp=max_pages, **specs,
                 ).astype(dt)
             else:
                 sel = page_table  # (B, max_pages)
@@ -338,8 +398,8 @@ def _chunk_attend(
                     jnp.arange(T, dtype=jnp.int32)[None, :], (B, T)
                 )
                 out = _sdpa_span(q, kg, vg, k_pos, q_pos_b, cfg)
-        ck = constrain(ck, (None, None, "kv_heads", "head_dim"), sctx)
-        cv = constrain(cv, (None, None, "kv_heads", "head_dim"), sctx)
+        ck = constrain(ck, ("pages", None, "kv_heads", "head_dim"), sctx)
+        cv = constrain(cv, ("pages", None, "kv_heads", "head_dim"), sctx)
         return out, KVCache(ck, cv)
 
     # Contiguous per-slot row.
@@ -474,18 +534,31 @@ def gqa_attention(
         off = wslot % page
         ck = cache.k.at[pid, off].set(k[:, 0].astype(cache.k.dtype))
         cv = cache.v.at[pid, off].set(v[:, 0].astype(cache.v.dtype))
-        ck = constrain(ck, (None, None, "kv_heads", "head_dim"), sctx)
-        cv = constrain(cv, (None, None, "kv_heads", "head_dim"), sctx)
+        ck = constrain(ck, ("pages", None, "kv_heads", "head_dim"), sctx)
+        cv = constrain(cv, ("pages", None, "kv_heads", "head_dim"), sctx)
         new_cache = KVCache(ck, cv)
         # Windowed layers ring-fold into the leading ceil(window/page)
         # table entries — a bounded page working set regardless of how
         # wide the table is for dense layers.
         n_lp = min(-(-window // page), max_pages) if window else max_pages
+        specs = None
+        if cfg.attn_backend == "pallas" and not _pallas_ok(sctx):
+            specs = _paged_kernel_specs(
+                sctx, B=B, H=q.shape[2], KV=ck.shape[2],
+                total_pages=ck.shape[0], batch_sharded=True,
+            )
         if cfg.attn_backend == "pallas" and _pallas_ok(sctx):
             from repro.kernels import ops as _kops
 
             out = _kops.paged_decode_attention_op(
                 q, ck, cv, page_table, pos_v, n_lp=n_lp, window=window
+            ).astype(dt)
+        elif specs is not None:
+            from repro.kernels import ops as _kops
+
+            out = _kops.paged_decode_attention_sharded(
+                q, ck, cv, page_table, pos_v, n_lp=n_lp, window=window,
+                **specs,
             ).astype(dt)
         else:
             sel = page_table[:, :n_lp]  # (B, n_lp)

@@ -87,13 +87,17 @@ def paged_kv_kinds(cfg: ModelConfig) -> set[str]:
 def _paged_kv_pool_schema(cfg: ModelConfig, pages) -> dict[str, ParamSpec]:
     """Pool-shaped KV leaves: (n_pages + 1, page_size, n_kv, head_dim).
 
-    The +1 page is the trash page all unused page-table entries point at
-    (see serve/pages.py). Pages are replicated across the mesh; heads
-    keep their TP sharding.
+    The +data_shards pages are per-shard trash pages all unused
+    page-table entries point at (see serve/pages.py). The page axis
+    carries the "pages" logical name: decode profiles shard it over
+    data when the pool is data-partitioned (total_pages divisible —
+    each data shard then owns a contiguous sub-pool ending in its own
+    trash page), falling back to replication otherwise. Heads keep
+    their TP sharding.
     """
     hd = cfg.resolved_head_dim
     shape = (pages.total_pages, pages.page_size, cfg.n_kv_heads, hd)
-    axes = (None, None, "kv_heads", "head_dim")
+    axes = ("pages", None, "kv_heads", "head_dim")
     return {
         "k": ParamSpec(shape, axes, dtype=jnp.bfloat16, init="zeros"),
         "v": ParamSpec(shape, axes, dtype=jnp.bfloat16, init="zeros"),

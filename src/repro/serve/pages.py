@@ -92,8 +92,14 @@ class PageLayout:
     """Static geometry of a paged serving cache."""
 
     page_size: int  # tokens per page
-    n_pages: int  # physical pages in the pool (excluding the trash page)
+    n_pages: int  # physical pages in the pool (excluding trash pages)
     span: int  # logical token capacity a single slot can address
+    # Data-parallel pool partitioning (serve/memory.py): the allocatable
+    # pages split into `data_shards` equal blocks, each carrying its own
+    # trash row as the block's last physical page so a shard's garbage
+    # writes stay on the devices that own its slice. 1 = the classic
+    # single-pool layout with one trailing trash page.
+    data_shards: int = 1
 
     @property
     def max_pages(self) -> int:
@@ -102,13 +108,15 @@ class PageLayout:
 
     @property
     def total_pages(self) -> int:
-        """Physical pool length including the trash page."""
-        return self.n_pages + 1
+        """Physical pool length including the trash page(s)."""
+        return self.n_pages + self.data_shards
 
     @property
     def trash(self) -> int:
-        """Physical id of the trash page (see module docstring)."""
-        return self.n_pages
+        """Physical id of the default trash page (the global last row —
+        model code uses it as the write sink for pad tokens; per-slot
+        rows use their own shard's trash, see ``MemoryManager.trash_of``)."""
+        return self.total_pages - 1
 
     def pages_for_len(self, length: int) -> int:
         """Pages covering logical positions written by ``length`` tokens

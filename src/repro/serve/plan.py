@@ -1,0 +1,288 @@
+"""Plan layer of the serving core: pure, host-side scheduling decisions.
+
+Every sizing and ordering decision the scheduler makes — chunk buckets,
+prefill pad lengths, page-count buckets, preemption victims, weighted-fair
+admission order, admission backpressure — lives here as a pure function of
+plain values plus read-only :class:`~repro.serve.memory.MemoryManager`
+capacity queries. Nothing in this module imports JAX or touches device
+state, so every policy is unit-testable (and property-testable, see
+tests/test_plan_props.py) without compiling a single program.
+
+The executor (`serve/scheduler.py`) interleaves planning and execution at
+decision granularity — an admission can retire instantly and free its slot
+for the next admission within the same step, so a single frozen whole-step
+plan could not reproduce the historical (test-pinned) schedule. What the
+scheduler *does* freeze is the record: every decision taken during one
+``step()`` is accumulated into an immutable :class:`BatchPlan`
+(``Scheduler.last_plan``) and the time spent inside plan functions into
+``Scheduler.plan_time_s`` (the B16 planner-overhead metric).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Sequence
+
+
+def pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def pow2_ceil(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# -- immutable decision records ---------------------------------------------
+@dataclass(frozen=True)
+class SlotView:
+    """What the planner may know about an occupied slot."""
+
+    slot: int
+    rid: int
+    status: str  # "active" | "prefilling"
+    t_admit: float
+    preemptable: bool
+    shard: int = 0  # data shard owning the slot's pool slice
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    """One prefill chunk: bucketed token count + page backing to secure."""
+
+    slot: int
+    rid: int
+    start: int  # tokens already cached (chunk writes begin here)
+    bucket: int  # padded chunk shape (fixed power-of-two set)
+    n_real: int  # real tokens in the chunk
+    need_pages: int  # total pages the slot must hold after the chunk
+    n_lp: int  # page-table bucket passed to the chunk program
+
+
+@dataclass(frozen=True)
+class VerifyPlan:
+    """One speculative verify call: pending token + draft, bucketed."""
+
+    slot: int
+    rid: int
+    start: int
+    k: int  # draft tokens proposed
+    n_real: int  # k + 1 (pending token rides along)
+    bucket: int  # padded verify shape
+    need_pages: int
+    n_lp: int
+
+
+@dataclass(frozen=True)
+class AdmitPlan:
+    """One admission/resume decision (recorded whether or not it ran)."""
+
+    rid: int
+    kind: str  # "streaming" | "prefill" | "resume_swap" | "resume_recompute"
+    slot: int | None  # None when deferred
+    n_reserve: int  # worst-case pages (0 reservation-free / unpaged)
+
+
+@dataclass(frozen=True)
+class BatchPlan:
+    """Everything one ``step()`` decided, in decision order."""
+
+    admitted: tuple[AdmitPlan, ...] = ()
+    chunk: ChunkPlan | None = None
+    verifies: tuple[VerifyPlan, ...] = ()
+    decode_rows: tuple[int, ...] = ()
+    preempted: tuple[int, ...] = ()  # victim rids, in eviction order
+
+
+# -- sizing ------------------------------------------------------------------
+def bucket_len(
+    token_len: int,
+    *,
+    bucketed: bool,
+    min_bucket: int,
+    cache_len: int,
+    prefix_len: int,
+    long_ok: bool,
+) -> int:
+    """Power-of-two padded prompt length (identity when bucketing is off).
+
+    Dense prompts never exceed ``cache_len`` (asserted at admission), so
+    buckets cap there to keep the padded prompt in one row. Prompts
+    legitimately *past* the cap (windowed / long-context models,
+    ``long_ok``) stay on uncapped power-of-two buckets: at most
+    log2(longest prompt) distinct shapes, never the raw length."""
+    if not bucketed:
+        return token_len
+    b = max(min_bucket, 1)
+    while b < token_len:
+        b *= 2
+    cap = cache_len - prefix_len
+    if token_len > cap:
+        if long_ok:
+            return b
+        raise RuntimeError(
+            f"prompt of {token_len} tokens exceeds the dense prefill cap "
+            f"{cap} (cache_len {cache_len}); admission validation should "
+            "have rejected this request"
+        )
+    return min(b, cap)
+
+
+def chunk_bucket(remaining: int, *, chunk_budget: int, min_chunk: int) -> tuple[int, int]:
+    """(bucket, n_real) for the next prefill chunk. Chunk shapes come from
+    a *fixed* power-of-two set — ``min_chunk`` up to
+    ``pow2_floor(chunk_budget)`` — independent of decode load, so the busy
+    system never meets a shape the idle warmup didn't compile."""
+    max_b = pow2_floor(chunk_budget)
+    bucket = min(max(pow2_ceil(min(remaining, max_b)), min_chunk), max_b)
+    return bucket, min(bucket, remaining)
+
+
+def page_bucket(need: int, max_pages: int) -> int:
+    """Power-of-two page-count bucket for a program's table argument: the
+    gather/kernel cost tracks the live prefix, not the table width."""
+    return min(pow2_ceil(max(need, 1)), max_pages)
+
+
+def plan_chunk(
+    slot: int, rid: int, start: int, remaining: int, *,
+    chunk_budget: int, min_chunk: int, mem: Any = None,
+) -> ChunkPlan:
+    """Size the next chunk of a streaming prompt and the pages backing it.
+    ``mem`` (a MemoryManager, or None/unpaged) supplies page geometry via
+    capacity queries only — the plan commits nothing."""
+    bucket, n_real = chunk_bucket(
+        remaining, chunk_budget=chunk_budget, min_chunk=min_chunk
+    )
+    need = n_lp = 0
+    if mem is not None and mem.paged:
+        need = mem.pages_for_len(start + n_real)
+        n_lp = page_bucket(need, mem.max_pages)
+    return ChunkPlan(slot, rid, start, bucket, n_real, need, n_lp)
+
+
+def plan_verify(
+    slot: int, rid: int, start: int, k: int, *, draft_k: int, mem: Any = None
+) -> VerifyPlan:
+    """Size one speculative verify: pending token + k draft tokens, padded
+    to the fixed (k-bucket, page-bucket) set."""
+    n_real = k + 1
+    bucket = min(pow2_ceil(n_real), pow2_ceil(draft_k + 1))
+    need = n_lp = 0
+    if mem is not None and mem.paged:
+        need = mem.pages_for_len(start + n_real)
+        n_lp = page_bucket(need, mem.max_pages)
+    return VerifyPlan(slot, rid, start, k, n_real, bucket, need, n_lp)
+
+
+def spec_budget(max_new_tokens: int, emitted: int) -> int:
+    """Draft budget beyond this step's guaranteed emission."""
+    return max_new_tokens - emitted - 1
+
+
+def decode_rows(active_mask: Sequence[bool], handled: Iterable[int] = ()) -> tuple[int, ...]:
+    """Slots riding this step's decode: active and not already emitted via
+    verify. Frozen slots (free, PREFILLING, spec-handled) never appear."""
+    skip = set(handled)
+    return tuple(i for i, a in enumerate(active_mask) if a and i not in skip)
+
+
+# -- admission capacity (backpressure is a plan, not a side effect) ----------
+def can_admit_streaming(mem: Any, slot: int, n_worst: int, *, reservation_free: bool) -> bool:
+    """Streaming admission proceeds reservation-free (chunks reserve as
+    they stream, preempting on demand); under worst-case reservations the
+    whole footprint must fit the slot's shard now."""
+    if mem is None or not mem.paged or reservation_free:
+        return True
+    return mem.can_reserve_for(slot, n_worst)
+
+
+def can_admit_prefill(mem: Any, slot: int, n_reserve: int) -> bool:
+    """Whole-prompt prefill always reserves the worst case up front."""
+    if mem is None or not mem.paged:
+        return True
+    return mem.can_reserve_for(slot, n_reserve)
+
+
+def can_resume_swap(mem: Any, slot: int, need: int) -> bool:
+    """A swapped-out request resumes only when its full snapshot fits —
+    a deferred resume blocks fresh admissions (starvation guard)."""
+    return need <= mem.available_for(slot)
+
+
+# -- ordering ----------------------------------------------------------------
+def pick_victim(
+    views: Iterable[SlotView],
+    *,
+    protect: int,
+    requester_rid: int | None = None,
+    shard: int | None = None,
+) -> int | None:
+    """LRU preemption victim: the least-recently-(re)admitted preemptable
+    ACTIVE slot; when none exists, a *younger* PREFILLING streamer
+    (rid > requester — restarting the youngest guarantees the oldest
+    in-flight request always wins its pages). ``shard`` restricts victims
+    to one data shard (freeing pages elsewhere cannot back the
+    requester's growth); None matches the classic single-pool rule."""
+    views = [
+        v for v in views
+        if v.slot != protect and (shard is None or v.shard == shard)
+    ]
+    victims = [v for v in views if v.status == "active" and v.preemptable]
+    if victims:
+        return min(victims, key=lambda v: v.t_admit).slot
+    if requester_rid is None:
+        return None
+    streamers = [
+        v for v in views if v.status == "prefilling" and v.rid > requester_rid
+    ]
+    if not streamers:
+        return None
+    return max(streamers, key=lambda v: v.rid).slot
+
+
+@dataclass(frozen=True)
+class QueueView:
+    """Head-of-line candidate for weighted-fair admission."""
+
+    rid: int
+    tenant: str
+
+
+def pick_next(
+    queue: Iterable[QueueView],
+    blocked: frozenset[str] | set[str],
+    tenant_pass: dict[str, float],
+) -> int | None:
+    """Stride-scheduling pick: among each unblocked tenant's head-of-line
+    request, the one whose tenant has the lowest virtual pass (ties by
+    rid). Tenants first seen mid-flight join at the current minimum pass.
+    Returns the chosen rid, or None."""
+    heads: dict[str, QueueView] = {}
+    for v in queue:
+        if v.tenant in blocked or v.tenant in heads:
+            continue
+        heads[v.tenant] = v
+    if not heads:
+        return None
+    floor = min(tenant_pass.values(), default=0.0)
+
+    def pass_of(t: str) -> float:
+        return tenant_pass.get(t, floor)
+
+    return min(heads.values(), key=lambda v: (pass_of(v.tenant), v.rid)).rid
+
+
+def charge_tenant(
+    tenant_pass: dict[str, float], tenant: str, tokens: int, weight: float
+) -> dict[str, float]:
+    """Advance ``tenant``'s stride pass by ``tokens / weight`` (new tenants
+    start from the current floor). Returns a new dict — pure."""
+    floor = min(tenant_pass.values(), default=0.0)
+    out = dict(tenant_pass)
+    out[tenant] = out.get(tenant, floor) + tokens / weight
+    return out

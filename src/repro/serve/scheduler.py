@@ -1,132 +1,47 @@
-"""Continuous-batching request scheduler over a paged KV block pool.
+"""Continuous-batching serving core: the executor over plan / program /
+memory layers.
 
-The scheduler owns ``n_slots`` persistent decode slots backed by one batched
-decode state. Dense and windowed attention KV caches live in a shared
-**page pool** — ``n_pages`` fixed-size pages multiplexed across all slots
-through a per-slot page table (see serve/pages.py) — so a slot's cache
-footprint is its live tokens rounded up to pages, not a worst-case
-``cache_len`` row. MLA compressed caches, recurrent states, and enc-dec
-caches keep their per-slot layout behind the same interface; models with
-no paged layer kind run exactly the PR-1 contiguous path.
-
-**Unified token-budget step.** With ``chunk_budget`` set, each ``step()``
-composes one bounded batch of work: every decoding slot contributes one
-token, plus a prefill *chunk* of the oldest prompt still streaming in
-(``RequestStatus.PREFILLING``). Long prompts therefore enter the paged
-KV over several steps — decode cadence never stalls behind a 4k-token
-prefill. Chunk sizes are drawn from a fixed power-of-two bucket set
-(``min_chunk`` .. ``pow2_floor(chunk_budget)``), deliberately independent
-of the live decode count so the loaded system never meets a chunk shape
-the idle warmup didn't compile; per-step work is bounded by
-``chunk_budget + n_slots`` tokens. With ``chunk_budget=None`` the PR-1/2
-lifecycle is unchanged: whole-prompt prefill + graft at admission.
-
-**Page-aware preemption.** ``preemption="off"`` keeps worst-case page
-reservations at admission (prompt + max_new_tokens; OOM backpressure
-defers the queue). ``"swap"`` / ``"recompute"`` admit **reservation-free**:
-pages are reserved incrementally per chunk and per decode page-boundary
-crossing, and when the pool runs dry the LRU decoding slot is preempted —
-its pages (and per-slot states) snapshot to host memory (``swap``) or are
-dropped and re-derived by re-streaming prompt + generated tokens
-(``recompute``). Preempted requests resume ahead of fresh admissions and
-continue token-identically (greedy) from where they left off. Multiple
-prompts may stream concurrently: when no ACTIVE victim holds reclaimable
-pages, a *younger* PREFILLING streamer is restarted instead (streaming
-admissions are token-only, so re-streaming is always valid under either
-policy), which guarantees the oldest in-flight request can always reclaim
-what it needs — the old single-streamer admission gate is gone.
-
-**Prefix sharing.** With ``prefix_sharing`` (fully-paged streaming-capable
-models), prompts are hashed at page granularity on admission and full
-prompt pages are content-addressed in the pool's prefix index: a request
-whose prompt starts with an already-indexed page chain *adopts* those
-physical pages (refcount++) instead of recomputing them, then streams only
-the unadopted tail — N requests sharing a system prompt pay one set of
-pages and near-zero warm-prefix TTFT. Shared pages are copy-on-write:
-before any write into an adopted range the pool forks a private copy
-(``cow_traces``; never taken on the scheduler's own write pattern, which
-only touches positions past the adopted span).
-
-**Multi-tenant admission.** ``tenant_quota`` caps each tenant's summed
-worst-case page footprint (quota-blocked tenants are skipped while others
-admit); ``tenant_weights`` orders fresh admissions by stride scheduling —
-each admit advances its tenant's virtual pass by ``tokens / weight`` — so
-a heavy tenant cannot starve a light one. With both unset the admission
-queue stays exact-FIFO.
-
-**Speculative decoding.** With ``speculative``, every greedy ACTIVE slot
-gets a chance to emit *several* tokens per step: a :class:`Drafter`
-proposes up to ``draft_k`` continuation tokens from the token history
-alone (the default n-gram prompt-lookup drafter needs no second model),
-and one **verify** call — ``lm.chunk_step`` with ``all_logits`` — scores
-the pending input token plus the whole draft at once. The logits at
-chunk index ``i`` are exactly what sequential decoding would produce
-after consuming token ``i``, so greedy acceptance (keep the longest run
-where the model's argmax equals the draft) emits ``accepted + 1`` tokens
-that are token-identical to plain decoding by construction. Rejection
-rollback rides the existing machinery: page growth for the draft is
-truncated back (``PagePool.truncate_to``; refcounts preserved — draft
-pages are always private), garbage KV beyond the accepted position is
-inert under the positional masks for dense/MLA caches, and archs whose
-state genuinely advanced (recurrent carries, windowed ring folds) replay
-the accepted tokens from a pre-verify snapshot through the already-
-compiled chunk program. Verify shapes come from a fixed bucket set (one
-trace per (k-bucket, page-bucket)), and speculation composes with
-chunked prefill, preemption, prefix sharing, and tenant admission — a
-slot that cannot get pages for its draft simply decodes plainly that
-step (``spec_fallbacks``).
-
-The decode hot path is shape-stable by construction: tokens ``(n_slots,
-1)``, active mask ``(n_slots,)``, positions ``(n_slots,)``, page table
-``(n_slots, max_pages)`` int32 — joins, leaves, chunk streaming, page
-growth, and preemption only change array *values*, so the step never
-recompiles after its single warmup trace (``decode_traces``;
-``prefill_traces``/``admit_traces`` count per-bucket compiles of the
-legacy path, ``chunk_traces`` per chunk bucket, ``swap_traces`` the
-swap-out/in pair, ``verify_traces`` per verify bucket pair). Inactive
-slots keep decoding garbage with a frozen position; their writes land in
-the trash page (paged) or their own about-to-be-overwritten row
-(contiguous), so no live state is ever visible through the masks.
+Four layers with narrow interfaces: **plan** (serve/plan.py) makes pure
+host-side decisions from plain values plus MemoryManager capacity
+queries (no JAX); **programs** (serve/programs.py) owns every jitted
+program plus trace accounting and sharding glue; **memory**
+(serve/memory.py) fronts the refcounted PagePool(s), CoW forks, prefix
+index, and host page-table mirror — with a `data` mesh axis the pool
+splits into per-shard sub-pools aligned with the GSPMD blocks of the
+page-axis-sharded pool leaves, so `data > 1` partitions state instead
+of replicating it; the **Scheduler** here (with executors in
+admission.py / chunk_exec.py / preempt.py / spec_exec.py) owns request
+lifecycle and loops plan → execute → observe, publishing each step's
+decisions as an immutable `BatchPlan` (`last_plan`) and planner time as
+`plan_time_s`. Semantics are unchanged from the pre-split scheduler and
+pinned by the serve suites: greedy outputs token-identical to
+`generate_static`, one trace per program bucket, inactive slots decode
+garbage into trash pages behind frozen positions.
 """
 from __future__ import annotations
 
 import heapq
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models import blocks as blk
 from repro.models import lm
-from repro.serve.cache import (
-    _graft_leaf,
-    extract_slot_leaf,
-    gather_pages_leaf,
-    graft_pages_leaf,
-    graft_states,
-    insert_slot,
-    insert_slot_leaf,
-    scatter_pages_leaf,
-)
+from repro.serve import admission, chunk_exec, preempt, spec_exec
+from repro.serve import plan as planlib
 from repro.serve.draft import Drafter, NgramDrafter
-from repro.serve.pages import (
-    PageLayout,
-    PagePool,
-    cdiv,
-    model_page_span,
-    prefix_page_keys,
-)
+from repro.serve.memory import MemoryManager
+from repro.serve.pages import PageLayout, cdiv, model_page_span
+from repro.serve.programs import ProgramRegistry, paged_cache_bytes
 from repro.serve.request import Request, RequestState, RequestStatus
 from repro.serve.step import (
     decode_state_shardings,
-    fresh_slot_layers,
     init_decode_state,
     init_paged_decode_state,
 )
@@ -135,71 +50,42 @@ from repro.sharding.rules import ShardingCtx, get_profile
 _RECURRENT_KINDS = {"rglru", "mlstm", "slstm"}
 
 
-def _pow2_floor(n: int) -> int:
-    p = 1
-    while p * 2 <= n:
-        p *= 2
-    return p
-
-
-def _pow2_ceil(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
-
-
 @dataclass
 class SchedulerConfig:
     n_slots: int = 4  # concurrent sequences in the batched decode state
-    cache_len: int = 256  # per-slot logical cache slots (>= prompt + new tokens for dense)
+    cache_len: int = 256  # per-slot logical cache slots
     seed: int = 0
     keep_finished: int = 1024  # finished RequestStates retained for result()
-    # Paged KV pool (dense/windowed attention caches). n_pages=None sizes the
-    # pool at capacity parity with the contiguous layout (n_slots full rows);
-    # shrink it to multiplex a smaller pool across mixed-size requests.
+    # Paged KV pool; n_pages=None sizes it at contiguous capacity parity.
     paged: bool = True
     page_size: int = 16  # tokens per page
     n_pages: int | None = None
-    # Pad prompts to power-of-two buckets so prefill/admit compile once per
-    # bucket (auto-disabled for recurrent models, whose states would absorb
-    # the pad tokens).
+    # Pow2 prompt buckets: prefill/admit compile once per bucket
+    # (auto-disabled for recurrent models).
     prefill_buckets: bool = True
     min_bucket: int = 8
-    # Unified token-budget step: bounds per-step work at one token per
-    # decoding slot plus a prefill chunk of at most pow2_floor(chunk_budget)
-    # tokens (power-of-two buckets >= min_chunk). None -> whole-prompt
-    # prefill at admission.
+    # Unified token-budget step: one decode token per slot plus a prefill
+    # chunk <= pow2_floor(chunk_budget). None -> whole-prompt prefill.
     chunk_budget: int | None = None
     min_chunk: int = 16
-    # Page-aware preemption (requires chunk_budget): "off" reserves the
-    # worst case at admission; "swap" / "recompute" admit reservation-free
-    # and reclaim the LRU decoding slot's pages on OOM.
+    # "off" reserves the worst case at admission; "swap" / "recompute"
+    # admit reservation-free and reclaim LRU pages on OOM (needs chunking).
     preemption: str = "off"
-    # Content-address full prompt pages and adopt matching pages at
-    # admission (copy-on-write protected). Takes effect only for
-    # fully-paged streaming-capable models; a no-op everywhere else.
+    # Content-address full prompt pages and adopt matches at admission
+    # (CoW-protected); fully-paged streaming-capable models only.
     prefix_sharing: bool = True
-    # Multi-tenant admission: cap each tenant's summed worst-case page
-    # footprint (None -> unlimited) and order fresh admissions by stride
-    # scheduling over per-tenant weights (None -> exact FIFO).
+    # Per-tenant worst-case page quota (None -> unlimited) and stride-
+    # scheduled ordering over weights (None -> exact FIFO).
     tenant_quota: int | None = None
     tenant_weights: dict[str, float] | None = None
-    # Speculative decoding: draft up to draft_k tokens per greedy ACTIVE
-    # slot and verify them in one all-position chunk call, emitting
-    # accepted+1 tokens per step (token-identical to plain greedy).
-    # drafter=None installs the self-speculative NgramDrafter; any
-    # Drafter instance (oracle, learned draft model wrapper) slots in.
+    # Draft up to draft_k tokens per greedy ACTIVE slot, verify in one
+    # all-logits chunk call; drafter=None installs NgramDrafter.
     speculative: bool = False
     draft_k: int = 4
     drafter: Drafter | None = None
-    # Sharded multi-device stepping: lay the batched decode state — and the
-    # page-pool backing arrays — out over a ("data", "model") mesh built at
-    # construction (per-leaf PartitionSpecs resolved from the profile's
-    # logical-axis rules, replicated fallback when sizes don't divide).
-    # None keeps whatever ShardingCtx the caller passed (usually null); a
-    # (data, model) tuple builds a test mesh when the passed ctx has no
-    # mesh. Page *tables* and refcounts stay host-side either way.
+    # ("data", "model") mesh: model shards heads/experts per the profile;
+    # a data axis dividing n_slots AND n_pages partitions slots and the
+    # page pool per shard (serve/memory.py). Tables stay host-side.
     mesh_shape: tuple[int, int] | None = None
     sharding_profile: str = "decode_default"
 
@@ -245,10 +131,8 @@ class Scheduler:
         self._stream_capable = self._chunked and not cfg.enc_dec and not cfg.prefix_len
         if sched.speculative and sched.draft_k < 1:
             raise ValueError(f"draft_k must be >= 1, got {sched.draft_k}")
-        # Speculation rides chunk_step, which (like streaming) handles
-        # token-only decoder stacks; enc-dec and modality-prefix models
-        # fall back to plain decoding. Per-request gating (greedy only,
-        # no extras) happens in _spec_step.
+        # Speculation rides chunk_step (token-only decoder stacks); per-
+        # request gating (greedy only, no extras) happens in spec_exec.
         self._spec = sched.speculative and not cfg.enc_dec and not cfg.prefix_len
         self._drafter: Drafter | None = None
         if self._spec:
@@ -264,34 +148,50 @@ class Scheduler:
                 if sched.n_pages is not None
                 else n * cdiv(span, sched.page_size)
             )
-            self.pages: PageLayout | None = PageLayout(
-                page_size=sched.page_size, n_pages=n_pages, span=span
+            # Data-parallel pool partitioning kicks in when the data axis
+            # divides both the slot count and the pool — otherwise the pool
+            # stays single-shard (its leaves replicate over data, exactly
+            # the pre-partitioning layout).
+            dsize = sctx.axis_size("data")
+            d_eff = (
+                dsize if dsize > 1 and n_pages % dsize == 0 and n % dsize == 0
+                else 1
             )
-            self.pool: PagePool | None = PagePool(self.pages)
-            state = init_paged_decode_state(cfg, n, sched.cache_len, self.pages, sctx=sctx)
-            self._pt = np.full((n, self.pages.max_pages), self.pages.trash, np.int32)
+            if d_eff > 1:
+                # Tell the model layer the pool is truly partitioned so
+                # shard_map'd paged kernels localize page ids per shard.
+                sctx = _dc_replace(sctx, pool_data_shards=d_eff)
+                self.sctx = sctx
+            layout = PageLayout(
+                page_size=sched.page_size, n_pages=n_pages, span=span,
+                data_shards=d_eff,
+            )
+            self.mem = MemoryManager(layout, n)
+            state = init_paged_decode_state(cfg, n, sched.cache_len, layout, sctx=sctx)
         else:
-            self.pages = None
-            self.pool = None
+            self.mem = MemoryManager(None, n)
             state = init_decode_state(cfg, n, sched.cache_len, sctx=sctx)
             state["pos"] = jnp.zeros((n,), jnp.int32)
-        # Sharded stepping: pin every layer leaf (including the pool
-        # leaves, whose kv_heads/head_dim shard over "model" — each device
-        # owns its slice of every page) to its profile-resolved
-        # NamedSharding, place the weights the same way, and route every
-        # host-produced array (page table, token column, masks) through
-        # fully-replicated device_put so program input/output layouts are
-        # identical across steps — one trace per bucket, never per mesh.
         self._layer_shardings = decode_state_shardings(
-            cfg, n, sched.cache_len, sctx, pages=self.pages if self._paged else None
+            cfg, n, sched.cache_len, sctx, pages=self.mem.layout
         )
-        self._replicated = sctx.replicated()
         if self._layer_shardings is not None:
             from repro.models.schema import shard_tree
 
             self.params = shard_tree(params, lm.model_schema(cfg), sctx)
+
+        # The program registry owns every jitted closure (and the sharded
+        # params reference the chunk body closes over — shard first).
+        self._layouts = blk.stack_layouts(cfg, sched.cache_len, paged=self._paged)
+        caps = blk.stack_paged_caps(cfg, sched.cache_len) if self._paged else None
+        self.programs = ProgramRegistry(
+            cfg, sctx, self.params,
+            cache_len=sched.cache_len, layouts=self._layouts, caps=caps,
+            layer_shardings=self._layer_shardings,
+            page_size=sched.page_size if self._paged else 0, paged=self._paged,
+        )
         if self._paged:
-            state["page_table"] = self._put(self._pt)
+            state["page_table"] = self._put(self.mem.pt)
         self._states: dict[str, Any] = state
         self._tokens = np.zeros((n, 1), np.int32)  # next input token per slot
         self._temps = np.zeros((n,), np.float32)
@@ -300,20 +200,14 @@ class Scheduler:
 
         kinds = set(cfg.block_pattern) | set(cfg.first_blocks)
         self._bucketed = sched.prefill_buckets and not (kinds & _RECURRENT_KINDS)
-        # Rejected draft positions leave inert garbage in dense / MLA
-        # caches (positional masks never read past the accepted position),
-        # but genuinely corrupt state that *advanced*: recurrent carries
-        # consumed the rejected tokens, and windowed ring caches fold
-        # rejected writes onto live window entries. Those archs roll back
-        # by replaying the accepted run from a pre-verify snapshot.
+        # Rejected draft positions leave inert garbage in dense/MLA caches,
+        # but corrupt state that *advanced* (recurrent carries, windowed
+        # ring folds) — those archs roll back by snapshot replay.
         self._needs_replay = bool(kinds & _RECURRENT_KINDS) or (
             "local_attn" in kinds
         )
-        # Prefix sharing needs every stateful leaf to live behind the page
-        # table: windowed ring pages are position-folded (not prefix
-        # content-addressable) and per-slot leaves (MLA ckv, recurrent
-        # states) would silently carry prefix information sharing can't
-        # reconstruct — so only fully dense-paged streaming models share.
+        # Prefix sharing needs every stateful leaf behind the page table:
+        # only fully dense-paged streaming models share.
         self._sharing = (
             sched.prefix_sharing
             and self._paged
@@ -321,8 +215,6 @@ class Scheduler:
             and kinds <= {"attn_mlp", "attn_moe"}
             and kinds <= blk.paged_kv_kinds(cfg)
         )
-        self._slot_keys: dict[int, list[bytes]] = {}  # slot -> prompt page keys
-        self._slot_reg: dict[int, int] = {}  # slot -> leading pages registered
         self._slot_worst: dict[int, tuple[str, int]] = {}  # slot -> (tenant, pages)
         self._tenant_pass: dict[str, float] = {}  # stride-scheduling virtual time
 
@@ -335,13 +227,6 @@ class Scheduler:
         self._next_rid = 0
         self._key = jax.random.PRNGKey(sched.seed)
 
-        self.decode_traces = 0  # jit trace count of the decode hot path
-        self.prefill_traces = 0  # one per prompt bucket
-        self.admit_traces = 0  # one per prompt bucket
-        self.chunk_traces = 0  # one per chunk bucket
-        self.swap_traces = 0  # swap-out + swap-in programs
-        self.cow_traces = 0  # copy-on-write fork programs (per fork count)
-        self.verify_traces = 0  # one per (k-bucket, page-bucket) pair
         self.total_decode_steps = 0
         self.total_chunk_steps = 0
         self.total_spec_steps = 0  # verify calls (one slot each)
@@ -357,291 +242,48 @@ class Scheduler:
         self.finished_total = 0  # cumulative, survives keep_finished eviction
         self.generated_tokens_total = 0
         self.last_decode_logits: jax.Array | None = None
+        self.last_plan: planlib.BatchPlan = planlib.BatchPlan()
+        self.plan_time_s = 0.0  # cumulative time inside plan-layer calls
+        self._ev: dict[str, Any] = {
+            "admits": [], "chunk": None, "verifies": [], "rows": (),
+            "preempted": [],
+        }
 
-        # Explicit per-leaf layout metadata (paged pool leaf, dense,
-        # ring, copy) — the graft/surgery dispatch; see models/schema.py.
-        layouts = blk.stack_layouts(cfg, sched.cache_len, paged=self._paged)
-        # Per-leaf logical capacities: >0 marks a shared-pool KV leaf (no
-        # batch axis; passed through untouched by per-slot surgery).
-        caps = blk.stack_paged_caps(cfg, sched.cache_len) if self._paged else None
+    # -- layer glue ----------------------------------------------------------
+    def _plan(self, fn, *args, **kw):
+        """Run a plan-layer function, accounting its wall time."""
+        t = time.perf_counter()
+        out = fn(*args, **kw)
+        self.plan_time_s += time.perf_counter() - t
+        return out
 
-        def _slot_surgery_trees():
-            template = init_decode_state(self.cfg, 1, self.sched.cache_len)["layers"]
-            c = caps if caps is not None else jax.tree.map(lambda _: 0, template)
-            return c, template
-
-        self._layouts = layouts
-
-        def _freeze_inactive(active, new_layers, old_layers):
-            # Inactive slots (free, or PREFILLING between chunks) must keep
-            # their per-slot states verbatim across other slots' decode
-            # steps: positional KV survives by write-before-read, but a
-            # recurrence would absorb the masked slot's garbage token.
-            # Shared-pool leaves have no batch row to freeze — their
-            # garbage writes stay behind the trash page / the positions the
-            # next chunk overwrites.
-            c, template = _slot_surgery_trees()
-
-            def leaf(cap, new, old, t):
-                if cap:
-                    return new
-                nd, td = jnp.asarray(new), jnp.asarray(t)
-                if nd.shape == td.shape:  # n_slots == 1
-                    return jnp.where(active[0], nd, old)
-                ax = [i for i in range(nd.ndim) if nd.shape[i] != td.shape[i]][0]
-                shape = [1] * nd.ndim
-                shape[ax] = nd.shape[ax]
-                return jnp.where(active.reshape(shape), nd, old)
-
-            return jax.tree.map(leaf, c, new_layers, old_layers, template)
-
-        def _decode_fn(params, states, token, active):
-            # Python body runs only when jit (re)traces: counts compilations.
-            self.decode_traces += 1
-            logits, new_states = lm.decode_step(params, self.cfg, states, token, self.sctx)
-            # Freeze inactive slots in place (position and per-slot states).
-            new_pos = jnp.where(active, new_states["pos"], states["pos"])
-            out = {
-                "layers": self._constrain_layers(
-                    _freeze_inactive(active, new_states["layers"], states["layers"])
-                ),
-                "pos": new_pos,
-            }
-            if "page_table" in new_states:
-                out["page_table"] = new_states["page_table"]
-            return logits, out
-
-        self._decode = jax.jit(_decode_fn)
-
-        def _prefill_fn(p, b):
-            self.prefill_traces += 1
-            return lm.prefill(p, self.cfg, b, self.sctx)
-
-        self._prefill = jax.jit(_prefill_fn)
-
-        if self._paged:
-            page_size = self.pages.page_size
-
-            def _admit_fn(layers, pos, prefill_layers, slot, page_ids, prompt_len):
-                self.admit_traces += 1
-                target = init_decode_state(self.cfg, 1, self.sched.cache_len)["layers"]
-
-                def leaf(lay, full, tgt, src):
-                    if lay.kind == "paged":  # shared-pool KV leaf: scatter pages
-                        return graft_pages_leaf(
-                            full, src, page_ids, prompt_len, lay.cap, page_size
-                        )
-                    return insert_slot_leaf(
-                        full, _graft_leaf(tgt, src, prompt_len, lay), slot, lay
-                    )
-
-                new_layers = self._constrain_layers(
-                    jax.tree.map(leaf, layouts, layers, target, prefill_layers)
-                )
-                return new_layers, pos.at[slot].set(prompt_len)
-
-        else:
-
-            def _admit_fn(layers, pos, prefill_layers, slot, prompt_len):
-                self.admit_traces += 1
-                target = init_decode_state(self.cfg, 1, self.sched.cache_len)
-                slot_layers = graft_states(
-                    target["layers"], prefill_layers, prompt_len, layouts=layouts
-                )
-                new_layers = self._constrain_layers(
-                    insert_slot(layers, slot_layers, slot, layouts=layouts)
-                )
-                return new_layers, pos.at[slot].set(prompt_len)
-
-        # slot and prompt_len are traced, so admission compiles once per
-        # prefill *shape* — with bucketing, once per bucket.
-        self._admit_jit = jax.jit(_admit_fn)
-
-        # -- unified-step programs (chunk streaming, slot reset, swap) -------
-        def _chunk_body(layers, pos, tokens, slot, start, chunk_len, page_ids,
-                        all_logits=False):
-            c, template = _slot_surgery_trees()
-            slot_layers = jax.tree.map(
-                lambda lay, cap, full, t: (
-                    full if cap else extract_slot_leaf(full, t, slot, lay)
-                ),
-                layouts, c, layers, template,
-            )
-            states: dict[str, Any] = {"layers": slot_layers, "pos": start}
-            if page_ids is not None:
-                states["page_table"] = page_ids[None, :]
-            logits, new = lm.chunk_step(
-                self.params, self.cfg, states, tokens, chunk_len, self.sctx,
-                all_logits=all_logits,
-            )
-            new_layers = self._constrain_layers(
-                jax.tree.map(
-                    lambda lay, cap, full, s: (
-                        s if cap else insert_slot_leaf(full, s, slot, lay)
-                    ),
-                    layouts, c, layers, new["layers"],
-                )
-            )
-            return logits, new_layers, pos.at[slot].set(start + chunk_len)
-
-        if self._paged:
-
-            def _chunk_fn(layers, pos, tokens, slot, start, chunk_len, page_ids):
-                self.chunk_traces += 1
-                return _chunk_body(layers, pos, tokens, slot, start, chunk_len, page_ids)
-
-            def _verify_fn(layers, pos, tokens, slot, start, chunk_len, page_ids):
-                self.verify_traces += 1
-                return _chunk_body(
-                    layers, pos, tokens, slot, start, chunk_len, page_ids,
-                    all_logits=True,
-                )
-
-        else:
-
-            def _chunk_fn(layers, pos, tokens, slot, start, chunk_len):
-                self.chunk_traces += 1
-                return _chunk_body(layers, pos, tokens, slot, start, chunk_len, None)
-
-            def _verify_fn(layers, pos, tokens, slot, start, chunk_len):
-                self.verify_traces += 1
-                return _chunk_body(
-                    layers, pos, tokens, slot, start, chunk_len, None,
-                    all_logits=True,
-                )
-
-        self._chunk_jit = jax.jit(_chunk_fn)
-        # Verify program for speculative decoding: the chunk body with
-        # logits at *every* position, so one call scores a whole draft.
-        self._verify_jit = jax.jit(_verify_fn)
-        # Position-only fixup for partial acceptance on archs whose caches
-        # tolerate garbage past the accepted position (dense / MLA).
-        self._setpos_jit = jax.jit(lambda pos, slot, val: pos.at[slot].set(val))
-
-        def _reset_fn(layers, pos, slot, pos_val):
-            # Reset the slot's per-slot leaves to the empty-recurrence state
-            # so a chunked prefill starts from what a from-scratch prefill
-            # would derive. Pool leaves stay: the trash-pointed table row
-            # isolates them. ``pos_val`` is the adopted-prefix length (0
-            # without sharing): the slot's frozen decode position must sit
-            # at the first *unadopted* logical page, or the inactive slot's
-            # garbage decode writes would land inside a shared page.
-            c, _ = _slot_surgery_trees()
-            fresh = fresh_slot_layers(self.cfg, self.sched.cache_len)
-            new_layers = self._constrain_layers(
-                jax.tree.map(
-                    lambda lay, cap, full, t: (
-                        full if cap else insert_slot_leaf(full, t, slot, lay)
-                    ),
-                    layouts, c, layers, fresh,
-                )
-            )
-            return new_layers, pos.at[slot].set(pos_val)
-
-        self._reset_jit = jax.jit(_reset_fn)
-
-        if self._paged:
-
-            def _copy_pages(full, src_ids, dst_ids):
-                if full.ndim == 5:  # stacked groups: leading layer axis
-                    return full.at[:, dst_ids].set(full[:, src_ids])
-                return full.at[dst_ids].set(full[src_ids])
-
-            def _cow_fn(layers, src_ids, dst_ids):
-                # Fork shared pages: copy page contents src -> dst in every
-                # pool leaf (one program per fork count; essentially never
-                # runs — the scheduler's write pattern stays past adopted
-                # spans — but keeps CoW safety local to the pool). Sharded,
-                # the copy runs under shard_map per pool leaf: the page axis
-                # is never mesh-sharded, so every device owns its
-                # kv_heads/head_dim slice of both pages and forks them
-                # locally — no cross-device traffic, the device-local-pool
-                # property made executable.
-                self.cow_traces += 1
-                if self._layer_shardings is None:
-                    return jax.tree.map(
-                        lambda cap, full: (
-                            _copy_pages(full, src_ids, dst_ids) if cap else full
-                        ),
-                        caps, layers,
-                    )
-
-                def leaf(cap, full, sh):
-                    if not cap:
-                        return full
-                    spec = sh.spec
-                    return shard_map(
-                        _copy_pages,
-                        mesh=self.sctx.mesh,
-                        in_specs=(spec, P(), P()),
-                        out_specs=spec,
-                        check=False,
-                    )(full, src_ids, dst_ids)
-
-                return jax.tree.map(leaf, caps, layers, self._layer_shardings)
-
-            self._cow_jit = jax.jit(_cow_fn)
-
-        if self._paged:
-
-            def _swap_out_fn(layers, page_ids, slot):
-                self.swap_traces += 1
-                c, template = _slot_surgery_trees()
-                return jax.tree.map(
-                    lambda lay, cap, full, t: (
-                        gather_pages_leaf(full, page_ids)
-                        if cap
-                        else extract_slot_leaf(full, t, slot, lay)
-                    ),
-                    layouts, c, layers, template,
-                )
-
-            def _swap_in_fn(layers, pos, snap, page_ids, slot, pos_val):
-                self.swap_traces += 1
-                c, _ = _slot_surgery_trees()
-                new_layers = self._constrain_layers(
-                    jax.tree.map(
-                        lambda lay, cap, full, s: (
-                            scatter_pages_leaf(full, s, page_ids)
-                            if cap
-                            else insert_slot_leaf(full, s, slot, lay)
-                        ),
-                        layouts, c, layers, snap,
-                    )
-                )
-                return new_layers, pos.at[slot].set(pos_val)
-
-            self._swap_out_jit = jax.jit(_swap_out_fn)
-            self._swap_in_jit = jax.jit(_swap_in_fn)
-
-        def _sample_fn(logits, temps, key):
-            lg = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
-            greedy = jnp.argmax(lg, axis=-1)
-            scaled = lg / jnp.maximum(temps, 1e-6)[:, None]
-            sampled = jax.random.categorical(key, scaled, axis=-1)
-            return jnp.where(temps > 0.0, sampled, greedy).astype(jnp.int32)
-
-        self._sample = jax.jit(_sample_fn)
-
-    # -- sharded-stepping helpers -------------------------------------------
     def _put(self, x):
-        """Host array -> device; fully replicated over the mesh when sharded
-        so every jit program sees one stable input layout per bucket."""
-        if self._replicated is None:
-            return jnp.asarray(x)
-        return jax.device_put(np.asarray(x), self._replicated)
+        return self.programs.put(x)
 
     def _constrain_layers(self, layers):
-        """Pin a step program's output layer tree to the profile-resolved
-        NamedShardings (identity without a mesh) — state placement can
-        never drift between steps, whatever XLA would have inferred."""
-        if self._layer_shardings is None:
-            return layers
-        return jax.tree.map(
-            jax.lax.with_sharding_constraint, layers, self._layer_shardings
-        )
+        return self.programs.constrain_layers(layers)
 
-    # -- client API ---------------------------------------------------------
+    @property
+    def pool(self):
+        return self.mem.pool
+
+    @property
+    def pages(self):
+        return self.mem.layout
+
+    @property
+    def _pt(self):
+        return self.mem.pt
+
+    @property
+    def _slot_keys(self):
+        return self.mem.slot_keys
+
+    @property
+    def _slot_reg(self):
+        return self.mem.slot_reg
+
+    # -- client API ----------------------------------------------------------
     def submit(self, request: Request) -> int:
         """Queue a request; returns its request id."""
         rid = self._next_rid
@@ -655,8 +297,7 @@ class Scheduler:
         self._key = jax.random.PRNGKey(seed)
 
     def set_drafter(self, drafter: Drafter) -> None:
-        """Swap the draft proposer (e.g. install a workload oracle for
-        benchmarking acceptance upper bounds). No-op with speculation off."""
+        """Swap the draft proposer. No-op with speculation off."""
         if self._spec:
             self._drafter = drafter
 
@@ -689,9 +330,8 @@ class Scheduler:
 
     def run(self) -> list[RequestState]:
         """Drive steps until queue and slots drain; returns finished states
-        for the requests that were in flight at call time, in submission
-        order. Results are collected as requests retire, so they survive
-        ``keep_finished`` eviction even when one drain outruns the cap."""
+        for the requests in flight at call time, in submission order
+        (collected as requests retire, surviving keep_finished)."""
         in_flight = (
             {rs.rid for rs in self._queue}
             | {rs.rid for rs in self._active.values()}
@@ -707,13 +347,27 @@ class Scheduler:
                     in_flight.discard(rid)
         return [results[r] for r in sorted(results)]
 
-    # -- one scheduling iteration ------------------------------------------
+    # -- one scheduling iteration --------------------------------------------
     def step(self) -> bool:
-        """Admit/resume from the queues, stream at most one prefill chunk
-        (fixed power-of-two buckets up to the token budget), run per-slot
-        speculative verify steps (when enabled), then one decode step over
-        the remaining decoding slots. Returns True if any model program
-        ran."""
+        """One plan → execute → observe iteration: admit/resume, stream at
+        most one prefill chunk, per-slot speculative verifies, then one
+        decode step over the remaining rows. The decisions taken are
+        published as `last_plan`. Returns True if any program ran."""
+        self._ev = {
+            "admits": [], "chunk": None, "verifies": [], "rows": (),
+            "preempted": [],
+        }
+        try:
+            return self._step()
+        finally:
+            e = self._ev
+            self.last_plan = planlib.BatchPlan(
+                admitted=tuple(e["admits"]), chunk=e["chunk"],
+                verifies=tuple(e["verifies"]), decode_rows=e["rows"],
+                preempted=tuple(e["preempted"]),
+            )
+
+    def _step(self) -> bool:
         self._admit_pending()
         ran = False
         if self._chunked:
@@ -724,15 +378,13 @@ class Scheduler:
             ran = ran or bool(handled)
         # Slots that already emitted via verify sit out this decode: their
         # cleared mask freezes pos and per-slot states exactly like a
-        # PREFILLING slot's, and their garbage writes are confined the
-        # same way (trash page / positions the next real write overwrites
-        # before any read).
-        mask = self._active_mask
-        if handled:
-            mask = mask.copy()
-            mask[list(handled)] = False
-        if not mask.any():
+        # PREFILLING slot's.
+        rows = self._plan(planlib.decode_rows, self._active_mask, handled)
+        self._ev["rows"] = rows
+        if not rows:
             return ran
+        mask = np.zeros_like(self._active_mask)
+        mask[list(rows)] = True
         if self._paged:
             self._grow_pages(skip=handled)
             if self._sharing:
@@ -743,18 +395,17 @@ class Scheduler:
                 for slot, rs in list(self._active.items()):
                     if rs.status is RequestStatus.ACTIVE and slot not in handled:
                         p = int(self._pos_host[slot])
-                        self._apply_cow(slot, self.pool.prepare_write(slot, p, p + 1))
-            self._states["page_table"] = self._put(self._pt)
+                        self._apply_cow(self.mem.prepare_write(slot, p, p + 1))
+            self._states["page_table"] = self._put(self.mem.pt)
 
         self._key, sub = jax.random.split(self._key)
-        logits, self._states = self._decode(
-            self.params,
-            self._states,
-            self._put(self._tokens),
-            self._put(mask),
+        logits, self._states = self.programs.decode(
+            self.params, self._states, self._put(self._tokens), self._put(mask)
         )
         self.last_decode_logits = logits
-        cols = np.asarray(self._sample(logits[:, -1, :], jnp.asarray(self._temps), sub))
+        cols = np.asarray(
+            self.programs.sample(logits[:, -1, :], jnp.asarray(self._temps), sub)
+        )
         self.total_decode_steps += 1
 
         now = time.perf_counter()
@@ -770,449 +421,54 @@ class Scheduler:
             self._maybe_finish(rs, now)
         return True
 
-    # -- chunked prefill (unified token-budget step) -------------------------
+    # -- chunked prefill (executor in serve/chunk_exec.py) -------------------
     def _prefill_chunk_step(self) -> bool:
-        """Stream one prompt chunk for the oldest PREFILLING slot.
-
-        Chunk sizes come from a *fixed* power-of-two bucket set —
-        ``min_chunk`` up to ``pow2_floor(chunk_budget)`` — independent of
-        how many decode rows ride the same step: a load-dependent size
-        would compile fresh chunk shapes exactly when the system is busy
-        (the warmup, run idle, would never have seen them). The decode
-        rows' tokens therefore ride on top of the chunk's; per-step work
-        stays bounded by ``chunk_budget + n_slots``. Returns True if a
-        chunk program ran."""
-        prefilling = sorted(
-            (rs for rs in self._active.values() if rs.status is RequestStatus.PREFILLING),
-            key=lambda r: r.rid,
-        )
-        if not prefilling:
-            return False
-        sc = self.sched
-        rs = prefilling[0]
-        slot = rs.slot
-        src = (
-            rs.replay_tokens
-            if rs.replay_tokens is not None
-            else np.asarray(rs.request.prompt)
-        )
-        remaining = len(src) - rs.chunk_pos
-        max_b = _pow2_floor(sc.chunk_budget)
-        bucket = min(max(_pow2_ceil(min(remaining, max_b)), sc.min_chunk), max_b)
-        n_real = min(bucket, remaining)
-        start = rs.chunk_pos
-
-        page_ids = None
-        if self._paged:
-            need = self.pages.pages_for_len(start + n_real)
-            if not self._ensure_pages(slot, need, rid=rs.rid):
-                self.deferred_admissions += 1
-                return False
-            held = len(self.pool.allocated(slot))
-            if need > held:
-                self._pt[slot, held:need] = self.pool.grow_to(slot, need)
-            if self._sharing:
-                # Fork any shared page in the chunk's write range before the
-                # chunk program touches it (steady-state no-op: chunks only
-                # write at or past the first unadopted position).
-                self._apply_cow(
-                    slot, self.pool.prepare_write(slot, start, start + n_real)
-                )
-            # The chunk only attends to pages covering [0, start + n_real);
-            # pass a power-of-two page-count bucket of the table row so the
-            # gather/kernel cost tracks the live prefix, not the table
-            # width (one compile per (chunk, page) bucket pair — early
-            # chunks of a long prompt stay cheap).
-            n_lp = min(_pow2_ceil(max(need, 1)), self.pages.max_pages)
-            page_ids = self._put(self._pt[slot, :n_lp])
-
-        toks = src[start : start + n_real].astype(np.int32)
-        if n_real < bucket:
-            toks = np.concatenate([toks, np.zeros(bucket - n_real, np.int32)])
-        args = [
-            self._states["layers"], self._states["pos"], self._put(toks[None, :]),
-            jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32),
-            jnp.asarray(n_real, jnp.int32),
-        ]
-        if self._paged:
-            args.append(page_ids)
-        logits, layers, pos = self._chunk_jit(*args)
-        self._states["layers"] = layers
-        self._states["pos"] = pos
-        rs.chunk_pos += n_real
-        self._pos_host[slot] = rs.chunk_pos
-        self.total_chunk_steps += 1
-        if self._sharing and slot in self._slot_keys:
-            # Register newly-completed full prompt pages in the prefix
-            # index (first writer wins; adopted pages are already indexed).
-            keys = self._slot_keys[slot]
-            done = min(rs.chunk_pos // self.pages.page_size, len(keys))
-            for j in range(self._slot_reg.get(slot, 0), done):
-                self.pool.register_page(slot, j, keys[j])
-            self._slot_reg[slot] = max(self._slot_reg.get(slot, 0), done)
-        if rs.chunk_pos == len(src):
-            self._finish_prefill(rs, logits)
-        return True
+        return chunk_exec.prefill_chunk_step(self)
 
     def _finish_prefill(self, rs: RequestState, logits: jax.Array) -> None:
-        """The prompt is fully streamed: join the decode batch."""
-        slot = rs.slot
-        now = time.perf_counter()
-        req = rs.request
-        if rs.replay_tokens is not None:
-            # Recompute resume: the last generated token was never fed back;
-            # it is the next decode input, not a fresh sample.
-            rs.replay_tokens = None
-            self._tokens[slot, 0] = rs.tokens[-1]
-        else:
-            self._key, sub = jax.random.split(self._key)
-            first = int(
-                np.asarray(
-                    self._sample(
-                        logits[:, -1, :],
-                        jnp.full((1,), req.temperature, jnp.float32),
-                        sub,
-                    )
-                )[0]
-            )
-            rs.tokens = [first]
-            rs.prefill_logits = np.asarray(logits[:, -1:, :])
-            rs.t_first_token = now
-            rs.t_tokens.append(now)
-            self._tokens[slot, 0] = first
-        rs.status = RequestStatus.ACTIVE
-        self._temps[slot] = req.temperature
-        self._active_mask[slot] = True
-        self._maybe_finish(rs, now)
+        chunk_exec.finish_prefill(self, rs, logits)
 
-    # -- speculative decoding -------------------------------------------------
+    # -- speculative decoding (executor in serve/spec_exec.py) ---------------
     def _spec_step(self) -> set[int]:
-        """Draft + verify for every eligible ACTIVE slot; returns the slots
-        that emitted tokens here (they sit out this step's decode).
-
-        Eligibility is per request: greedy only (acceptance compares the
-        model's argmax — a sampled token has no "the" correct value), no
-        modality extras (chunk_step is token-only), and at least one token
-        of budget beyond this step's guaranteed emission. A slot whose
-        draft can't get page backing falls back to plain decoding for this
-        step rather than stalling (``spec_fallbacks``)."""
-        handled: set[int] = set()
-        for slot in sorted(self._active):
-            rs = self._active.get(slot)
-            if rs is None or rs.status is not RequestStatus.ACTIVE:
-                continue  # may have been preempted by an earlier verify
-            req = rs.request
-            if req.temperature > 0.0 or req.extras:
-                continue
-            budget = req.max_new_tokens - len(rs.tokens) - 1
-            if budget < 1:
-                continue
-            ctx = np.concatenate(
-                [np.asarray(req.prompt, np.int32),
-                 np.asarray(rs.tokens, np.int32)]
-            )
-            k = min(self.sched.draft_k, budget)
-            draft = np.asarray(
-                self._drafter.propose(ctx, k), np.int32
-            ).reshape(-1)[:k]
-            if draft.size == 0:
-                continue
-            if self._verify_slot(slot, rs, draft):
-                handled.add(slot)
-        return handled
+        return spec_exec.spec_step(self)
 
     def _verify_slot(self, slot: int, rs: RequestState, draft: np.ndarray) -> bool:
-        """Score ``[pending token, draft...]`` in one all-logits chunk call
-        and emit the longest greedy-matching run plus the model's own next
-        token. Returns False (no tokens emitted; slot decodes plainly this
-        step) only when the draft can't get page backing.
+        return spec_exec.verify_slot(self, slot, rs, draft)
 
-        The invariant in and out: the cache holds ``prompt + generated - 1``
-        tokens and ``_tokens[slot]`` is the last generated token, not yet
-        fed. Verify feeds it along with the draft at positions ``start..``;
-        greedy logits at chunk index ``i`` answer "what follows token i",
-        so ``accepted`` counts matching draft positions and index
-        ``accepted`` supplies the bonus/correction token — between 1 and
-        ``k + 1`` tokens per call, token-identical to plain decoding."""
-        k = len(draft)
-        n_real = k + 1
-        # Fixed bucket set: pow2 of the verify length, capped at the
-        # configured maximum — one compile per (k-bucket, page-bucket).
-        bucket = min(_pow2_ceil(n_real), _pow2_ceil(self.sched.draft_k + 1))
-        start = int(self._pos_host[slot])
-        page_ids = None
-        need = 0
-        if self._paged:
-            need = self.pages.pages_for_len(start + n_real)
-            held = len(self.pool.allocated(slot))
-            if need > held:
-                if not self._ensure_pages(slot, need, rid=rs.rid):
-                    self.spec_fallbacks += 1
-                    return False
-                self._pt[slot, held:need] = self.pool.grow_to(slot, need)
-            if self._sharing:
-                # Defensive CoW guard, like the decode step's: the verify
-                # range starts at/after the first generated position, past
-                # any shared prompt page, so this is a steady-state no-op.
-                self._apply_cow(
-                    slot, self.pool.prepare_write(slot, start, start + n_real)
-                )
-            n_lp = min(_pow2_ceil(max(need, 1)), self.pages.max_pages)
-            page_ids = self._put(self._pt[slot, :n_lp])
-
-        # Pre-verify snapshot for rollback-by-replay (recurrent carries,
-        # windowed ring folds). Taken *after* CoW so forked pages are in
-        # it; JAX array immutability makes this a free reference, not a
-        # copy — it only pins memory until the verify result replaces it.
-        snap = self._states["layers"] if self._needs_replay else None
-
-        toks = np.zeros(bucket, np.int32)
-        toks[0] = self._tokens[slot, 0]
-        toks[1:n_real] = draft
-        toks_dev = self._put(toks[None, :])
-        slot_t = jnp.asarray(slot, jnp.int32)
-        start_t = jnp.asarray(start, jnp.int32)
-        args = [
-            self._states["layers"], self._states["pos"], toks_dev,
-            slot_t, start_t, jnp.asarray(n_real, jnp.int32),
-        ]
-        if self._paged:
-            args.append(page_ids)
-        logits, layers, pos = self._verify_jit(*args)
-
-        # Greedy acceptance on host, matching _sample_fn's cast + argmax.
-        lg = np.asarray(logits[0, :n_real, : self.cfg.vocab_size]).astype(np.float32)
-        greedy = lg.argmax(axis=-1).astype(np.int32)
-        accept = 0
-        while accept < k and greedy[accept] == draft[accept]:
-            accept += 1
-        emitted = [int(t) for t in draft[:accept]] + [int(greedy[accept])]
-        n_new = accept + 1  # tokens the cache should have gained
-
-        if accept == k:
-            # Full acceptance: the verify pass already cached exactly the
-            # accepted run and set pos = start + n_real.
-            self._states["layers"] = layers
-            self._states["pos"] = pos
-        else:
-            if self._paged:
-                # Return the pages grown for rejected positions (always
-                # private: sharing only covers the prompt prefix). Under
-                # worst-case reservations the backing stays owed to this
-                # slot; reservation-free, it returns to the pool.
-                keep = self.pages.pages_for_len(start + n_new)
-                removed = self.pool.truncate_to(
-                    slot, keep, keep_reservation=self.sched.preemption == "off"
-                )
-                if removed:
-                    self._pt[slot, keep : keep + len(removed)] = self.pages.trash
-                    n_lp = min(_pow2_ceil(max(keep, 1)), self.pages.max_pages)
-                    page_ids = self._put(self._pt[slot, :n_lp])
-            if self._needs_replay:
-                # State advanced through rejected tokens (recurrence) or
-                # rejected writes folded onto live ring entries: re-run the
-                # accepted run from the snapshot through the chunk program
-                # (same shapes as verify, so no fresh compile per accept
-                # count — chunk_len is a traced scalar).
-                rargs = [
-                    snap, self._states["pos"], toks_dev, slot_t, start_t,
-                    jnp.asarray(n_new, jnp.int32),
-                ]
-                if self._paged:
-                    rargs.append(page_ids)
-                _, rlayers, rpos = self._chunk_jit(*rargs)
-                self._states["layers"] = rlayers
-                self._states["pos"] = rpos
-                self.total_spec_replays += 1
-            else:
-                # Dense/MLA: garbage past the accepted position is inert
-                # under positional masks; only the position needs fixing.
-                self._states["layers"] = layers
-                self._states["pos"] = self._setpos_jit(
-                    pos, slot_t, jnp.asarray(start + n_new, jnp.int32)
-                )
-
-        self._pos_host[slot] = start + n_new
-        rs.spec_steps += 1
-        rs.drafted += k
-        rs.accepted += accept
-        self.total_spec_steps += 1
-        self.drafted_tokens_total += k
-        self.accepted_tokens_total += accept
-        now = time.perf_counter()
-        for tok in emitted:
-            rs.tokens.append(tok)
-            rs.t_tokens.append(now)
-            self._tokens[slot, 0] = tok
-            self._maybe_finish(rs, now)
-            if rs.done:
-                break  # stop token mid-run: drop the rest, as plain decode would
-        return True
-
-    # -- pages: growth, reservation-free accounting, preemption --------------
-    def _apply_cow(self, slot: int, forks: list[tuple[int, int, int]]) -> None:
-        """Materialise ``prepare_write`` forks: re-point the host page-table
-        mirror and copy page contents old -> new in every pool leaf."""
-        if not forks:
-            return
-        for j, _, new in forks:
-            self._pt[slot, j] = new
-        src = jnp.asarray([old for _, old, _ in forks], jnp.int32)
-        dst = jnp.asarray([new for _, _, new in forks], jnp.int32)
-        self._states["layers"] = self._cow_jit(self._states["layers"], src, dst)
+    # -- pages & preemption (executor in serve/preempt.py) -------------------
+    def _apply_cow(self, forks: list[tuple[int, int, int]]) -> None:
+        preempt.apply_cow(self, forks)
 
     def _ensure_pages(self, slot: int, n_total: int, rid: int | None = None) -> bool:
-        """Make ``slot``'s reservation cover ``n_total`` pages. Under
-        worst-case reservations this always holds; reservation-free
-        (preemption on), extend incrementally and reclaim victims' pages
-        until the pool can back it. ``rid`` is the requesting request's id
-        (ordering key for the younger-streamer victim rule)."""
-        if self.sched.preemption == "off":
-            return True  # admission reserved the worst case
-        while not self.pool.extend_to(slot, n_total):
-            if not self._preempt_lru(protect=slot, requester_rid=rid):
-                return False
-        return True
+        return preempt.ensure_pages(self, slot, n_total, rid=rid)
 
     def _grow_pages(self, skip: set[int] = frozenset()) -> None:
-        """Allocate the page backing the position each decoding slot writes
-        this step. Worst-case reservations guarantee this; reservation-free
-        admission may have to preempt first — including the growing slot
-        *itself* when everyone else's pages are pinned (e.g. an *older*
-        PREFILLING streamer holds the pool; only younger streamers are
-        victims): the grower is parked and resumes once pages free up.
-        ``skip`` names slots sitting out this decode (already emitted via
-        speculative verify): they write nothing, so growing for them now
-        would only add pool pressure."""
-        for slot, rs in list(self._active.items()):
-            if rs.status is not RequestStatus.ACTIVE or slot in skip:
-                continue
-            need = self.pages.pages_for_len(int(self._pos_host[slot]) + 1)
-            held = len(self.pool.allocated(slot))
-            if need <= held:
-                continue
-            if not self._ensure_pages(slot, need, rid=rs.rid):
-                if self._can_preempt(rs):
-                    self._preempt_slot(slot)
-                    continue
-                raise RuntimeError(
-                    f"slot {slot}: cannot back page growth to {need} and the "
-                    "request is not preemptable (recompute cannot replay "
-                    "modality extras); use preemption=\"swap\" or a larger "
-                    "pool for such workloads"
-                )
-            self._pt[slot, held:need] = self.pool.grow_to(slot, need)
+        preempt.grow_pages(self, skip=skip)
 
     def _can_preempt(self, rs: RequestState) -> bool:
-        """Swap restores any slot verbatim; recompute replays tokens through
-        chunked streaming, which cannot re-feed modality extras or enc-dec
-        caches — such requests are not recompute victims."""
-        if self.sched.preemption == "swap":
-            return True
-        return self._stream_capable and not rs.request.extras
+        return preempt.can_preempt(self, rs)
 
-    def _preempt_lru(self, protect: int, requester_rid: int | None = None) -> bool:
-        """Reclaim the least-recently-(re)admitted decoding slot's pages.
-
-        ``swap``: snapshot the slot's page contents + per-slot states to
-        host and restore them verbatim on resume. ``recompute``: drop
-        everything and re-stream prompt + generated tokens (teacher-forced)
-        on resume. Either way the resumed request continues greedy
-        token-identically.
-
-        When no ACTIVE victim exists (concurrent streamers contending for
-        pages), a *younger* PREFILLING streamer (rid > requester) is
-        restarted instead — streaming admissions are token-only, so
-        re-streaming from chunk 0 is valid under either policy, and
-        preferring the youngest guarantees the oldest in-flight request
-        always wins the pages it needs: no two-streamer deadlock, no
-        livelock. Returns False when no victim exists."""
-        victims = [
-            rs
-            for s, rs in self._active.items()
-            if rs.status is RequestStatus.ACTIVE and s != protect
-            and self._can_preempt(rs)
-        ]
-        if victims:
-            self._preempt_slot(min(victims, key=lambda r: r.t_admit).slot)
-            return True
-        if requester_rid is None:
-            return False
-        streamers = [
-            rs
-            for s, rs in self._active.items()
-            if rs.status is RequestStatus.PREFILLING and s != protect
-            and rs.rid > requester_rid
-        ]
-        if not streamers:
-            return False
-        self._preempt_slot(max(streamers, key=lambda r: r.rid).slot)
-        return True
+    def _preempt_lru(
+        self, protect: int, requester_rid: int | None = None,
+        shard: int | None = None,
+    ) -> bool:
+        return preempt.preempt_lru(
+            self, protect, requester_rid=requester_rid, shard=shard
+        )
 
     def _preempt_slot(self, slot: int) -> None:
-        rs = self._active[slot]
-        if rs.status is RequestStatus.PREFILLING:
-            # A parked streamer restarts from chunk 0 on resume under either
-            # policy — its source (prompt, or replay_tokens after an earlier
-            # recompute preemption) is token-only by construction, and any
-            # pages it registered in the prefix index survive in the pool's
-            # cached list, so the restart re-adopts instead of recomputing.
-            rs.chunk_pos = 0
-        elif self.sched.preemption == "swap":
-            snap = self._swap_out_jit(
-                self._states["layers"],
-                self._put(self._pt[slot]),
-                jnp.asarray(slot, jnp.int32),
-            )
-            rs.swap = (jax.tree.map(np.asarray, snap), int(self._pos_host[slot]))
-        else:  # recompute
-            rs.replay_tokens = np.concatenate(
-                [np.asarray(rs.request.prompt, np.int32),
-                 np.asarray(rs.tokens[:-1], np.int32)]
-            )
-            rs.chunk_pos = 0
-        rs.status = RequestStatus.PREEMPTED
-        rs.preemptions += 1
-        self.preemptions_total += 1
-        self._active_mask[slot] = False
-        self._tokens[slot, 0] = 0
-        del self._active[slot]
-        heapq.heappush(self._free_slots, slot)
-        self.pool.release(slot)
-        self._pt[slot, :] = self.pages.trash
-        self._pos_host[slot] = 0
-        self._slot_keys.pop(slot, None)
-        self._slot_reg.pop(slot, None)
-        self._slot_worst.pop(slot, None)
-        rs.slot = None
-        self._preempted.append(rs)
+        preempt.preempt_slot(self, slot)
 
-    # -- admission -----------------------------------------------------------
+    # -- admission (executor in serve/admission.py) --------------------------
     def _bucket_len(self, token_len: int) -> int:
-        """Power-of-two padded token count (identity when bucketing is off).
-
-        Dense prompts never exceed ``cache_len`` (asserted at admission),
-        so buckets cap there to keep the padded prompt in one row. Prompts
-        legitimately *past* the cap (windowed / long-context models) stay
-        on uncapped power-of-two buckets: at most log2(longest prompt)
-        distinct shapes, never the raw length (which would compile one
-        prefill program per prompt and defeat the bounded-compile
-        guarantee)."""
-        if not self._bucketed:
-            return token_len
-        b = max(self.sched.min_bucket, 1)
-        while b < token_len:
-            b *= 2
-        cap = self.sched.cache_len - (self.cfg.prefix_len or 0)
-        if token_len > cap:
-            if self.cfg.supports_long_context or self.cfg.window_size:
-                return b
-            raise RuntimeError(
-                f"prompt of {token_len} tokens exceeds the dense prefill cap "
-                f"{cap} (cache_len {self.sched.cache_len}); admission "
-                "validation should have rejected this request"
-            )
-        return min(b, cap)
+        """Power-of-two padded token count (plan layer; identity when
+        bucketing is off)."""
+        return self._plan(
+            planlib.bucket_len, token_len,
+            bucketed=self._bucketed, min_bucket=self.sched.min_bucket,
+            cache_len=self.sched.cache_len, prefix_len=self.cfg.prefix_len or 0,
+            long_ok=bool(self.cfg.supports_long_context or self.cfg.window_size),
+        )
 
     def _worst_pages(self, rs: RequestState) -> int:
         """Worst-case page footprint of a request (0 when not paged)."""
@@ -1220,312 +476,52 @@ class Scheduler:
             return 0
         req = rs.request
         prompt_len = req.prompt.shape[0] + (self.cfg.prefix_len or 0)
-        return self.pages.pages_for_len(prompt_len + req.max_new_tokens)
+        return self.mem.pages_for_len(prompt_len + req.max_new_tokens)
 
     def _tenant_pages(self, tenant: str) -> int:
         """Worst-case pages currently charged to ``tenant``'s slots."""
         return sum(w for t, w in self._slot_worst.values() if t == tenant)
 
     def _pick_next(self, blocked: set[str]) -> RequestState | None:
-        """Weighted-fair pick: among each unblocked tenant's head-of-line
-        request, take the one whose tenant has the lowest stride pass
-        (ties by rid). Tenants first seen mid-flight join at the current
-        minimum pass, so a newcomer is served promptly but cannot burn
-        accumulated credit."""
-        heads: dict[str, RequestState] = {}
-        for rs in self._queue:
-            t = rs.request.tenant
-            if t in blocked or t in heads:
-                continue
-            heads[t] = rs
-        if not heads:
+        """Weighted-fair pick (plan-layer stride scheduling)."""
+        rid = self._plan(
+            planlib.pick_next,
+            [planlib.QueueView(rs.rid, rs.request.tenant) for rs in self._queue],
+            blocked, self._tenant_pass,
+        )
+        if rid is None:
             return None
-        floor = min(self._tenant_pass.values(), default=0.0)
-
-        def pass_of(t: str) -> float:
-            return self._tenant_pass.get(t, floor)
-
-        return min(heads.values(), key=lambda r: (pass_of(r.request.tenant), r.rid))
+        for rs in self._queue:
+            if rs.rid == rid:
+                return rs
+        return None  # pragma: no cover - rid came from the queue
 
     def _charge_tenant(self, rs: RequestState) -> None:
         req = rs.request
         weights = self.sched.tenant_weights or {}
-        w = weights.get(req.tenant, 1.0)
-        floor = min(self._tenant_pass.values(), default=0.0)
-        cost = (req.prompt.shape[0] + req.max_new_tokens) / w
-        self._tenant_pass[req.tenant] = (
-            self._tenant_pass.get(req.tenant, floor) + cost
+        self._tenant_pass = self._plan(
+            planlib.charge_tenant, self._tenant_pass, req.tenant,
+            req.prompt.shape[0] + req.max_new_tokens,
+            weights.get(req.tenant, 1.0),
         )
 
     def _admit_pending(self) -> None:
-        # Preempted requests resume first: they hold generated progress and
-        # FIFO-resuming them bounds preemption churn. A *deferred* resume
-        # (not enough free pages yet) blocks fresh admissions too —
-        # otherwise younger requests would keep taking the pages the
-        # swapped-out request is waiting for and starve it indefinitely.
-        while self._free_slots and self._preempted:
-            if not self._try_resume(self._preempted[0]):
-                return
-            self._preempted.popleft()
-        sc = self.sched
-        if sc.tenant_quota is None and not sc.tenant_weights:
-            # Single-tenant: exact FIFO (the historical admission order).
-            while self._free_slots and self._queue:
-                rs = self._queue[0]
-                if not self._admit(rs):
-                    break
-                self._queue.popleft()
-            return
-        # Multi-tenant: weighted-fair ordering with per-tenant page quotas.
-        # A quota-blocked tenant is skipped (its requests keep FIFO order
-        # within the tenant) while other tenants continue to admit; pool
-        # backpressure blocks everyone (FIFO fairness of the pool itself).
-        blocked: set[str] = set()
-        while self._free_slots and self._queue:
-            rs = self._pick_next(blocked)
-            if rs is None:
-                break
-            tenant = rs.request.tenant
-            if self._paged and sc.tenant_quota is not None:
-                n_worst = self._worst_pages(rs)
-                if n_worst > sc.tenant_quota:
-                    raise RuntimeError(
-                        f"request {rs.rid} needs {n_worst} pages worst-case, "
-                        f"more than tenant {tenant!r}'s whole quota "
-                        f"({sc.tenant_quota}); raise tenant_quota or lower "
-                        "max_new_tokens"
-                    )
-                if self._tenant_pages(tenant) + n_worst > sc.tenant_quota:
-                    blocked.add(tenant)
-                    self.quota_deferrals += 1
-                    continue
-            if not self._admit(rs):
-                break
-            # identity, not ==: Request's dataclass __eq__ compares prompt
-            # arrays elementwise
-            for i, q in enumerate(self._queue):
-                if q is rs:
-                    del self._queue[i]
-                    break
-            self._charge_tenant(rs)
+        admission.admit_pending(self)
 
     def _admit(self, rs: RequestState) -> bool:
-        if self._stream_capable and not rs.request.extras:
-            return self._admit_streaming(rs)
-        return self._admit_prefill(rs)
+        return admission.admit(self, rs)
 
     def _check_fits(self, rs: RequestState, prompt_len: int) -> int:
-        """Shared admission validation; returns the worst-case page count."""
-        req = rs.request
-        assert (
-            prompt_len + req.max_new_tokens <= self.sched.cache_len
-            or self.cfg.supports_long_context
-            or self.cfg.window_size
-        ), (
-            f"cache_len {self.sched.cache_len} too small for "
-            f"{prompt_len}+{req.max_new_tokens}"
-        )
-        if not self._paged:
-            return 0
-        n_worst = self.pages.pages_for_len(prompt_len + req.max_new_tokens)
-        if n_worst > self.pages.n_pages:
-            # Never admissible even into an empty pool: fail fast instead
-            # of deferring forever (run() would spin).
-            raise RuntimeError(
-                f"request {rs.rid} needs {n_worst} pages worst-case "
-                f"({prompt_len}+{req.max_new_tokens} tokens @ "
-                f"{self.pages.page_size}/page) but the pool has only "
-                f"{self.pages.n_pages}; raise n_pages or lower "
-                "max_new_tokens"
-            )
-        return n_worst
+        return admission.check_fits(self, rs, prompt_len)
 
     def _admit_streaming(self, rs: RequestState) -> bool:
-        """Assign a slot and start streaming the prompt in chunks, adopting
-        any indexed prefix pages first (their tokens are skipped, not
-        recomputed). Under worst-case reservations this is where OOM
-        backpressure defers; reservation-free admission always proceeds
-        (chunks reserve as they stream, preempting younger streamers or
-        LRU decoders if needed — no single-streamer gate)."""
-        req = rs.request
-        prompt_len = req.prompt.shape[0]
-        n_worst = self._check_fits(rs, prompt_len)
-        if self._paged and self.sched.preemption == "off":
-            if not self.pool.can_reserve(n_worst):
-                self.deferred_admissions += 1
-                return False
-        slot = heapq.heappop(self._free_slots)
-        start = 0
-        if self._paged:
-            self.pool.reserve(slot, 0)
-            self._pt[slot, :] = self.pages.trash
-            if self._sharing:
-                P = self.pages.page_size
-                keys = prefix_page_keys(req.prompt, P)
-                src_len = (
-                    len(rs.replay_tokens)
-                    if rs.replay_tokens is not None
-                    else prompt_len
-                )
-                # Cap adoption below the streamed source so at least one
-                # token still streams: the final chunk's logits seed the
-                # first sampled token.
-                adopted = self.pool.adopt_prefix(slot, keys[: (src_len - 1) // P])
-                if adopted:
-                    self._pt[slot, :adopted] = self.pool.allocated(slot)
-                    self.prefix_hits += 1
-                    self.prefix_hit_tokens += adopted * P
-                    start = adopted * P
-                self._slot_keys[slot] = keys
-                self._slot_reg[slot] = adopted
-            if self.sched.preemption == "off" and not self.pool.extend_to(
-                slot, n_worst
-            ):
-                # Adoption revives cached pages (no longer evictable), but
-                # it adopts at least as many pages as it revives, so the
-                # pre-checked headroom still covers the remainder; this
-                # rollback is defensive.
-                self.pool.release(slot)
-                self._pt[slot, :] = self.pages.trash
-                self._slot_keys.pop(slot, None)
-                self._slot_reg.pop(slot, None)
-                heapq.heappush(self._free_slots, slot)
-                self.deferred_admissions += 1
-                return False
-            self._slot_worst[slot] = (req.tenant, n_worst)
-        layers, pos = self._reset_jit(
-            self._states["layers"], self._states["pos"], jnp.asarray(slot, jnp.int32),
-            jnp.asarray(start, jnp.int32),
-        )
-        self._states["layers"] = layers
-        self._states["pos"] = pos
-        self._pos_host[slot] = start
-        rs.slot = slot
-        rs.prompt_len = prompt_len
-        rs.chunk_pos = start
-        rs.adopted_tokens = start
-        rs.status = RequestStatus.PREFILLING
-        rs.t_admit = time.perf_counter()
-        self._active[slot] = rs
-        return True
+        return admission.admit_streaming(self, rs)
 
     def _try_resume(self, rs: RequestState) -> bool:
-        """Re-admit a preempted request: swap its snapshot back in, or
-        restart streaming (recompute). False defers (not enough pages)."""
-        if rs.swap is not None:
-            snap, pos_v = rs.swap
-            need = self.pages.pages_for_len(pos_v)
-            if need > self.pool.available():
-                self.deferred_admissions += 1
-                return False
-            slot = heapq.heappop(self._free_slots)
-            self.pool.reserve(slot, 0)
-            if not self.pool.extend_to(slot, need):  # pragma: no cover - race-free
-                raise RuntimeError("pool accounting violated availability check")
-            self._pt[slot, :] = self.pages.trash
-            if need:
-                self._pt[slot, :need] = self.pool.grow_to(slot, need)
-            layers, pos = self._swap_in_jit(
-                self._states["layers"], self._states["pos"],
-                jax.tree.map(self._put, snap),
-                self._put(self._pt[slot]), jnp.asarray(slot, jnp.int32),
-                jnp.asarray(pos_v, jnp.int32),
-            )
-            self._states["layers"] = layers
-            self._states["pos"] = pos
-            self._pos_host[slot] = pos_v
-            rs.swap = None
-            rs.slot = slot
-            self._slot_worst[slot] = (rs.request.tenant, self._worst_pages(rs))
-            rs.status = RequestStatus.ACTIVE
-            rs.t_admit = time.perf_counter()
-            self._tokens[slot, 0] = rs.tokens[-1]
-            self._temps[slot] = rs.request.temperature
-            self._active_mask[slot] = True
-            self._active[slot] = rs
-            return True
-        # recompute: restart chunk streaming over prompt + generated tokens
-        return self._admit_streaming(rs)
+        return admission.try_resume(self, rs)
 
     def _admit_prefill(self, rs: RequestState) -> bool:
-        """Whole-prompt prefill + graft at admission (the PR-1/2 path; also
-        the fallback for modality-prefix / enc-dec requests when chunked
-        streaming is on). Returns False to defer on pool backpressure."""
-        req = rs.request
-        prompt_len = req.prompt.shape[0] + (self.cfg.prefix_len or 0)
-        n_reserve = self._check_fits(rs, prompt_len)
-        page_ids_arr = None
-        if self._paged:
-            if not self.pool.can_reserve(n_reserve):
-                # OOM backpressure: not enough pool headroom for this
-                # request's worst case — defer admission (FIFO order is
-                # preserved; live pages are never reclaimed or aliased).
-                self.deferred_admissions += 1
-                return False
-        slot = heapq.heappop(self._free_slots)
-        if self._paged:
-            self.pool.reserve(slot, n_reserve)
-            self._slot_worst[slot] = (req.tenant, n_reserve)
-            n_admit = self.pages.pages_for_len(prompt_len)
-            self._pt[slot, :] = self.pages.trash
-            self._pt[slot, :n_admit] = self.pool.grow_to(slot, n_admit)
-            page_ids_arr = self._put(self._pt[slot])
-
-        tok_len = req.prompt.shape[0]
-        pad_to = self._bucket_len(tok_len)
-        toks = np.asarray(req.prompt)
-        if pad_to != tok_len:
-            toks = np.concatenate([toks, np.zeros(pad_to - tok_len, np.int32)])
-        batch = {"tokens": self._put(toks[None, :])}
-        for k, v in req.extras.items():
-            batch[k] = jnp.asarray(v)
-        if self._bucketed:
-            batch["logit_pos"] = jnp.asarray(prompt_len - 1, jnp.int32)
-        logits, pstates = self._prefill(self.params, batch)
-
-        plen_t = jnp.asarray(prompt_len, jnp.int32)
-        slot_t = jnp.asarray(slot, jnp.int32)
-        if self._paged:
-            layers, pos = self._admit_jit(
-                self._states["layers"], self._states["pos"], pstates["layers"],
-                slot_t, page_ids_arr, plen_t,
-            )
-        else:
-            layers, pos = self._admit_jit(
-                self._states["layers"], self._states["pos"], pstates["layers"],
-                slot_t, plen_t,
-            )
-        self._states["layers"] = layers
-        self._states["pos"] = pos
-        self._pos_host[slot] = prompt_len
-
-        now = time.perf_counter()
-        self._key, sub = jax.random.split(self._key)
-        first = int(
-            np.asarray(
-                self._sample(
-                    logits[:, -1, :],
-                    jnp.full((1,), req.temperature, jnp.float32),
-                    sub,
-                )
-            )[0]
-        )
-        rs.slot = slot
-        rs.prompt_len = prompt_len
-        rs.status = RequestStatus.ACTIVE
-        rs.tokens = [first]
-        rs.prefill_logits = np.asarray(logits[:, -1:, :])
-        rs.t_admit = now
-        rs.t_first_token = now
-        rs.t_tokens.append(now)
-        self._tokens[slot, 0] = first
-        self._temps[slot] = req.temperature
-        self._active_mask[slot] = True
-        self._active[slot] = rs
-        # A 1-token request (or an immediate stop) retires before ever
-        # riding the decode step, freeing the slot for this admission loop.
-        self._maybe_finish(rs, now)
-        return True
+        return admission.admit_prefill(self, rs)
 
     def _maybe_finish(self, rs: RequestState, now: float) -> None:
         req = rs.request
@@ -1543,25 +539,20 @@ class Scheduler:
         del self._active[slot]
         heapq.heappush(self._free_slots, slot)
         self._pos_host[slot] = 0
-        self._slot_keys.pop(slot, None)
-        self._slot_reg.pop(slot, None)
         self._slot_worst.pop(slot, None)
         if self._paged:
-            # Free pages and point the table row at the trash page so the
-            # retired slot's frozen-position garbage writes can never touch
-            # a future tenant of these pages. Pages this slot registered in
-            # the prefix index park in the pool's cached list at refcount
-            # zero — the next same-prefix admission revives them for free.
-            self.pool.release(slot)
-            self._pt[slot, :] = self.pages.trash
+            # Free pages and trash-point the table row so the retired slot's
+            # frozen-position garbage writes can never touch a future tenant
+            # of these pages; indexed pages park in the pool's cached list
+            # for the next same-prefix admission.
+            self.mem.release(slot)
         rs.status = RequestStatus.FINISHED
         rs.finish_reason = reason
         rs.t_finish = now
         self._finished[rs.rid] = rs
         self.finished_total += 1
         self.generated_tokens_total += len(rs.tokens)
-        # Bound retention for long-running serving: evict the oldest finished
-        # states (dict preserves insertion order) beyond keep_finished.
+        # Bound retention for long-running serving.
         while len(self._finished) > self.sched.keep_finished:
             self._finished.pop(next(iter(self._finished)))
 
@@ -1592,62 +583,49 @@ class Scheduler:
             "preemptions": self.preemptions_total,
             "prefix_hits": self.prefix_hits,
             "prefix_hit_tokens": self.prefix_hit_tokens,
+            "plan_time_s": self.plan_time_s,
         }
         out["mesh"] = (
             None if self.sctx.mesh is None else dict(self.sctx.mesh.shape)
         )
         out["mesh_devices"] = self.sctx.device_count()
         if self._paged:
-            out["pages"] = self.pool.stats()
+            out["pages"] = self.mem.stats()
         return out
 
-    # -- capacity accounting -------------------------------------------------
     def paged_cache_bytes(self) -> dict[str, int]:
-        """Actual (peak pages in use) vs contiguous-equivalent cache bytes
-        for the paged KV leaves. Zeros when the model has no paged layer."""
-        if not self._paged:
-            return {
-                "bytes_per_page": 0,
-                "peak_bytes": 0,
-                "contiguous_bytes": 0,
-                "bytes_per_page_per_device": 0,
-            }
-        # Bytes of one page summed across every paged leaf (a physical page
-        # id addresses page-sized storage in every paged layer at once).
-        # Sharded, each leaf's per-device share divides by the product of
-        # mesh axes its resolved PartitionSpec actually uses (replicated
-        # leaves divide by 1) — the number the device-local pool holds.
-        per_page = 0
-        per_page_dev = 0
-        caps = blk.stack_paged_caps(self.cfg, self.sched.cache_len)
-        cap_leaves = jax.tree.leaves(caps)
-        arr_leaves = jax.tree.leaves(self._states["layers"])
-        sh_leaves = (
-            jax.tree.leaves(self._layer_shardings, is_leaf=lambda x: x is None)
-            if self._layer_shardings is not None
-            else [None] * len(arr_leaves)
+        """Actual vs contiguous-equivalent cache bytes (see programs.py)."""
+        return paged_cache_bytes(
+            self.cfg, self.sched.cache_len, self.sched.n_slots, self._states,
+            self._layer_shardings, self.sctx, self.mem,
         )
-        mesh_axes = dict(self.sctx.mesh.shape) if self.sctx.mesh else {}
-        for cap, leafarr, sh in zip(cap_leaves, arr_leaves, sh_leaves):
-            if not cap:
-                continue
-            shape = leafarr.shape
-            lead = len(shape) - 4  # stacked layer axis
-            n_layers = shape[0] if lead else 1
-            page_elems = int(np.prod(shape[lead + 1:]))  # page * kv * hd
-            leaf_bytes = n_layers * page_elems * jnp.dtype(leafarr.dtype).itemsize
-            per_page += leaf_bytes
-            div = 1
-            if sh is not None:
-                for ax in sh.spec:
-                    for a in ax if isinstance(ax, tuple) else ((ax,) if ax else ()):
-                        div *= mesh_axes.get(a, 1)
-            per_page_dev += leaf_bytes // div
-        peak = self.pool.peak_in_use * per_page
-        contiguous = self.sched.n_slots * self.pages.max_pages * per_page
-        return {
-            "bytes_per_page": int(per_page),
-            "peak_bytes": int(peak),
-            "contiguous_bytes": int(contiguous),
-            "bytes_per_page_per_device": int(per_page_dev),
-        }
+
+
+def _delegate_trace(name: str):
+    return property(
+        lambda self: getattr(self.programs, name),
+        lambda self, v: setattr(self.programs, name, v),
+    )
+
+
+def _delegate_prog(name: str):
+    return property(lambda self: getattr(self.programs, name))
+
+
+# Trace counters live on the program registry (incremented inside jit
+# trace bodies); the historical Scheduler attributes stay as delegates,
+# as do the historical names of the jitted callables.
+for _n in (
+    "decode_traces", "prefill_traces", "admit_traces", "chunk_traces",
+    "swap_traces", "cow_traces", "verify_traces",
+):
+    setattr(Scheduler, _n, _delegate_trace(_n))
+for _old, _new in (
+    ("_decode", "decode"), ("_prefill", "prefill"), ("_admit_jit", "admit"),
+    ("_chunk_jit", "chunk"), ("_verify_jit", "verify"),
+    ("_setpos_jit", "setpos"), ("_reset_jit", "reset"), ("_cow_jit", "cow"),
+    ("_swap_out_jit", "swap_out"), ("_swap_in_jit", "swap_in"),
+    ("_sample", "sample"),
+):
+    setattr(Scheduler, _old, _delegate_prog(_new))
+del _n, _old, _new

@@ -89,6 +89,7 @@ register_profile(
             "window": (),
             "layer": (),
             "frames": (),
+            "pages": (),  # paged-KV pool page axis (training: replicated)
         },
         zero1=True,
     )
@@ -220,6 +221,10 @@ register_profile(
             "kv_seq": _MODEL,
             "state_col": _MODEL,
             "window": (),
+            # Paged-KV pool pages partition over data when divisible
+            # (PageLayout sizes one trash page per shard); pspec_for's
+            # divisibility fallback replicates otherwise.
+            "pages": ("data",),
         },
         zero1=False,
     )
@@ -240,6 +245,7 @@ register_profile(
             "kv_lora": ("data",),
             "kv_seq": _MODEL,
             "state_col": _MODEL,
+            "pages": ("data",),
         },
         zero1=False,
         fsdp_params=True,
@@ -330,10 +336,20 @@ def constrain(x: jax.Array, logical_axes: Sequence[str | None], ctx: "ShardingCt
 
 @dataclass
 class ShardingCtx:
-    """Everything the model code needs to place tensors: mesh + profile."""
+    """Everything the model code needs to place tensors: mesh + profile.
+
+    ``pool_data_shards`` is serving-only metadata: the number of data
+    shards the paged-KV pool is *actually* partitioned into (set by the
+    scheduler when the data axis divides both n_slots and n_pages, 1
+    otherwise). Divisibility of the pool leaf alone cannot distinguish a
+    truly partitioned pool (per-shard sub-pools with shard-local page
+    ids) from a replicated one that happens to divide, and shard_map'd
+    kernels must localize page ids only in the former case.
+    """
 
     mesh: Mesh | None
     profile: ShardingProfile
+    pool_data_shards: int = 1
 
     @classmethod
     def null(cls) -> "ShardingCtx":

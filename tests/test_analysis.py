@@ -20,6 +20,7 @@ from repro.analysis import (
     RegressionPolicy,
     Trajectory,
     compare,
+    compare_frames,
     detect_regressions,
 )
 from repro.analysis.trajectory import find_baseline
@@ -197,6 +198,58 @@ class TestTables:
         t.baseline = 99
         with pytest.raises(ValueError, match="not a column"):
             t.to_markdown()
+
+    def _two_runs(self):
+        old = MetricFrame([
+            MetricRecord("tok_s", 100.0, params={"benchmark": "B9"}),
+            MetricRecord("tok_s", 8.0, params={"benchmark": "B10"}),
+        ])
+        new = MetricFrame([
+            MetricRecord("tok_s", 50.0, params={"benchmark": "B9"}),
+        ])
+        return old, new
+
+    def test_compare_frames_cross_run_diff(self):
+        old, new = self._two_runs()
+        t = compare_frames([("base", old), ("cand", new)], rows="benchmark")
+        assert t.col_labels == ["base", "cand"]
+        assert t.baseline == "base"
+        assert t.cells == [[100.0, 50.0], [8.0, None]]
+        md = t.to_markdown()
+        assert "cand (vs base)" in md
+        assert "(0.50x, -50.0%)" in md  # B9 halved
+        # B10 is missing from the candidate run: renders as "-", not dropped
+        assert "| B10 | 8 | - |" in md
+
+    def test_compare_frames_empty_run_keeps_column(self):
+        old, _ = self._two_runs()
+        t = compare_frames([("base", old), ("cand", MetricFrame())],
+                           rows="benchmark", metric="tok_s")
+        assert t.col_labels == ["base", "cand"]
+        assert all(row[1] is None for row in t.cells)
+
+    def test_compare_frames_baseline_override_and_agg(self):
+        old, new = self._two_runs()
+        t = compare_frames({"base": old, "cand": new}, rows="benchmark",
+                           baseline="cand", agg="max")
+        assert "base (vs cand)" in t.to_markdown()
+        assert "(2.00x, +100.0%)" in t.to_markdown()
+
+    def test_compare_frames_validates_inputs(self):
+        old, new = self._two_runs()
+        with pytest.raises(ValueError, match="at least two"):
+            compare_frames([("only", old)], rows="benchmark")
+        with pytest.raises(ValueError, match="distinct"):
+            compare_frames([("a", old), ("a", new)], rows="benchmark")
+
+    def test_compare_frames_multiple_metrics_requires_pick(self):
+        a = MetricFrame([MetricRecord("m1", 1.0, params={"b": 1}),
+                         MetricRecord("m2", 2.0, params={"b": 1})])
+        b = MetricFrame([MetricRecord("m1", 3.0, params={"b": 1})])
+        with pytest.raises(ValueError, match="pass metric="):
+            compare_frames([("a", a), ("b", b)], rows="b")
+        t = compare_frames([("a", a), ("b", b)], rows="b", metric="m1")
+        assert t.cells == [[1.0, 3.0]]
 
 
 def _write_record(d: Path, n: int, mode: str, commit: str, rows):
@@ -404,6 +457,50 @@ class TestDashboardProvider:
         assert len(results) == 3
         assert prov.state()["done"] == 3  # not 6
 
+    def test_trajectory_payload(self, tmp_path):
+        from repro.analysis.dash import trajectory_payload
+
+        _write_record(tmp_path, 1, "smoke", "c1",
+                      [{"name": "B9", "tok_s": 10.0, "wall_s": 2.0},
+                       {"name": "B10", "tok_s": 5.0}])
+        _write_record(tmp_path, 2, "smoke", "c2",
+                      [{"name": "B9", "tok_s": 12.0, "wall_s": 1.5}])
+        t = trajectory_payload(tmp_path)
+        assert t["metric"] == "tok_s" and t["records"] == [1, 2]
+        assert t["series"]["B9"] == [{"record": 1, "value": 10.0},
+                                     {"record": 2, "value": 12.0}]
+        assert t["series"]["B10"] == [{"record": 1, "value": 5.0}]
+        # metric/benchmark filters
+        t = trajectory_payload(tmp_path, metric="wall_s", benchmark="B9")
+        assert list(t["series"]) == ["B9"]
+        assert [p["value"] for p in t["series"]["B9"]] == [2.0, 1.5]
+        # empty dir: valid empty payload, not an error
+        assert trajectory_payload(tmp_path / "none")["series"] == {}
+
+    def test_http_trajectory_endpoint(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "c1",
+                      [{"name": "B9", "tok_s": 10.0}])
+        _write_record(tmp_path, 2, "smoke", "c2",
+                      [{"name": "B9", "tok_s": 12.0}])
+        dash = Dashboard(AnalysisNotificationProvider(),
+                         records_dir=tmp_path)
+        url = dash.start()
+        try:
+            with urllib.request.urlopen(f"{url}/api/trajectory",
+                                        timeout=5) as r:
+                t = json.loads(r.read())
+            assert t["series"]["B9"] == [{"record": 1, "value": 10.0},
+                                         {"record": 2, "value": 12.0}]
+            with urllib.request.urlopen(
+                f"{url}/api/trajectory?benchmark=B99", timeout=5
+            ) as r:
+                assert json.loads(r.read())["series"] == {}
+            with urllib.request.urlopen(url, timeout=5) as r:
+                page = r.read().decode()
+            assert "/api/trajectory" in page and "spark" in page
+        finally:
+            dash.stop()
+
     def test_http_endpoints(self):
         prov = AnalysisNotificationProvider()
         self._feed(prov)
@@ -447,6 +544,58 @@ class TestCLI:
         assert out.returncode == 0, out.stderr
         assert "| B9 | 10 |" in out.stdout
         assert "Benchmark record 1" in out.stdout
+
+    def test_table_cli_diff_records(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "c1",
+                      [{"name": "B9", "tok_s": 100.0},
+                       {"name": "B10", "tok_s": 8.0}])
+        _write_record(tmp_path, 2, "smoke", "c2",
+                      [{"name": "B9", "tok_s": 50.0}])
+        out = _cli("table", "--diff", "1", "2",
+                   "--records-dir", str(tmp_path))
+        assert out.returncode == 0, out.stderr
+        assert "record 2 (vs record 1)" in out.stdout
+        assert "(0.50x, -50.0%)" in out.stdout
+        assert "| B10 | 8 | - |" in out.stdout
+        # identical to the API, token for token
+        traj = Trajectory.load(tmp_path)
+        api = compare_frames(
+            [(f"record {n}", Trajectory([traj.get(n)]).to_frame())
+             for n in (1, 2)],
+            rows="benchmark", metric="tok_s",
+            title="tok_s: record 1 vs record 2",
+        ).to_markdown()
+        assert out.stdout.strip() == api
+
+    def test_table_cli_diff_errors(self, tmp_path):
+        _write_record(tmp_path, 1, "smoke", "c1",
+                      [{"name": "B9", "tok_s": 1.0}])
+        out = _cli("table", "--diff", "1", "7",
+                   "--records-dir", str(tmp_path))
+        assert out.returncode != 0
+        assert "no record 7" in out.stderr
+        out = _cli("table", "--diff", "1", "--records-dir", str(tmp_path))
+        assert out.returncode != 0
+        assert "at least two" in out.stderr
+        out = _cli("table", "--diff", "1", "1", "--latest",
+                   "--records-dir", str(tmp_path))
+        assert out.returncode != 0
+        assert "exclusive" in out.stderr
+
+    def test_table_cli_diff_csv_runs(self, tmp_path):
+        res = _run_sweep()
+        a, b = tmp_path / "a.csv", tmp_path / "b.csv"
+        res.to_csv(a)
+        res.to_csv(b)
+        # CSV runs need --rows (no benchmark param to default to)
+        out = _cli("table", "--diff", str(a), str(b))
+        assert out.returncode != 0 and "--rows" in out.stderr
+        out = _cli("table", "--diff", str(a), str(b), "--rows", "n",
+                   "--metric", "tokens_per_s")
+        assert out.returncode == 0, out.stderr
+        # identical inputs: every diff column is exactly 1.00x
+        assert "(1.00x, +0.0%)" in out.stdout
+        assert "(vs " in out.stdout
 
     def test_trajectory_cli_json(self, tmp_path):
         _write_record(tmp_path, 1, "smoke", "c1",

@@ -218,6 +218,127 @@ class TestShardedHotPaths:
 
 
 # ==========================================================================
+# Data-axis partitioning: slots and pool slices split across `data`
+# ==========================================================================
+class TestDataAxisPartitioning:
+    @needs_2dev
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_data_axis_greedy_identity(self, arch):
+        """mesh (2, 1): the slot batch and (for paged archs) the page pool
+        partition across the data axis; greedy tokens and compile cadence
+        stay identical to the single-device run."""
+        cfg, params = _params_for(arch)
+        prompts = _prompts(cfg, (8, 21, 13, 9))
+        kw = dict(n_slots=4, cache_len=64, chunk_budget=16, page_size=8)
+        base, s0 = _run(cfg, params, prompts, **kw)
+        shd, s1 = _run(cfg, params, prompts, mesh_shape=(2, 1), **kw)
+        assert base == shd
+        assert s1.stats()["mesh"] == {"data": 2, "model": 1}
+        assert (s0.decode_traces, s0.chunk_traces, s0.admit_traces) == (
+            s1.decode_traces, s1.chunk_traces, s1.admit_traces,
+        )
+
+    @needs_2dev
+    def test_data_axis_partitions_pool_and_slots(self):
+        """With data=2 dividing n_slots and n_pages, the MemoryManager runs
+        two per-shard sub-pools (each with its own trash row) and the live
+        pool leaves are page-axis sharded over data — not replicated."""
+        cfg, params = _params_for("llama3.2-3b")
+        sched = Scheduler(
+            cfg, params, ShardingCtx.null(),
+            SchedulerConfig(
+                n_slots=4, cache_len=64, chunk_budget=16, page_size=8,
+                mesh_shape=(2, 1),
+            ),
+        )
+        mem = sched.mem
+        assert mem.data_shards == 2
+        assert len(mem.pools) == 2
+        assert all(p.layout.n_pages == mem.n_pages // 2 for p in mem.pools)
+        # Slot -> shard follows the contiguous batch blocks; each shard's
+        # trash row is the last row of its GSPMD block.
+        assert [mem.shard_of(s) for s in range(4)] == [0, 0, 1, 1]
+        per, stride = mem.n_pages // 2, mem.n_pages // 2 + 1
+        assert mem.trash_of(0) == per
+        assert mem.trash_of(3) == stride + per
+        with pytest.raises(AttributeError):
+            mem.pool  # single-pool view is unavailable when partitioned
+        # The live device pool leaves carry a data-sharded page axis.
+        total = sched.pages.total_pages
+        page_leaves = [
+            (arr.ndim, arr.sharding.spec)
+            for arr in jax.tree.leaves(sched._states["layers"])
+            if arr.ndim >= 4 and arr.shape[arr.ndim - 4] == total
+        ]
+        assert page_leaves, "no pool-shaped leaves found"
+        for ndim, spec in page_leaves:
+            # The page axis (4th from the end) carries the data axis.
+            padded = tuple(spec) + (None,) * ndim
+            assert padded[ndim - 4] in ("data", ("data",)), spec
+        # Accounting reflects the partition.
+        st = sched.stats()["pages"]
+        assert st["data_shards"] == 2
+
+    @needs_2dev
+    def test_data_axis_falls_back_when_indivisible(self):
+        """n_pages not divisible by data: the pool stays single-shard
+        (replicated leaves, the pre-partitioning layout) and serving still
+        produces identical tokens."""
+        cfg, params = _params_for("llama3.2-3b")
+        prompts = _prompts(cfg, (8, 13))
+        kw = dict(
+            n_slots=2, cache_len=64, chunk_budget=16, page_size=8, n_pages=15,
+        )
+        base, _ = _run(cfg, params, prompts, **kw)
+        shd, s1 = _run(cfg, params, prompts, mesh_shape=(2, 1), **kw)
+        assert base == shd
+        assert s1.mem.data_shards == 1
+        assert s1.pool is not None  # single-pool view still available
+
+    @needs_2dev
+    @pytest.mark.parametrize("policy", ["swap", "recompute"])
+    def test_data_axis_preemption_is_shard_local(self, policy):
+        """Preemption under a partitioned pool picks victims within the
+        requester's shard; round-trips stay token-identical and every page
+        returns to its shard's sub-pool on drain."""
+        cfg, params = _params_for("llama3.2-3b")
+        prompts = _prompts(cfg, (16, 18, 17, 20, 15, 19))
+        kw = dict(
+            max_new=10, n_slots=4, cache_len=64, chunk_budget=16,
+            page_size=4, n_pages=20, preemption=policy,
+        )
+        base, _ = _run(cfg, params, prompts, **kw)
+        shd, sched = _run(cfg, params, prompts, mesh_shape=(2, 1), **kw)
+        assert base == shd
+        assert sched.preemptions_total > 0, "pool never ran dry; tighten it"
+        assert sched.mem.in_use == 0
+        assert sched.mem.available_total() == sched.pages.n_pages
+
+    @needs_2dev
+    def test_data_axis_prefix_sharing_is_shard_local(self):
+        """Prefix adoption under a partitioned pool: the index lives per
+        sub-pool, so sharing works within a shard and never aliases pages
+        across shards; greedy identity holds throughout."""
+        cfg, params = _params_for("llama3.2-3b")
+        rng = np.random.default_rng(7)
+        shared = rng.integers(0, cfg.vocab_size, size=17).astype(np.int32)
+        prompts = [
+            np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, size=t).astype(np.int32)]
+            )
+            for t in (5, 9, 6, 11)
+        ]
+        kw = dict(
+            n_slots=4, cache_len=64, chunk_budget=16, page_size=8,
+            prefix_sharing=True,
+        )
+        base, _ = _run(cfg, params, prompts, **kw)
+        shd, s1 = _run(cfg, params, prompts, mesh_shape=(2, 1), **kw)
+        assert base == shd
+        assert s1.mem.in_use == 0
+
+
+# ==========================================================================
 # Mesh plumbing and failure modes (run everywhere)
 # ==========================================================================
 class TestMeshPlumbing:
